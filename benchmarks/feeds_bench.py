@@ -1,0 +1,87 @@
+"""Feed ingestion throughput + joint fan-out + fuzzy-join dedup benches
+(paper §2.4/§4.5 + Q13)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.tinysocial import build_dataverse, gen_messages
+from repro.data.dedup import FuzzyJoin
+from repro.data.feeds import BatchAssembler, Feed, SyntheticTokenAdaptor
+
+
+def run() -> list:
+    rows = []
+
+    # -- feed -> dataset ingestion pipeline ----------------------------------
+    _, ds = build_dataverse(50, 0, num_partitions=4, flush_threshold=512)
+    msgs_ds = ds["MugshotMessages"]
+    recs = gen_messages(3000, 50, seed=3)
+    src = iter(recs)
+
+    class ListAdaptor:
+        cursor = 0
+
+        def next_batch(self, n):
+            out = recs[self.cursor:self.cursor + n]
+            self.cursor += len(out)
+            return out
+
+        def seek(self, c):
+            self.cursor = c
+
+    feed = Feed("ingest", adaptor=ListAdaptor(),
+                udfs=[lambda r: r if r["author-id"] != 13 else None],
+                store=lambda rs: [msgs_ds.insert(r) for r in rs])
+    t0 = time.perf_counter()
+    while feed.pump(256):
+        pass
+    dt = time.perf_counter() - t0
+    rows.append({"bench": "feed_ingest", "us_per_call": dt / 3000 * 1e6,
+                 "derived": f"{len(msgs_ds)} stored (author 13 filtered), "
+                            f"{3000 / dt:.0f} rec/s"})
+
+    # -- joint fan-out: train + eval subscribe to one intake ------------------
+    primary = Feed("intake", adaptor=SyntheticTokenAdaptor(512, 50304))
+    train_sink = BatchAssembler(32)
+    eval_sink = BatchAssembler(8)
+    train = Feed("train", source_joint=primary.joint, store=train_sink)
+    evalf = Feed("eval", source_joint=primary.joint, store=eval_sink)
+    t0 = time.perf_counter()
+    for _ in range(8):
+        primary.pump(64)
+        train.pump(64)
+        evalf.pump(64)
+    dt = time.perf_counter() - t0
+    nb = 0
+    while train_sink.take() is not None:
+        nb += 1
+    rows.append({"bench": "feed_joint_fanout",
+                 "us_per_call": dt / 512 * 1e6,
+                 "derived": f"{nb} train batches; 2 subscribers, "
+                            f"1 intake (cascading feeds)"})
+
+    # -- fuzzy-join dedup (Q13) ----------------------------------------------
+    rng = np.random.default_rng(0)
+    vocab = [f"tok{i}" for i in range(200)]
+    docs = []
+    for i in range(300):
+        base = set(rng.choice(vocab, size=12, replace=False))
+        docs.append((i, base))
+        if i % 5 == 0:
+            near = set(base)
+            near.discard(next(iter(near)))
+            docs.append((1000 + i, near))
+    fj = FuzzyJoin(threshold=0.5, num_hashes=64, bands=16)
+    t0 = time.perf_counter()
+    pairs, stats = fj.run(docs)
+    dt = time.perf_counter() - t0
+    n = len(docs)
+    rows.append({"bench": "fuzzy_join_dedup", "us_per_call": dt * 1e6,
+                 "derived": f"{stats['pairs']} dup pairs; candidates "
+                            f"{stats['candidates']} vs brute "
+                            f"{n * (n - 1) // 2} "
+                            f"({n * (n - 1) // 2 / max(stats['candidates'], 1):.0f}x pruned)"})
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one module per paper table + substrate benches.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table3]
+Prints ``name,us_per_call,derived`` CSV (plus table-specific columns).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+
+    from . import (feeds_bench, step_bench, table2_storage, table3_queries,
+                   table4_inserts)
+    modules = {
+        "table2": table2_storage,
+        "table3": table3_queries,
+        "table4": table4_inserts,
+        "feeds": feeds_bench,
+        "steps": step_bench,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for r in rows:
+            main_t = r.get("us_per_call", "")
+            extra = r.get("derived", "")
+            for k, v in r.items():
+                if k not in ("bench", "us_per_call", "derived"):
+                    extra += f" | {k}={v}"
+            t_str = f"{main_t:.1f}" if isinstance(main_t, float) else main_t
+            print(f"{r['bench']},{t_str},{extra}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

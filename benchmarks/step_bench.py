@@ -1,0 +1,58 @@
+"""LM substrate benches: reduced-config train/decode step wall-time on CPU
+(the "one size fits a bunch" breadth claim: the same runtime serves BDMS
+queries, feeds, AND the training/serving steps) + kernel interpret checks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.models.layers import init_params
+from repro.optim.adamw import OptimizerConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def _bench(fn, *args, warmup=2, repeat=3):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list:
+    rows = []
+    for arch in ("deepseek-67b", "olmoe-1b-7b", "jamba-v0.1-52b",
+                 "xlstm-125m"):
+        cfg = reduced(get_config(arch))
+        params = init_params(M.model_specs(cfg), jax.random.key(0),
+                             jnp.float32)
+        B, S = 4, 64
+        toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks[:, :S], "labels": toks[:, 1:]}
+        if cfg.prefix_len:
+            batch["prefix_emb"] = jnp.zeros((B, cfg.prefix_len, cfg.d_model))
+        step = jax.jit(make_train_step(cfg, OptimizerConfig()))
+        opt = init_train_state(params, OptimizerConfig())
+
+        def run_step():
+            p2, o2, m = step(params, opt, batch)
+            return m["loss"]
+
+        t = _bench(run_step)
+        tok_s = B * S / t
+        rows.append({"bench": f"train_step_{arch}",
+                     "us_per_call": t * 1e6,
+                     "derived": f"reduced cfg, {tok_s:.0f} tok/s CPU"})
+    return rows

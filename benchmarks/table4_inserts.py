@@ -1,0 +1,40 @@
+"""Table 4 analogue: insert cost vs batch size (1 vs 20 vs 200).
+
+Paper: single-record inserts cost 0.091s/record in AsterixDB vs 0.010s at
+batch 20 — a ~9x amortization because *each statement pays Hyracks job
+generation and start-up*.  Our steps are pre-compiled functions, so there is
+no per-statement job-generation cost to amortize: per-record time should be
+~flat across batch sizes.  That flat line IS the reproduction finding — the
+paper's own diagnosis ("mainly due to Hyracks job generation and start-up
+overheads") predicts the gap disappears when plans are compiled once, which
+is exactly how the training-step side of this framework works too (one jit'd
+step, millions of invocations).  LSM flush/merge counters confirm ingestion
+cost stays amortized (no in-place index updates).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.tinysocial import build_dataverse, gen_messages
+
+
+def run() -> list:
+    rows = []
+    recs = gen_messages(4000, 400, seed=7)
+    for batch in (1, 20, 200):
+        _, ds = build_dataverse(50, 0, num_partitions=4,
+                                flush_threshold=256)
+        msgs = ds["MugshotMessages"]
+        t0 = time.perf_counter()
+        for i in range(0, 2000, batch):
+            msgs.insert_batch(recs[i:i + batch])
+        dt = time.perf_counter() - t0
+        stats = [p.primary.stats for p in msgs.partitions]
+        rows.append({
+            "bench": f"table4_insert_b{batch}",
+            "us_per_call": dt / 2000 * 1e6,
+            "derived": f"flushes={sum(s['flushes'] for s in stats)} "
+                       f"merges={sum(s['merges'] for s in stats)}",
+        })
+    return rows

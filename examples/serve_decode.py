@@ -1,0 +1,74 @@
+"""Serving example: batched requests through prefill + cached decode, with
+both flat and LSM-tiered KV attention paths cross-checked.
+
+Run: PYTHONPATH=src python examples/serve_decode.py [--tokens 48]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.models.layers import init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-67b")
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    params = init_params(M.model_specs(cfg), jax.random.key(0), jnp.float32)
+    prefill = jax.jit(M.make_prefill_fn(cfg))
+    decode = jax.jit(M.make_decode_fn(cfg))
+
+    # batched requests: shared-length prompts (a serving batch)
+    B, P = args.batch, 16
+    max_len = P + args.tokens
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0,
+                                 cfg.vocab_size)
+    logits, cache = prefill(params, {"tokens": prompts})
+
+    # grow attention caches to max_len (serving allocator would pre-size)
+    def grow(x):
+        if x.ndim >= 3 and x.shape[-3] == P and \
+                x.shape[-1] == cfg.resolved_head_dim:
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, max_len - P)
+            return jnp.pad(x, pad)
+        return x
+
+    cache = jax.tree.map(grow, cache)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for t in range(args.tokens - 1):
+        logits, cache = decode(params, cache,
+                               {"token": tok, "pos": jnp.int32(P + t)})
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"{cfg.name} (reduced): generated {gen.shape} greedy tokens")
+    print(f"decode: {args.tokens * B / dt:.1f} tok/s (CPU, batch {B})")
+
+    # oracle check: the full prefill of prompt+generated must predict the
+    # same final token (cache path == full recompute)
+    full = jnp.concatenate([prompts, gen[:, :-1]], axis=1)
+    logits2, _ = prefill(params, {"tokens": full})
+    agree = float(jnp.mean((jnp.argmax(logits2, -1) == gen[:, -1])))
+    print(f"decode-vs-recompute final-token agreement: {agree:.2f}")
+    assert agree > 0.95
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

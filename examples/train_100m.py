@@ -1,0 +1,78 @@
+"""End-to-end driver (deliverable b): train a ~100M-class model for a few
+hundred steps through the full production stack — feeds -> jit'd train step
+-> LSM checkpointing with WAL — including a mid-run crash + recovery.
+
+The arch is xlstm-125m at trimmed width (CPU wall-clock), exercising both
+mLSTM and sLSTM blocks.  Run:
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300] [--full]
+
+``--full`` uses the real 125m width (slow on CPU; fine on real hardware).
+"""
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+from repro.configs.registry import get_config
+from repro.optim.adamw import OptimizerConfig
+from repro.training.trainer import InjectedFailure, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--arch", default="xlstm-125m")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = dataclasses.replace(
+            cfg, d_model=256, num_layers=4, vocab_size=8192,
+            xlstm_heads=2, seq_chunk=32,
+            num_heads=max(2, cfg.num_heads // 8),
+            num_kv_heads=max(1, cfg.num_kv_heads // 8),
+            d_ff=cfg.d_ff // 8 if cfg.d_ff else 0,
+            num_experts=min(cfg.num_experts, 8),
+            experts_per_token=min(cfg.experts_per_token, 2))
+    print(f"training {cfg.name}: ~{cfg.params_total()/1e6:.0f}M params, "
+          f"batch={args.batch} seq={args.seq}")
+
+    opt = OptimizerConfig(peak_lr=3e-3, warmup_steps=20,
+                          decay_steps=args.steps)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tr = Trainer(cfg, global_batch=args.batch, seq_len=args.seq,
+                     ckpt_dir=ckpt_dir, opt_cfg=opt)
+        tr.init_or_restore()
+        t0 = time.time()
+        half = args.steps // 2
+        try:
+            tr.run(args.steps, checkpoint_every=max(10, args.steps // 10),
+                   fail_at_step=half, log_every=25)
+        except InjectedFailure:
+            print(f"!! injected node failure at step {half}; restarting "
+                  f"from the newest VALID component ...")
+        tr2 = Trainer(cfg, global_batch=args.batch, seq_len=args.seq,
+                      ckpt_dir=ckpt_dir, opt_cfg=opt)
+        tr2.init_or_restore()
+        print(f"   recovered at step {tr2.step} "
+              f"(WAL records: {len(tr2.ckpt.read_wal())})")
+        tr2.run(args.steps - tr2.step,
+                checkpoint_every=max(10, args.steps // 10))
+        hist = tr2.history
+        wall = time.time() - t0
+        first, last = hist[0], hist[-1]
+        print(f"step {first['step']}: loss {first['loss']:.3f}  ->  "
+              f"step {last['step']}: loss {last['loss']:.3f}")
+        tok_s = args.batch * args.seq * (len(hist)) / wall
+        print(f"throughput ~{tok_s:.0f} tok/s on CPU; wall {wall:.0f}s")
+        assert last["loss"] < first["loss"], "loss should decrease"
+        print("train_100m OK (crash-recovered, loss decreasing)")
+
+
+if __name__ == "__main__":
+    main()

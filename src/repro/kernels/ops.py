@@ -1,0 +1,134 @@
+"""Jit'd kernel wrappers with backend dispatch + padding (the ``ops.py`` layer).
+
+On TPU backends the Pallas kernels run compiled; elsewhere they run in
+interpret mode (exact same kernel body, Python-evaluated) or fall back to the
+pure-jnp oracle for speed.  All wrappers handle padding to block multiples so
+callers never see alignment constraints.
+
+``flash_attention`` carries a custom VJP whose backward pass is the oracle's
+(recompute-based) gradient — the forward kernel is the deployment hot spot;
+backward reuses XLA.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import lsm_decode_attention as _lsm
+from . import rmsnorm as _rms
+from . import ref
+
+__all__ = ["flash_attention", "lsm_decode_attention", "rmsnorm",
+           "use_pallas"]
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """q: [B, Sq, H, hd]; k/v: [B, Skv, KV, hd] -> [B, Sq, H, hd]."""
+    return _flash_fwd_impl(q, k, v, causal, block_q, block_k)
+
+
+def _flash_fwd_impl(q, k, v, causal, block_q, block_k):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, -1, hd)
+    qf, sq = _pad_to(qf, 1, block_q)
+    kf, skv = _pad_to(kf, 1, block_k)
+    vf, _ = _pad_to(vf, 1, block_k)
+    if kf.shape[1] > skv:
+        # padded KV rows must not contribute: causal masking handles rows
+        # beyond Sq only if Sq == Skv; mask explicitly via huge negative keys
+        pass  # handled by causal mask when Sq==Skv; else oracle path below
+    if not causal and kf.shape[1] != skv:
+        out = ref.flash_attention_ref(q, k, v, causal=causal)
+        return out
+    o = _fa.flash_attention_fwd(qf, kf, vf, causal=causal, block_q=block_q,
+                                block_k=block_k, interpret=_interpret())
+    o = o[:, :Sq].reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return o
+
+
+def _flash_vjp_fwd(q, k, v, causal, block_q, block_k):
+    return _flash_fwd_impl(q, k, v, causal, block_q, block_k), (q, k, v)
+
+
+def _flash_vjp_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LSM-tiered decode attention
+# ---------------------------------------------------------------------------
+
+def lsm_decode_attention(q: jax.Array,
+                         components: Sequence[Tuple[jax.Array, jax.Array,
+                                                    jax.Array]],
+                         *, block_k: int = 128) -> jax.Array:
+    """Decode attention over tiered KV components.
+
+    q: [B, H, hd]; components: sequence of (k, v, valid_len) with k/v
+    [B, S_c, KV, hd].  Each component yields an un-normalized flash state
+    from the Pallas kernel; states merge associatively (the LSM component
+    merge) and normalize once.
+    """
+    partials = []
+    for (k, v, vl) in components:
+        k, sc = _pad_to(k, 1, block_k)
+        v, _ = _pad_to(v, 1, block_k)
+        partials.append(_lsm.decode_partial(q, k, v, vl, block_k=block_k,
+                                            interpret=_interpret()))
+    return ref.merge_partials_ref(partials).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            block_rows: int = 256) -> jax.Array:
+    """x: [..., d]; w: [d]."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    block = min(block_rows, n) or 1
+    x2, _ = _pad_to(x2, 0, block)
+    o = _rms.rmsnorm(x2, w, eps=eps, block_rows=block,
+                     interpret=_interpret())
+    return o[:n].reshape(shape)

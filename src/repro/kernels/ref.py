@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These are the ground truth the kernels are validated against (interpret=True
+shape/dtype sweeps in tests/test_kernels.py) and the fallback path on
+non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_partial_ref", "merge_partials_ref",
+           "rmsnorm_ref"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        q_offset: int = 0) -> jax.Array:
+    """Plain softmax attention.  q: [B, Sq, H, hd]; k/v: [B, Skv, KV, hd]
+    with H = KV * G (GQA: query head h uses kv head h // G)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = k.shape[1] and (jnp.arange(k.shape[1])[None, :]
+                               <= q_pos[:, None])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_partial_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       valid_len: jax.Array | int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Un-normalized partial attention over ONE KV component.
+
+    q: [B, H, hd]; k/v: [B, S_c, KV, hd]; valid_len: number of valid rows.
+    Returns flash state (acc [B,H,hd] un-normalized, m [B,H], l [B,H]) —
+    the associative merge state of the LSM component merge.
+    """
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32))
+    valid = jnp.arange(k.shape[1]) < valid_len
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return (acc.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+
+
+def merge_partials_ref(partials: Sequence[Tuple[jax.Array, jax.Array,
+                                                jax.Array]]) -> jax.Array:
+    """Normalize the logsumexp-merge of per-component partials (LSM merge)."""
+    acc, m, l = partials[0]
+    for a2, m2, l2 in partials[1:]:
+        m_new = jnp.maximum(m, m2)
+        w1 = jnp.exp(m - m_new)
+        w2 = jnp.exp(m2 - m_new)
+        acc = acc * w1[..., None] + a2 * w2[..., None]
+        l = l * w1 + l2 * w2
+        m = m_new
+    return acc / jnp.maximum(l, 1e-20)[..., None]
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)

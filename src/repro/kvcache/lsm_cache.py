@@ -1,0 +1,181 @@
+"""LSM-tiered KV cache (paper §4.3 adapted to TPU decode).
+
+The paper's storage rule — mutable in-memory component, immutable flushed
+components, deferred merges — maps onto the decode KV cache:
+
+  tail   (memtable)        [B, tail_cap, KV, hd] — per-token appends land
+                           here via cheap small dynamic_update_slice writes.
+  L1 ring (disk components) [n1, B, tail_cap, KV, hd] — a full tail is
+                           *flushed* (copied, then frozen) into the next slot.
+  L2     (merged component) [B, max_len, KV, hd] — when the L1 ring fills,
+                           its components are *merged* (bulk-appended; KV
+                           entries are position-sorted so the merge is a
+                           concatenation) into the big immutable region.
+
+Attention runs per component (Pallas flash-decode kernel on TPU) producing
+un-normalized (acc, m, l) states; states merge associatively — the same
+algebra that lets LSM merge disk components in any order — then normalize
+once.  Frozen components never change layout, so they can be laid out
+tile-aligned and (future work) quantized.
+
+Everything is static-shape and jit/scan-friendly: counters are traced
+scalars, flush/merge are dynamic_update_slice writes gated by lax.cond.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+
+__all__ = ["TieredCacheConfig", "init_tiered_cache", "tiered_update",
+           "tiered_attend", "tiered_decode_attention", "cache_config_for",
+           "tiered_from_prefill"]
+
+
+@dataclass(frozen=True)
+class TieredCacheConfig:
+    tail_cap: int = 128
+    l1_comps: int = 4
+    max_len: int = 4096           # L2 capacity
+
+    def __post_init__(self):
+        assert self.max_len % self.tail_cap == 0
+
+
+def init_tiered_cache(batch: int, kv_heads: int, head_dim: int,
+                      ccfg: TieredCacheConfig, dtype=jnp.bfloat16
+                      ) -> Dict[str, jax.Array]:
+    T, N = ccfg.tail_cap, ccfg.l1_comps
+    shape_tail = (batch, T, kv_heads, head_dim)
+    return {
+        "tail_k": jnp.zeros(shape_tail, dtype),
+        "tail_v": jnp.zeros(shape_tail, dtype),
+        "tail_len": jnp.zeros((), jnp.int32),
+        "l1_k": jnp.zeros((N,) + shape_tail, dtype),
+        "l1_v": jnp.zeros((N,) + shape_tail, dtype),
+        "l1_count": jnp.zeros((), jnp.int32),
+        "l2_k": jnp.zeros((batch, ccfg.max_len, kv_heads, head_dim), dtype),
+        "l2_v": jnp.zeros((batch, ccfg.max_len, kv_heads, head_dim), dtype),
+        "l2_len": jnp.zeros((), jnp.int32),
+        # stats (validity accounting: flushes/merges mirror lsm.LSMIndex)
+        "flushes": jnp.zeros((), jnp.int32),
+        "merges": jnp.zeros((), jnp.int32),
+    }
+
+
+def _merge_l1_into_l2(cache: Dict[str, jax.Array],
+                      ccfg: TieredCacheConfig) -> Dict[str, jax.Array]:
+    """Bulk-append the full L1 ring into L2 (the LSM merge; entries are
+    position-ordered so the merged run is just the concatenation)."""
+    T, N = ccfg.tail_cap, ccfg.l1_comps
+    B = cache["tail_k"].shape[0]
+    flat_k = jnp.swapaxes(cache["l1_k"], 0, 1).reshape(
+        B, N * T, *cache["l1_k"].shape[3:])
+    flat_v = jnp.swapaxes(cache["l1_v"], 0, 1).reshape(
+        B, N * T, *cache["l1_v"].shape[3:])
+    l2_k = jax.lax.dynamic_update_slice(
+        cache["l2_k"], flat_k, (0, cache["l2_len"], 0, 0))
+    l2_v = jax.lax.dynamic_update_slice(
+        cache["l2_v"], flat_v, (0, cache["l2_len"], 0, 0))
+    return {**cache, "l2_k": l2_k, "l2_v": l2_v,
+            "l2_len": cache["l2_len"] + N * T,
+            "l1_count": jnp.zeros((), jnp.int32),
+            "merges": cache["merges"] + 1}
+
+
+def _flush_tail(cache: Dict[str, jax.Array],
+                ccfg: TieredCacheConfig) -> Dict[str, jax.Array]:
+    """Freeze the full tail as the next L1 component (shadow install: the
+    component becomes visible only by the l1_count increment — the validity
+    bit of paper §4.4)."""
+    i = cache["l1_count"]
+    l1_k = jax.lax.dynamic_update_slice(
+        cache["l1_k"], cache["tail_k"][None], (i, 0, 0, 0, 0))
+    l1_v = jax.lax.dynamic_update_slice(
+        cache["l1_v"], cache["tail_v"][None], (i, 0, 0, 0, 0))
+    cache = {**cache, "l1_k": l1_k, "l1_v": l1_v, "l1_count": i + 1,
+             "tail_len": jnp.zeros((), jnp.int32),
+             "flushes": cache["flushes"] + 1}
+    return jax.lax.cond(cache["l1_count"] >= ccfg.l1_comps,
+                        lambda c: _merge_l1_into_l2(c, ccfg),
+                        lambda c: c, cache)
+
+
+def tiered_update(cache: Dict[str, jax.Array], k_new: jax.Array,
+                  v_new: jax.Array, ccfg: TieredCacheConfig
+                  ) -> Dict[str, jax.Array]:
+    """Append one token's KV ([B, 1, KV, hd]) to the tail; flush/merge as
+    thresholds trip."""
+    cache = jax.lax.cond(cache["tail_len"] >= ccfg.tail_cap,
+                         lambda c: _flush_tail(c, ccfg),
+                         lambda c: c, cache)
+    tk = jax.lax.dynamic_update_slice(
+        cache["tail_k"], k_new.astype(cache["tail_k"].dtype),
+        (0, cache["tail_len"], 0, 0))
+    tv = jax.lax.dynamic_update_slice(
+        cache["tail_v"], v_new.astype(cache["tail_v"].dtype),
+        (0, cache["tail_len"], 0, 0))
+    return {**cache, "tail_k": tk, "tail_v": tv,
+            "tail_len": cache["tail_len"] + 1}
+
+
+def tiered_attend(cache: Dict[str, jax.Array], q: jax.Array,
+                  ccfg: TieredCacheConfig) -> jax.Array:
+    """q: [B, H, hd] -> [B, H, hd]: merge partial attention over
+    L2 + L1 components + tail (logsumexp merge = LSM component merge)."""
+    partials = [kref.decode_partial_ref(q, cache["l2_k"], cache["l2_v"],
+                                        cache["l2_len"])]
+
+    def l1_partial(i):
+        vl = jnp.where(i < cache["l1_count"], ccfg.tail_cap, 0)
+        return kref.decode_partial_ref(q, cache["l1_k"][i], cache["l1_v"][i],
+                                       vl)
+
+    accs, ms, ls = jax.vmap(l1_partial)(jnp.arange(ccfg.l1_comps))
+    partials.extend((accs[i], ms[i], ls[i]) for i in range(ccfg.l1_comps))
+    partials.append(kref.decode_partial_ref(
+        q, cache["tail_k"], cache["tail_v"], cache["tail_len"]))
+    return kref.merge_partials_ref(partials).astype(q.dtype)
+
+
+def tiered_decode_attention(cache: Dict[str, jax.Array], q: jax.Array,
+                            k_new: jax.Array, v_new: jax.Array,
+                            ccfg: TieredCacheConfig
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: append then attend over all tiers."""
+    cache = tiered_update(cache, k_new, v_new, ccfg)
+    return tiered_attend(cache, q, ccfg), cache
+
+
+def cache_config_for(max_len: int, tail_cap: int = 256,
+                     l1_comps: int = 4) -> TieredCacheConfig:
+    """Model-config -> tiered-cache geometry (L2 sized to a component
+    multiple covering max_len)."""
+    tail_cap = min(tail_cap, max(max_len, 1))
+    l2 = -(-max_len // tail_cap) * tail_cap + l1_comps * tail_cap
+    return TieredCacheConfig(tail_cap=tail_cap, l1_comps=l1_comps,
+                             max_len=l2)
+
+
+def tiered_from_prefill(k: jax.Array, v: jax.Array,
+                        ccfg: TieredCacheConfig,
+                        dtype=None) -> Dict[str, jax.Array]:
+    """LSM *bulk load*: a prefilled [B, S, KV, hd] KV block arrives presorted
+    so it installs directly as one big L2 component (no per-token appends) —
+    the paper's bulk-load fast path for initial Dataset loads."""
+    B, S, KV, hd = k.shape
+    dtype = dtype or k.dtype
+    cache = init_tiered_cache(B, KV, hd, ccfg, dtype)
+    assert S <= ccfg.max_len, (S, ccfg.max_len)
+    l2_k = jax.lax.dynamic_update_slice(
+        cache["l2_k"], k.astype(dtype), (0, 0, 0, 0))
+    l2_v = jax.lax.dynamic_update_slice(
+        cache["l2_v"], v.astype(dtype), (0, 0, 0, 0))
+    return {**cache, "l2_k": l2_k, "l2_v": l2_v,
+            "l2_len": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) cell on the production meshes and record
+memory/cost/collective analysis for §Dry-run and §Roofline.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Do not replicate them in conftest/pyproject — smoke
+tests and benches are supposed to see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json (cells are
+skipped if their JSON already exists; --force overrides).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import applicable_cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, make_step, pick_rules
+from repro.roofline.analysis import model_flops, roofline
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _compile_cell(cfg, shape, mesh, rules):
+    step, donate = make_step(cfg, shape, rules)
+    args = input_specs(cfg, shape, mesh, rules)
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _probe_costs(cfg, shape, mesh, rules):
+    """Layer-extrapolated cost accounting.
+
+    XLA's cost_analysis counts a while-loop (scan-over-layers) body ONCE, so
+    flops/bytes/collectives of deep models are understated by ~num_layers.
+    We compile UNROLLED probes at 1 and 2 pattern-cycles on the same mesh and
+    extrapolate linearly: total = c1 + (cycles-1) * (c2 - c1).  Exact for
+    per-layer costs; the intercept captures embed/head/loss/optimizer.
+    """
+    import dataclasses
+    from ..roofline.analysis import collective_bytes
+    p = len(cfg.layer_pattern)
+    out = {}
+    for n in (1, 2):
+        cfg_n = dataclasses.replace(cfg, num_layers=n * p, scan_layers=False)
+        compiled = _compile_cell(cfg_n, shape, mesh, rules)
+        cost = compiled.cost_analysis()
+        out[n] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": collective_bytes(compiled.as_text()),
+        }
+    cycles = cfg.num_layers // p
+    per_cycle = {k: out[2][k] - out[1][k] for k in ("flops", "bytes")}
+    total = {k: out[1][k] + (cycles - 1) * per_cycle[k]
+             for k in ("flops", "bytes")}
+    coll_total = {}
+    for key in out[1]["coll"]:
+        d = out[2]["coll"][key] - out[1]["coll"][key]
+        coll_total[key] = max(out[1]["coll"][key] + (cycles - 1) * d, 0)
+    return {"flops": total["flops"], "bytes": total["bytes"],
+            "coll": coll_total,
+            "probe_1cycle": out[1], "probe_2cycle": out[2]}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None, optimized: bool = False) -> dict:
+    from repro.configs.registry import optimized_config
+    cfg = optimized_config(arch) if optimized else get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2" if multi_pod else "pod1"
+    chips = 512 if multi_pod else 256
+    rules = pick_rules(cfg, shape)
+    step, donate = make_step(cfg, shape, rules)
+    args = input_specs(cfg, shape, mesh, rules)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else 1)
+    mf = model_flops(cfg.params_per_token_active(), tokens,
+                     "train" if shape.kind == "train" else "serve")
+    # layer-extrapolated (corrected) accounting — see _probe_costs docstring
+    probe = _probe_costs(cfg, shape, mesh, rules)
+    rep = roofline(arch, shape_name, mesh_name, chips,
+                   {"flops": probe["flops"],
+                    "bytes accessed": probe["bytes"]},
+                   "", mf)
+    rep.coll_breakdown = probe["coll"]
+    rep.coll_bytes = float(probe["coll"].get("total", 0))
+    raw = roofline(arch, shape_name, mesh_name, chips, cost, hlo, mf)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "peak_bytes_per_device": int(mem.peak_memory_in_bytes),
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "roofline": rep.as_dict(),
+        "roofline_raw_scan_body": raw.as_dict(),
+        "params_total": cfg.params_total(),
+        "params_active": cfg.params_per_token_active(),
+    }
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--override", action="append", default=[],
+                   help="cfg field=value overrides (perf experiments)")
+    p.add_argument("--optimized", action="store_true",
+                   help="apply the arch's §Perf profile (registry."
+                        "OPTIMIZED_PROFILES)")
+    p.add_argument("--tag", default="", help="suffix for experiment outputs")
+    args = p.parse_args()
+    if args.optimized and not args.tag:
+        args.tag = "opt"
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    cells = applicable_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"pod1": [False], "pod2": [True],
+              "both": [False, True]}[args.mesh]
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape_name in cells:
+        for multi_pod in meshes:
+            mesh_name = "pod2" if multi_pod else "pod1"
+            tag = f"__{args.tag}" if args.tag else ""
+            out = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+            if out.exists() and not args.force:
+                n_skip += 1
+                continue
+            print(f"== {arch} × {shape_name} × {mesh_name} ...", flush=True)
+            try:
+                result = run_cell(arch, shape_name, multi_pod, overrides,
+                                  optimized=args.optimized)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001 — record the failure
+                result = {"arch": arch, "shape": shape_name,
+                          "mesh": mesh_name, "status": "fail",
+                          "error": f"{type(e).__name__}: {e}",
+                          "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+                print(f"   FAIL: {type(e).__name__}: {e}", flush=True)
+            out.write_text(json.dumps(result, indent=1))
+            if result["status"] == "ok":
+                r = result["roofline"]
+                print(f"   ok lower={result['lower_s']}s "
+                      f"compile={result['compile_s']}s "
+                      f"peak={result['memory']['peak_bytes_per_device']/2**30:.2f}GiB/dev "
+                      f"bottleneck={r['bottleneck']} "
+                      f"step>={r['step_time_lb_s']*1e3:.1f}ms "
+                      f"mfu@bound={r['mfu_at_bound']:.2f}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run deliverable).
+
+``input_specs`` returns weak-type-correct, shardable abstract values — no
+device allocation — for each (arch × shape) cell, plus the step function the
+cell lowers:
+
+  train_*    -> train_step(params, opt_state, batch)
+  prefill_*  -> prefill_step(params, batch)
+  decode_* / long_* -> decode_step(params, cache, batch)   (serve_step)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..models.layers import abstract_params
+from ..models.model import cache_specs, model_specs
+from ..optim import adamw
+from ..runtime.sharding import (DECODE_KVSEQ_RULES, DEFAULT_RULES,
+                                LONG_CONTEXT_RULES, ShardingRules,
+                                resolve_spec)
+from ..training.train_step import make_serve_steps, make_train_step
+
+__all__ = ["pick_rules", "input_specs", "make_step", "batch_specs"]
+
+
+def pick_rules(cfg: ModelConfig, shape: ShapeConfig,
+               model_axis: int = 16) -> ShardingRules:
+    """The Algebricks "safe rule" dispatch per cell:
+      * long_500k (batch=1): context-parallel — KV sequence over data×model.
+      * decode/prefill with kv_heads not divisible by the model axis: the KV
+        cache's sequence axis takes `model` (else the cache replicates 16x).
+      * everything else: the default table.
+    """
+    if shape.name == "long_500k":
+        rules = LONG_CONTEXT_RULES
+    elif shape.kind == "decode" and cfg.num_kv_heads % model_axis != 0:
+        rules = DECODE_KVSEQ_RULES
+    elif shape.kind == "prefill" and cfg.num_kv_heads % model_axis != 0:
+        # prefill COMPUTE keeps heads TP-sharded (replicating heads made
+        # every GQA prefill 16x compute-redundant — §Perf iteration 4);
+        # only the cache OUTPUT layout takes the kv_seq sharding.
+        rules = DEFAULT_RULES.override(kv_seq="model")
+    else:
+        rules = DEFAULT_RULES
+    if cfg.seq_shard:
+        # Megatron sequence parallelism: the residual stream between blocks
+        # is sharded over `model`; GSPMD turns each TP all-reduce into an
+        # all-gather + reduce-scatter pair (half the wire bytes) and the
+        # remat-saved block inputs shrink by the model-axis factor.
+        rules = rules.override(seq_blocks="model")
+    if cfg.rule_hints:
+        # per-arch hints (paper Query 14): JSON overrides arrive as lists
+        def _ax(v):
+            if isinstance(v, list):
+                return tuple(v)
+            return v
+        rules = rules.override(**{k: _ax(v) for k, v in cfg.rule_hints})
+    return rules
+
+
+def _sds(shape: Tuple[int, ...], dtype, logical, rules: ShardingRules,
+         mesh: Mesh) -> jax.ShapeDtypeStruct:
+    sh = NamedSharding(mesh, resolve_spec(shape, logical, rules, mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: ShardingRules) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32, ("batch", "seq"), rules, mesh),
+            "labels": _sds((B, S), jnp.int32, ("batch", "seq"), rules, mesh),
+        }
+        if cfg.prefix_len:
+            batch["prefix_emb"] = _sds(
+                (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16,
+                ("batch", "seq", "act_model"), rules, mesh)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32, ("batch", "seq"),
+                                rules, mesh)}
+        if cfg.prefix_len:
+            batch["prefix_emb"] = _sds(
+                (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16,
+                ("batch", "seq", "act_model"), rules, mesh)
+        return batch
+    if shape.kind == "decode":
+        return {
+            "token": _sds((B, 1), jnp.int32, ("batch", None), rules, mesh),
+            "pos": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())),
+        }
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: Optional[ShardingRules] = None,
+                param_dtype=jnp.bfloat16) -> Tuple[Any, ...]:
+    """Abstract positional args for the cell's step function."""
+    rules = rules or pick_rules(cfg, shape)
+    params = abstract_params(model_specs(cfg), param_dtype, mesh, rules)
+    batch = batch_specs(cfg, shape, mesh, rules)
+    if shape.kind == "train":
+        opt_state = {
+            "m": abstract_params(model_specs(cfg), jnp.float32, mesh, rules),
+            "v": abstract_params(model_specs(cfg), jnp.float32, mesh, rules),
+            "step": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())),
+        }
+        return (params, opt_state, batch)
+    if shape.kind == "prefill":
+        return (params, batch)
+    cache = abstract_params(cache_specs(cfg, shape.global_batch,
+                                        shape.seq_len),
+                            jnp.bfloat16, mesh, rules)
+    return (params, cache, batch)
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig,
+              rules: Optional[ShardingRules] = None,
+              opt_cfg: adamw.OptimizerConfig = adamw.OptimizerConfig(),
+              ) -> Tuple[Callable, Tuple[int, ...]]:
+    """(step_fn, donate_argnums) for the cell."""
+    rules = rules or pick_rules(cfg, shape)
+    if shape.kind == "train":
+        return make_train_step(cfg, opt_cfg, rules), (0, 1)
+    prefill, decode = make_serve_steps(cfg, rules)
+    if shape.kind == "prefill":
+        return prefill, ()
+    return decode, (1,)

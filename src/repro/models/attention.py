@@ -1,0 +1,244 @@
+"""GQA attention: chunked (flash-style) training path + cached decode.
+
+The training/prefill path streams over KV blocks with a running
+(max, normalizer, accumulator) triple — the same associative merge state the
+LSM-tiered decode kernel uses per component (DESIGN.md §2).  On TPU the inner
+loop is the Pallas flash kernel (kernels/flash_attention.py); this module is
+the XLA path that the dry-run lowers and the kernels' oracle reuses.
+
+Decode supports two cache layouts:
+  * flat   — one [B, S_max, KV, hd] buffer per layer (baseline)
+  * tiered — LSM components (kvcache/lsm_cache.py), merged by logsumexp
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from .layers import ParamSpec, apply_rope, dense
+
+__all__ = ["attention_specs", "attention", "attention_prefill",
+           "decode_attention", "flash_attention_xla", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def _out_pref(cfg):
+    """Collective dtype of TP partial-sum reductions (out-projections).
+    bf16 halves the wire bytes of every cross-shard psum; the local MXU
+    contraction still accumulates in f32 internally."""
+    import jax.numpy as _jnp
+    return _jnp.bfloat16 if cfg.reduce_dtype == "bfloat16" else _jnp.float32
+
+
+
+def attention_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("d_model", "heads", "head_dim"), "scaled"),
+        "wk": ParamSpec((d, kv, hd), ("d_model", "kv_heads", "head_dim"), "scaled"),
+        "wv": ParamSpec((d, kv, hd), ("d_model", "kv_heads", "head_dim"), "scaled"),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "d_model"), "scaled"),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bo"] = ParamSpec((d,), ("act_model",), "zeros")
+    return specs
+
+
+def _qkv(params, x, cfg: ModelConfig, positions, rules: ShardingRules):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.use_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "act_heads", "head_dim"), rules)
+    k = constrain(k, ("batch", "seq", "act_kv_heads", "head_dim"), rules)
+    v = constrain(v, ("batch", "seq", "act_kv_heads", "head_dim"), rules)
+    return q, k, v
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, chunk: int = 1024,
+                        q_offset: int = 0) -> jax.Array:
+    """Blockwise attention with running logsumexp (flash-style), in XLA.
+
+    q: [B, Sq, KV, G, hd]  (G = query heads per KV head)
+    k, v: [B, Skv, KV, hd]
+    Streams over KV chunks via lax.scan so peak memory is
+    O(Sq * chunk) per (B, head) instead of O(Sq * Skv).
+    """
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    if Skv % chunk:
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = Skv
+        Skv = k.shape[1]
+    else:
+        kv_valid = Skv
+    nchunks = Skv // chunk
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale)
+
+    kc = k.reshape(B, nchunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        j, k_j, v_j = inp
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgh,bckh->bskgc", qf, k_j.astype(jnp.float32))
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((Sq, chunk), bool)
+        mask = jnp.logical_and(mask, (k_pos < kv_valid)[None, :])
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgc,bckh->bskgh", p, v_j.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(params: Dict[str, jax.Array], x: jax.Array,
+              positions: jax.Array, cfg: ModelConfig,
+              rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    """Training / prefill self-attention. x: [B, S, d]."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = h // kv
+    q, k, v = _qkv(params, x, cfg, positions, rules)
+    q = q.reshape(B, S, kv, G, hd)
+    out = flash_attention_xla(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, h, hd)
+    out = constrain(out, ("batch", "seq", "act_heads", "head_dim"), rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"],
+                   preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + params["bo"].astype(y.dtype)
+    return constrain(y, ("batch", "seq_blocks", "act_model"), rules)
+
+
+def attention_prefill(params: Dict[str, jax.Array], x: jax.Array,
+                      positions: jax.Array, cfg: ModelConfig,
+                      rules: ShardingRules = DEFAULT_RULES,
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: like ``attention`` but also returns the KV cache (the LSM
+    "bulk load" path — components arrive presorted, no per-token appends)."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = h // kv
+    q, k, v = _qkv(params, x, cfg, positions, rules)
+    q = q.reshape(B, S, kv, G, hd)
+    out = flash_attention_xla(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"],
+                   preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + params["bo"].astype(y.dtype)
+    y = constrain(y, ("batch", "seq_blocks", "act_model"), rules)
+    # cache copies live in the decode layout (kv_seq may be model-sharded)
+    cache = {"k": constrain(k, ("batch", "kv_seq", "act_kv_heads",
+                                "head_dim"), rules),
+             "v": constrain(v, ("batch", "kv_seq", "act_kv_heads",
+                                "head_dim"), rules)}
+    return y, cache
+
+
+def decode_attention_tiered(params: Dict[str, jax.Array], x: jax.Array,
+                            cache: Dict[str, jax.Array], pos: jax.Array,
+                            cfg: ModelConfig,
+                            rules: ShardingRules = DEFAULT_RULES,
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against the LSM-tiered KV cache (paper C3 path).
+
+    The cache geometry is static (read from the cache pytree's shapes); the
+    new token appends to the mutable tail, flush/merge fire on thresholds,
+    and attention is the logsumexp merge over L2 + L1 components + tail.
+    """
+    from ..kvcache.lsm_cache import (TieredCacheConfig,
+                                     tiered_decode_attention)
+    B = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions, rules)
+    ccfg = TieredCacheConfig(tail_cap=cache["tail_k"].shape[1],
+                             l1_comps=cache["l1_k"].shape[0],
+                             max_len=cache["l2_k"].shape[1])
+    out, cache = tiered_decode_attention(cache, q[:, 0], k_new, v_new, ccfg)
+    out = out.reshape(B, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"],
+                   preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + params["bo"].astype(y.dtype)
+    return y, cache
+
+
+def decode_attention(params: Dict[str, jax.Array], x: jax.Array,
+                     cache: Dict[str, jax.Array], pos: jax.Array,
+                     cfg: ModelConfig,
+                     rules: ShardingRules = DEFAULT_RULES,
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against a flat KV cache.
+
+    x: [B, 1, d]; cache: {"k","v": [B, S_max, KV, hd]}; pos: scalar int32 —
+    the number of tokens already cached.  The new token's KV is written at
+    ``pos`` (the LSM memtable append); attention spans [0, pos].
+    """
+    B, _, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = h // kv
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions, rules)
+
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B, 1, kv, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(k_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", p / jnp.maximum(l, 1e-20),
+                     v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"],
+                   preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + params["bo"].astype(y.dtype)
+    return y, {"k": k_cache, "v": v_cache}

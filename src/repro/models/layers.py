@@ -1,0 +1,219 @@
+"""Parameter-spec infrastructure + basic layers.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every leaf is
+declared by a ``ParamSpec`` carrying its shape, init, and *logical axes* —
+the names the sharding rule table (runtime/sharding.py) maps to mesh axes.
+This keeps three views of the model in lockstep:
+
+  init_params      — materialized parameters (smoke tests / real training)
+  abstract_params  — ShapeDtypeStructs (dry-run: no allocation)
+  param_shardings  — NamedShardings for pjit in_shardings / checkpoint restore
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..runtime.sharding import ShardingRules, resolve_spec
+from ..runtime.mesh import current_mesh
+
+__all__ = [
+    "ParamSpec", "init_params", "abstract_params", "param_shardings",
+    "param_logical_axes", "compute_view", "rms_norm", "layer_norm", "dense",
+    "embed_lookup", "apply_rope", "rope_freqs", "softcap", "count_params",
+]
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | ssm_a
+    scale: float = 1.0
+    dtype: Any = None           # defaults to model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            f"{self.shape} vs {self.logical_axes}"
+
+
+def _materialize(spec: ParamSpec, key: jax.Array, dtype: Any) -> jax.Array:
+    dt = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "ssm_a":
+        # Mamba: A initialized to -[1..state] broadcast over channels (log-space)
+        state = spec.shape[-1]
+        a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32),
+                     spec.shape[:-1] + (1,))
+        return jnp.log(a).astype(dt)
+    if spec.init == "scaled":
+        # fan-in = first non-"layers" dim (scan stacking prepends a layers
+        # axis; counting it as fan-in once mis-scaled every scanned model
+        # ~sqrt(d/cycles)x hot and overflowed xLSTM's exponential gating)
+        fan_in = 1
+        for dim, name in zip(spec.shape, spec.logical_axes):
+            if name != "layers":
+                fan_in = dim
+                break
+        if len(spec.shape) < 2:
+            fan_in = 1
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    # plain normal
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            * spec.scale).astype(dt)
+
+
+def _tree_paths(specs: Any, prefix=()) -> Sequence[Tuple[Tuple[str, ...], ParamSpec]]:
+    out = []
+    if isinstance(specs, ParamSpec):
+        return [(prefix, specs)]
+    for k in sorted(specs):
+        out.extend(_tree_paths(specs[k], prefix + (k,)))
+    return out
+
+
+def init_params(specs: Any, rng: jax.Array, dtype=jnp.float32) -> Any:
+    leaves = _tree_paths(specs)
+    keys = jax.random.split(rng, len(leaves))
+    flat = {path: _materialize(s, k, dtype)
+            for (path, s), k in zip(leaves, keys)}
+    return _unflatten(flat)
+
+
+def abstract_params(specs: Any, dtype=jnp.float32, mesh: Optional[Mesh] = None,
+                    rules: Optional[ShardingRules] = None) -> Any:
+    """ShapeDtypeStructs (optionally with shardings) — no allocation."""
+    def mk(path, s: ParamSpec):
+        dt = s.dtype or dtype
+        if mesh is not None and rules is not None:
+            sh = NamedSharding(mesh, resolve_spec(s.shape, s.logical_axes,
+                                                  rules, mesh))
+            return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    flat = {path: mk(path, s) for path, s in _tree_paths(specs)}
+    return _unflatten(flat)
+
+
+def param_shardings(specs: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    flat = {path: NamedSharding(mesh, resolve_spec(s.shape, s.logical_axes,
+                                                   rules, mesh))
+            for path, s in _tree_paths(specs)}
+    return _unflatten(flat)
+
+
+def param_logical_axes(specs: Any) -> Any:
+    flat = {path: s.logical_axes for path, s in _tree_paths(specs)}
+    return _unflatten(flat)
+
+
+def _unflatten(flat: Dict[Tuple[str, ...], Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        d = root
+        for p in path[:-1]:
+            d = d.setdefault(p, {})
+        d[path[-1]] = v
+    return root
+
+
+def count_params(specs: Any) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _tree_paths(specs))
+
+
+def compute_view(params: Any, axes: Any, rules: ShardingRules) -> Any:
+    """FSDP weight-gathering: constrain parameters to their *compute* layout
+    (``d_model`` unsharded, width axes TP-sharded) at point of use.
+
+    Storage layout shards weights 2-D (d_model over `data` = FSDP, width over
+    `model` = TP).  Contracting the d_model-sharded weight directly against
+    batch-sharded activations makes GSPMD emit full-batch partial-sum
+    all-reduces (observed 25 GiB/layer on deepseek train — EXPERIMENTS.md
+    §Perf iteration 1).  Gathering the weight first costs an all-gather of
+    the small FSDP shard instead; its transpose in backward is the
+    reduce-scatter of the gradients — exactly the ZeRO-3 schedule.
+    """
+    from ..runtime.sharding import constrain  # local import: avoid cycle
+    cv = rules.override(d_model=None)
+    flat_p, treedef = jax.tree.flatten(params)
+    is_axes = lambda x: (isinstance(x, tuple)
+                         and all(e is None or isinstance(e, str) for e in x))
+    flat_ax = jax.tree.flatten(axes, is_leaf=is_axes)[0]
+    assert len(flat_p) == len(flat_ax)
+    return jax.tree.unflatten(
+        treedef, [constrain(p, ax, cv) for p, ax in zip(flat_p, flat_ax)])
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation (routed through the Pallas kernel on TPU
+    by kernels/ops.py; this is the XLA path)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array],
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+          ) -> jax.Array:
+    """x @ w with bf16-safe accumulation."""
+    y = jnp.einsum("...d,df->...f", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def embed_lookup(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather rows; with `vocab` sharded over `model`, GSPMD lowers this to a
+    masked partial-gather + all_reduce (the MToNReplicating fan-in)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_freqs(x.shape[-1], theta)                   # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

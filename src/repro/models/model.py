@@ -1,0 +1,183 @@
+"""Top-level language model: embed -> block stack -> norm -> head -> loss.
+
+Modality frontends (paper-assigned [audio]/[vlm] archs) are STUBS: the batch
+may carry ``prefix_emb`` — precomputed frame/patch embeddings [B, P, d] —
+which are concatenated ahead of the token embeddings; the loss is computed on
+token positions only.
+
+Entry points return pure functions suitable for jax.jit + .lower():
+  make_loss_fn      (params, batch) -> (loss, metrics)
+  make_prefill_fn   (params, batch) -> (last_logits, cache)
+  make_decode_fn    (params, cache, batch) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from .layers import ParamSpec, compute_view, param_logical_axes, softcap
+from .transformer import (apply_norm, cache_specs, norm_specs, run_stack,
+                          stack_specs)
+
+__all__ = ["model_specs", "make_loss_fn", "make_prefill_fn", "make_decode_fn",
+           "cache_specs", "cross_entropy"]
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "d_model"), "normal", 0.02),
+        "blocks": stack_specs(cfg),
+        "final_norm": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("d_model", "vocab"), "scaled")
+    return specs
+
+
+def _embed(params, tokens: jax.Array, cfg: ModelConfig,
+           rules: ShardingRules) -> jax.Array:
+    table = compute_view(params["embed"], ("vocab", "d_model"), rules)
+    x = jnp.take(table, tokens, axis=0)
+    return constrain(x, ("batch", "seq", "act_model"), rules)
+
+
+def _head(params, x: jax.Array, cfg: ModelConfig,
+          rules: ShardingRules) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = compute_view(params["embed"], ("vocab", "d_model"), rules).T
+    else:
+        w = compute_view(params["lm_head"], ("d_model", "vocab"), rules)
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, ("batch", "seq", "vocab"), rules)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean token NLL + accuracy.  logits: [B,S,V] f32; labels: [B,S]."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    acc = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, jnp.sum(acc * mask) / denom
+
+
+def _forward(params, tokens, prefix_emb, cfg: ModelConfig,
+             rules: ShardingRules, mode: str, states=None, pos=None):
+    """Shared trunk.  Returns (x_tokens [B,S,d], aux, new_states)."""
+    x = _embed(params, tokens, cfg, rules)
+    P = 0
+    if prefix_emb is not None:
+        P = prefix_emb.shape[1]
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = pos
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux, new_states = run_stack(params["blocks"], x, positions, cfg,
+                                   rules, mode, states)
+    x = apply_norm(params["final_norm"], x, cfg)
+    if P:
+        x = x[:, P:]
+    return x, aux, new_states
+
+
+def _chunked_nll(params, x, labels, mask, cfg: ModelConfig,
+                 rules: ShardingRules) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing the full [B,S,V] f32 logits:
+    scan over sequence chunks (perf lever ``loss_chunk``, §Perf)."""
+    if cfg.tie_embeddings:
+        w = compute_view(params["embed"], ("vocab", "d_model"), rules).T
+    else:
+        w = compute_view(params["lm_head"], ("d_model", "vocab"), rules)
+    B, S, _ = x.shape
+    c = cfg.loss_chunk
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = x.shape[1] // c
+    xs = (x.reshape(B, nc, c, -1).transpose(1, 0, 2, 3),
+          labels.reshape(B, nc, c).transpose(1, 0, 2),
+          mask.reshape(B, nc, c).transpose(1, 0, 2))
+
+    def body(carry, inp):
+        nll_s, acc_s, cnt = carry
+        xb, lb, mb = inp
+        logits = jnp.einsum("bsd,dv->bsv", xb, w,
+                            preferred_element_type=jnp.float32)
+        if cfg.logit_softcap:
+            logits = softcap(logits, cfg.logit_softcap)
+        logits = constrain(logits, ("batch", "seq", "vocab"), rules)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        hit = (jnp.argmax(logits, axis=-1) == lb).astype(jnp.float32)
+        return (nll_s + jnp.sum((lse - gold) * mb),
+                acc_s + jnp.sum(hit * mb), cnt + jnp.sum(mb)), None
+
+    (nll_s, acc_s, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), xs)
+    cnt = jnp.maximum(cnt, 1.0)
+    return nll_s / cnt, acc_s / cnt
+
+
+def make_loss_fn(cfg: ModelConfig, rules: ShardingRules = DEFAULT_RULES
+                 ) -> Callable:
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        x, aux, _ = _forward(params, batch["tokens"],
+                             batch.get("prefix_emb"), cfg, rules, "train")
+        mask = batch.get("loss_mask")
+        if cfg.loss_chunk:
+            nll, acc = _chunked_nll(
+                params, x, batch["labels"],
+                jnp.ones_like(batch["labels"], jnp.float32)
+                if mask is None else mask, cfg, rules)
+        else:
+            logits = _head(params, x, cfg, rules)
+            nll, acc = cross_entropy(logits, batch["labels"], mask)
+        loss = nll
+        metrics = {"nll": nll, "accuracy": acc}
+        for k, v in aux.items():
+            loss = loss + v
+            metrics[k] = v
+        metrics["loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ModelConfig, rules: ShardingRules = DEFAULT_RULES
+                    ) -> Callable:
+    def prefill_fn(params, batch):
+        x, _, states = _forward(params, batch["tokens"],
+                                batch.get("prefix_emb"), cfg, rules,
+                                "prefill")
+        logits = _head(params, x[:, -1:], cfg, rules)[:, 0]
+        return logits, states
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, rules: ShardingRules = DEFAULT_RULES
+                   ) -> Callable:
+    def decode_fn(params, cache, batch):
+        """batch: {"token": [B,1] int32, "pos": scalar int32}."""
+        x, _, cache = _forward(params, batch["token"], None, cfg, rules,
+                               "decode", states=cache, pos=batch["pos"])
+        logits = _head(params, x, cfg, rules)[:, 0]
+        return logits, cache
+    return decode_fn

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity (GShard-style).
+
+Baseline ("paper-faithful" substrate): dense one-hot dispatch/combine einsums
+with a capacity bound — experts sharded over `model` (EP); GSPMD lowers the
+dispatch to the MToNPartitioning exchange (all-to-all) exactly where the
+partitioning changes from token-partitioned to expert-partitioned.
+
+The optimized path (sort-based dispatch, see training/hillclimbs) is selected
+by ``dispatch="sort"``; it replaces the O(S·E·C·d) one-hot einsums with
+argsort + gather (near-zero dispatch FLOPs) at the price of explicit
+collective control.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from .layers import ParamSpec
+
+__all__ = ["moe_specs", "moe_ffn", "router_aux_losses"]
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, e), ("d_model", "experts"), "scaled"),
+        "wo": ParamSpec((e, ff, d), ("experts", "d_ff", "d_model"), "scaled"),
+    }
+    if cfg.ffn_kind == "swiglu":
+        specs["wg"] = ParamSpec((e, d, ff), ("experts", "d_model", "d_ff"), "scaled")
+        specs["wu"] = ParamSpec((e, d, ff), ("experts", "d_model", "d_ff"), "scaled")
+    else:
+        specs["wi"] = ParamSpec((e, d, ff), ("experts", "d_model", "d_ff"), "scaled")
+    return specs
+
+
+def _expert_ffn(xe: jax.Array, params, cfg: ModelConfig) -> jax.Array:
+    """xe: [..., E, C, d] -> [..., E, C, d]; per-expert FFN."""
+    if cfg.ffn_kind == "swiglu":
+        g = jnp.einsum("...ecd,edf->...ecf", xe, params["wg"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("...ecd,edf->...ecf", xe, params["wu"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(xe.dtype)
+    else:
+        h = jnp.einsum("...ecd,edf->...ecf", xe, params["wi"],
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(h).astype(xe.dtype)
+    from .attention import _out_pref
+    return jnp.einsum("...ecf,efd->...ecd", h, params["wo"],
+                      preferred_element_type=_out_pref(cfg)).astype(xe.dtype)
+
+
+def moe_ffn(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+            rules: ShardingRules = DEFAULT_RULES,
+            dispatch: str = "einsum",
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, d] -> (y, aux_losses)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # f32
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)             # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    aux = router_aux_losses(logits, probs, expert_idx, cfg)
+
+    if dispatch == "sort":
+        y = _sort_dispatch(params, x, expert_idx, gate_vals, cfg, rules)
+        return y, aux
+
+    # --- dense one-hot dispatch with capacity ---------------------------
+    # Peak memory is kept at O(B*S*E*C) by accumulating the K routing slots
+    # one at a time instead of materializing the [B,S,K,E,C] tensor.
+    C = max(1, int(S * K / E * cfg.capacity_factor))
+    assign = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)   # [B,S,K,E]
+    # position of each (token, k) within its expert queue
+    pos = jnp.cumsum(assign.reshape(B, S * K, E), axis=1).reshape(
+        B, S, K, E) * assign - 1.0
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.where(keep, pos, 0.0).astype(jnp.int32)
+    dispatch_m = jnp.zeros((B, S, E, C), jnp.float32)
+    combine = jnp.zeros((B, S, E, C), jnp.float32)
+    for kk in range(K):
+        slot_k = jax.nn.one_hot(pos[:, :, kk], C, dtype=jnp.float32) * \
+            keep[:, :, kk, :, None].astype(jnp.float32)         # [B,S,E,C]
+        slot_k = constrain(slot_k, ("batch", "seq", "act_experts", None),
+                           rules)
+        dispatch_m = dispatch_m + slot_k
+        combine = combine + slot_k * gate_vals[:, :, kk, None, None]
+    dispatch_m = constrain(dispatch_m.astype(x.dtype),
+                           ("batch", "seq", "act_experts", None), rules)
+    combine = constrain(combine, ("batch", "seq", "act_experts", None), rules)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch_m, x,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xe = constrain(xe, ("batch", "act_experts", None, "act_model"), rules)
+    ye = _expert_ffn(xe, params, cfg)
+    ye = constrain(ye, ("batch", "act_experts", None, "act_model"), rules)
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return constrain(y, ("batch", "seq_blocks", "act_model"), rules), aux
+
+
+def _sort_dispatch(params, x, expert_idx, gate_vals, cfg: ModelConfig,
+                   rules: ShardingRules) -> jax.Array:
+    """Optimized dispatch: argsort tokens by expert, segment the flat stream,
+    run the expert FFN on contiguous slices, and scatter back.  Dispatch cost
+    drops from O(S·E·C·d) matmul FLOPs to O(S·K log(S·K)) sort + gathers.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = S * K
+    C = max(1, int(S * K / E * cfg.capacity_factor))
+
+    def per_batch(xb, idxb, gateb):
+        flat_e = idxb.reshape(T)                       # expert of each slot
+        flat_t = jnp.repeat(jnp.arange(S), K)          # source token
+        flat_g = gateb.reshape(T)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        # rank within expert = position - first-position-of-expert
+        first = jnp.searchsorted(se, jnp.arange(E), side="left")
+        rank = jnp.arange(T) - first[se]
+        keep = rank < C
+        slot_idx = jnp.where(keep, se * C + rank, E * C)   # overflow bucket
+        xe_flat = jnp.zeros((E * C + 1, d), xb.dtype).at[slot_idx].set(
+            jnp.where(keep[:, None], xb[st], 0))
+        xe = xe_flat[:E * C].reshape(E, C, d)
+        ye = _expert_ffn(xe[None], params, cfg)[0]         # [E, C, d]
+        contrib = ye.reshape(E * C, d)
+        safe_slot = jnp.minimum(slot_idx, E * C - 1)
+        y_tok = jnp.where(keep[:, None], contrib[safe_slot], 0) * sg[:, None]
+        return jnp.zeros((S, d), xb.dtype).at[st].add(y_tok.astype(xb.dtype))
+
+    y = jax.vmap(per_batch)(x, expert_idx, gate_vals)
+    return constrain(y, ("batch", "seq", "act_model"), rules)
+
+
+def router_aux_losses(logits: jax.Array, probs: jax.Array,
+                      expert_idx: jax.Array,
+                      cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Switch-style load-balance loss + router z-loss (on raw logits)."""
+    E = cfg.num_experts
+    # fraction of routed (token, k) slots landing on each expert
+    counts = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                      axis=(0, 1, 2))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    balance = E * jnp.sum(counts * mean_prob)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return {"moe_balance": cfg.router_aux_coef * balance,
+            "moe_zloss": cfg.router_z_coef * z}

@@ -1,0 +1,225 @@
+"""Mamba selective-SSM mixer (for the jamba hybrid arch).
+
+Training/prefill: causal depthwise conv + selective scan.  The scan is
+h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t;  y_t = C_t . h_t + D * x_t
+— a first-order linear recurrence, associative in (a, b) pairs, which is the
+same algebraic shape as the LSM/logsumexp merges used elsewhere (DESIGN.md §2):
+partial states combine in any grouping.  We exploit that with a *chunked*
+scan: within a chunk of ``seq_chunk`` steps an associative scan runs in
+parallel (VPU-friendly); across chunks a cheap sequential carry propagates.
+
+Decode: O(1) state update per token (conv ring + ssm state).
+
+Sharding: ``ssm_inner`` (the expanded channel dim) is TP-sharded over `model`;
+the recurrence is elementwise over channels so no collective is needed inside
+the scan — the Hyracks OneToOne connector case.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from .layers import ParamSpec
+
+__all__ = ["ssm_specs", "mamba_mixer", "mamba_decode", "init_mamba_state",
+           "selective_scan"]
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di = cfg.d_model, cfg.ssm_inner
+    st, k, dtr = cfg.ssm_state, cfg.ssm_conv, cfg.resolved_dt_rank
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("d_model", "ssm_inner"), "scaled"),
+        "conv_w": ParamSpec((k, di), ("conv_k", "ssm_inner"), "scaled", 1.0),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        # x -> (dt_rank, B, C) low-rank selective params
+        "x_proj": ParamSpec((di, dtr + 2 * st), ("ssm_inner", None), "scaled"),
+        "dt_proj_w": ParamSpec((dtr, di), (None, "ssm_inner"), "scaled"),
+        "dt_proj_b": ParamSpec((di,), ("ssm_inner",), "ones", dtype=jnp.float32),
+        "A_log": ParamSpec((di, st), ("ssm_inner", "ssm_state"), "ssm_a",
+                           dtype=jnp.float32),
+        "D": ParamSpec((di,), ("ssm_inner",), "ones", dtype=jnp.float32),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "d_model"), "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time.  x: [B, S, di]; w: [k, di].
+
+    ``prev`` ([B, k-1, di]) carries history for chunked/decoding calls.
+    """
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                    # [B, S+k-1, di]
+    # sum_j w[j] * x[t - (k-1) + j]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1], :].astype(jnp.float32) \
+            * w[j].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _selective_terms(x: jax.Array, params, cfg: ModelConfig
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-step decay/input terms.  x: [..., di] (post-conv, post-silu).
+
+    Returns (a, bx, C, dt):  a = exp(dt*A) [..., di, st],
+    bx = dt * B ⊗ x [..., di, st], C [..., st], dt [..., di].
+    """
+    st, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = jnp.einsum("...d,dp->...p", x, params["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt_lr, B, C = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_lr, params["dt_proj_w"],
+                   preferred_element_type=jnp.float32)
+        + params["dt_proj_b"])                                  # [..., di]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # [di, st]
+    a = jnp.exp(dt[..., None] * A)                              # [..., di, st]
+    bx = (dt * x.astype(jnp.float32))[..., None] * B[..., None, :]
+    return a, bx, C, dt
+
+
+def selective_scan(x: jax.Array, params, cfg: ModelConfig,
+                   h0: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan.  x: [B, S, di] -> (y [B, S, di], h [B, di, st]).
+
+    Within each ``seq_chunk`` the linear recurrence runs as an associative
+    scan (parallel over the chunk); the carry crosses chunks sequentially.
+    """
+    Bb, S, di = x.shape
+    st = cfg.ssm_state
+    chunk = min(cfg.seq_chunk, S)
+    valid = jnp.ones((Bb, S), bool)
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+        S_pad = x.shape[1]
+    else:
+        S_pad = S
+    nchunks = S_pad // chunk
+    xc = x.reshape(Bb, nchunks, chunk, di).transpose(1, 0, 2, 3)
+    vc = valid.reshape(Bb, nchunks, chunk).transpose(1, 0, 2)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, di, st), jnp.float32)
+
+    def chunk_step(h, inp):
+        xj, vj = inp
+        a, bx, C, _ = _selective_terms(xj, params, cfg)   # [B,c,di,st] x2
+        # padded steps are identity transitions: a=1, bx=0 (keeps the carried
+        # state exact so prefill->decode hand-off matches the unpadded run)
+        a = jnp.where(vj[..., None, None], a, 1.0)
+        bx = jnp.where(vj[..., None, None], bx, 0.0)
+        # associative scan over the chunk: (a2,b2) ∘ (a1,b1) = (a1*a2, b1*a2+b2)
+        def combine(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hs = a_cum * h[:, None] + b_cum                   # [B,c,di,st]
+        y = jnp.einsum("bcds,bcs->bcd", hs, C,
+                       preferred_element_type=jnp.float32)
+        y = y + params["D"].astype(jnp.float32) * xj.astype(jnp.float32)
+        return hs[:, -1], y.astype(x.dtype)
+
+    h, yc = jax.lax.scan(chunk_step, h0, (xc, vc))
+    y = yc.transpose(1, 0, 2, 3).reshape(Bb, S_pad, di)[:, :S]
+    return y, h
+
+
+def mamba_mixer(params: Dict[str, jax.Array], x: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    """Full mamba block body (sans residual/norm).  x: [B, S, d]."""
+    del positions
+    xz = jnp.einsum("bsd,dz->bsz", x, params["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, ("batch", "seq", "ssm_inner_act"), rules)
+    xin = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    y, _ = selective_scan(xin, params, cfg)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = constrain(y, ("batch", "seq", "ssm_inner_act"), rules)
+    from .attention import _out_pref
+    out = jnp.einsum("bsz,zd->bsd", y, params["out_proj"],
+                     preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    return constrain(out, ("batch", "seq_blocks", "act_model"), rules)
+
+
+def mamba_prefill(params: Dict[str, jax.Array], x: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  rules: ShardingRules = DEFAULT_RULES,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Like mamba_mixer but also returns the recurrent state for decoding."""
+    del positions
+    k = cfg.ssm_conv
+    xz = jnp.einsum("bsd,dz->bsz", x, params["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    raw, z = jnp.split(xz, 2, axis=-1)
+    raw = constrain(raw, ("batch", "seq", "ssm_inner_act"), rules)
+    xin = _causal_conv(raw, params["conv_w"], params["conv_b"])
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    y, h = selective_scan(xin, params, cfg)
+    # conv ring = last k-1 pre-conv inputs (pad left if seq < k-1)
+    pad = jnp.zeros((x.shape[0], max(0, k - 1 - x.shape[1]), raw.shape[-1]),
+                    raw.dtype)
+    ring = jnp.concatenate([pad, raw[:, -(k - 1):]], axis=1) if k > 1 else \
+        jnp.zeros((x.shape[0], 0, raw.shape[-1]), raw.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    from .attention import _out_pref
+    out = jnp.einsum("bsz,zd->bsd", y, params["out_proj"],
+                     preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    out = constrain(out, ("batch", "seq", "act_model"), rules)
+    return out, {"conv": ring, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent update
+# ---------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    di = cfg.ssm_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: Dict[str, jax.Array], x: jax.Array,
+                 state: Dict[str, jax.Array], pos: jax.Array,
+                 cfg: ModelConfig,
+                 rules: ShardingRules = DEFAULT_RULES,
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One token.  x: [B, 1, d] -> (y [B, 1, d], new state)."""
+    del pos
+    Bb = x.shape[0]
+    xz = jnp.einsum("bsd,dz->bsz", x, params["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    raw, z = jnp.split(xz, 2, axis=-1)                   # pre-conv input
+    xin = _causal_conv(raw, params["conv_w"], params["conv_b"],
+                       prev=state["conv"])
+    # the ring carries the *pre-conv* inputs of the last k-1 steps
+    conv_new = jnp.concatenate(
+        [state["conv"][:, 1:], raw[:, :1].astype(state["conv"].dtype)],
+        axis=1) if cfg.ssm_conv > 1 else state["conv"]
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    a, bx, C, _ = _selective_terms(xin[:, 0], params, cfg)   # [B,di,st]
+    h = a * state["ssm"] + bx
+    y = jnp.einsum("bds,bs->bd", h, C, preferred_element_type=jnp.float32)
+    y = y + params["D"].astype(jnp.float32) * xin[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    from .attention import _out_pref
+    out = jnp.einsum("bsz,zd->bsd", y, params["out_proj"],
+                     preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    return out, {"conv": conv_new, "ssm": h}

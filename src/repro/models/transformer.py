@@ -1,0 +1,375 @@
+"""Composable decoder blocks + scan-over-layers stack.
+
+A model is ``num_layers`` blocks following ``cfg.block_pattern`` — a cycle of
+(mixer, ffn) pairs, e.g. jamba's 8-layer Mamba/attention/MoE interleave.  The
+stack scans over *cycles* (all cycles share the pattern, so parameters stack
+with a leading ``layers`` axis); within a cycle the pattern positions apply
+sequentially.  This keeps the HLO size O(pattern) instead of O(num_layers) —
+essential for 95-layer dry-runs — and gives remat a natural unit.
+
+Modes: ``train`` (no state), ``prefill`` (returns per-layer recurrent/KV
+state), ``decode`` (consumes + returns state).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import ParamSpec, compute_view, layer_norm, rms_norm
+
+__all__ = ["mlp_specs", "mlp_apply", "block_specs", "stack_specs",
+           "run_stack", "cache_specs", "stacked"]
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.ffn_kind == "swiglu":
+        specs = {
+            "wg": ParamSpec((d, ff), ("d_model", "d_ff"), "scaled"),
+            "wu": ParamSpec((d, ff), ("d_model", "d_ff"), "scaled"),
+            "wo": ParamSpec((ff, d), ("d_ff", "d_model"), "scaled"),
+        }
+    else:
+        specs = {
+            "wi": ParamSpec((d, ff), ("d_model", "d_ff"), "scaled"),
+            "wo": ParamSpec((ff, d), ("d_ff", "d_model"), "scaled"),
+        }
+    if cfg.use_bias:
+        specs["bi"] = ParamSpec((ff,), ("act_ff",), "zeros")
+        specs["bo"] = ParamSpec((d,), ("act_model",), "zeros")
+    return specs
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig,
+              rules: ShardingRules) -> jax.Array:
+    if cfg.ffn_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"],
+                       preferred_element_type=jnp.float32)
+        if cfg.use_bias:
+            h = h + params["bi"].astype(jnp.float32)
+        h = jax.nn.gelu(h).astype(x.dtype)
+    h = constrain(h, ("batch", "seq", "act_ff"), rules)
+    from .attention import _out_pref
+    y = jnp.einsum("bsf,fd->bsd", h, params["wo"],
+                   preferred_element_type=_out_pref(cfg)).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + params["bo"].astype(y.dtype)
+    return constrain(y, ("batch", "seq_blocks", "act_model"), rules)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    specs = {"scale": ParamSpec((cfg.d_model,), ("act_model",), "ones")}
+    if cfg.norm_kind == "layernorm" and cfg.use_bias:
+        specs["bias"] = ParamSpec((cfg.d_model,), ("act_model",), "zeros")
+    return specs
+
+
+def apply_norm(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_kind == "layernorm":
+        return layer_norm(x, params["scale"], params.get("bias"))
+    return rms_norm(x, params["scale"])
+
+
+# ---------------------------------------------------------------------------
+# One block = norm -> mixer -> residual [-> norm -> ffn -> residual]
+# ---------------------------------------------------------------------------
+
+_MIXER_SPECS = {
+    "attn": attn_mod.attention_specs,
+    "mamba": ssm_mod.ssm_specs,
+    "mlstm": xlstm_mod.mlstm_specs,
+    "slstm": xlstm_mod.slstm_specs,
+}
+
+
+def block_specs(cfg: ModelConfig, mixer: str, ffn: str) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "norm1": norm_specs(cfg),
+        "mixer": _MIXER_SPECS[mixer](cfg),
+    }
+    if ffn == "mlp":
+        specs["norm2"] = norm_specs(cfg)
+        specs["ffn"] = mlp_specs(cfg)
+    elif ffn == "moe":
+        specs["norm2"] = norm_specs(cfg)
+        specs["ffn"] = moe_mod.moe_specs(cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return specs
+
+
+def _apply_mixer(params, x, positions, cfg, mixer, rules, mode, state):
+    """Returns (y, new_state)."""
+    if mode == "train":
+        fn = {"attn": attn_mod.attention, "mamba": ssm_mod.mamba_mixer,
+              "mlstm": xlstm_mod.mlstm_mixer,
+              "slstm": xlstm_mod.slstm_mixer}[mixer]
+        return fn(params, x, positions, cfg, rules), None
+    if mode == "prefill":
+        fn = {"attn": attn_mod.attention_prefill,
+              "mamba": ssm_mod.mamba_prefill,
+              "mlstm": xlstm_mod.mlstm_prefill,
+              "slstm": xlstm_mod.slstm_prefill}[mixer]
+        return fn(params, x, positions, cfg, rules)
+    if mode == "decode":
+        attn_fn = (attn_mod.decode_attention_tiered
+                   if cfg.kv_layout == "tiered"
+                   else attn_mod.decode_attention)
+        fn = {"attn": attn_fn,
+              "mamba": ssm_mod.mamba_decode,
+              "mlstm": xlstm_mod.mlstm_decode,
+              "slstm": xlstm_mod.slstm_decode}[mixer]
+        return fn(params, x, state, positions, cfg, rules)
+    raise ValueError(mode)
+
+
+def block_apply(params, x, positions, cfg: ModelConfig, mixer: str, ffn: str,
+                rules: ShardingRules, mode: str = "train",
+                state: Any = None) -> Tuple[jax.Array, Dict, Any]:
+    """x: [B, S, d] -> (x', aux_losses, new_state)."""
+    h = apply_norm(params["norm1"], x, cfg)
+    mixed, new_state = _apply_mixer(params["mixer"], h, positions, cfg,
+                                    mixer, rules, mode, state)
+    x = x + mixed
+    aux: Dict[str, jax.Array] = {}
+    if ffn != "none":
+        h = apply_norm(params["norm2"], x, cfg)
+        if ffn == "moe":
+            y, aux = moe_mod.moe_ffn(params["ffn"], h, cfg, rules,
+                                     dispatch=cfg_dispatch(cfg))
+        else:
+            y = mlp_apply(params["ffn"], h, cfg, rules)
+        x = x + y
+    x = constrain(x, ("batch", "seq_blocks", "act_model"), rules)
+    return x, aux, new_state
+
+
+def cfg_dispatch(cfg: ModelConfig) -> str:
+    return cfg.moe_dispatch or "einsum"
+
+
+# ---------------------------------------------------------------------------
+# Layer stack (scan over cycles)
+# ---------------------------------------------------------------------------
+
+def stacked(specs: Any, n: int) -> Any:
+    """Prepend a ``layers`` axis of size n to every ParamSpec leaf."""
+    if isinstance(specs, ParamSpec):
+        return ParamSpec((n,) + specs.shape, ("layers",) + specs.logical_axes,
+                         specs.init, specs.scale, specs.dtype)
+    return {k: stacked(v, n) for k, v in specs.items()}
+
+
+def stack_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    pattern = cfg.layer_pattern
+    cycles = cfg.num_layers // len(pattern)
+    per_pos = {f"pos{i}": block_specs(cfg, m, f)
+               for i, (m, f) in enumerate(pattern)}
+    if cfg.scan_layers and cycles > 1:
+        return stacked(per_pos, cycles)
+    if cycles == 1:
+        return per_pos
+    # unrolled variant (debug / tiny models)
+    return {f"cycle{c}": per_pos if c == 0 else
+            {f"pos{i}": block_specs(cfg, m, f)
+             for i, (m, f) in enumerate(pattern)}
+            for c in range(cycles)}
+
+
+def _remat_wrap(fn: Callable, policy: str) -> Callable:
+    if policy == "nothing":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save only block inputs
+
+
+def _cycle_body(params_c, x, positions, cfg, rules, mode, states_c):
+    pattern = cfg.layer_pattern
+    aux_sum: Dict[str, jax.Array] = {}
+    new_states = {}
+    for i, (mixer, ffn) in enumerate(pattern):
+        st = states_c.get(f"pos{i}") if states_c else None
+        # FSDP weight-gathering at point of use (per-cycle all-gather of the
+        # data-axis weight shards; reduce-scatter of grads in backward)
+        from .layers import param_logical_axes
+        axes_i = param_logical_axes(block_specs(cfg, mixer, ffn))
+        p_i = compute_view(params_c[f"pos{i}"], axes_i, rules)
+        x, aux, new_st = block_apply(p_i, x, positions, cfg,
+                                     mixer, ffn, rules, mode, st)
+        for k, v in aux.items():
+            aux_sum[k] = aux_sum.get(k, 0.0) + v
+        if new_st is not None:
+            new_states[f"pos{i}"] = new_st
+    return x, aux_sum, new_states
+
+
+def run_stack(params, x: jax.Array, positions, cfg: ModelConfig,
+              rules: ShardingRules = DEFAULT_RULES, mode: str = "train",
+              states: Any = None) -> Tuple[jax.Array, Dict, Any]:
+    """Apply all layers.  ``states`` (prefill out / decode in+out) is a pytree
+    with leaves stacked over cycles when scanning."""
+    pattern = cfg.layer_pattern
+    cycles = cfg.num_layers // len(pattern)
+
+    if not (cfg.scan_layers and cycles > 1):
+        # plain loop (cycles == 1 or scan disabled)
+        aux_sum: Dict[str, jax.Array] = {}
+        out_states = {}
+        for c in range(cycles):
+            p_c = params if cycles == 1 else params[f"cycle{c}"]
+            s_c = None
+            if states is not None:
+                s_c = states if cycles == 1 else states[f"cycle{c}"]
+            x, aux, new_s = _cycle_body(p_c, x, positions, cfg, rules, mode,
+                                        s_c)
+            for k, v in aux.items():
+                aux_sum[k] = aux_sum.get(k, 0.0) + v
+            if new_s:
+                if cycles == 1:
+                    out_states = new_s
+                else:
+                    out_states[f"cycle{c}"] = new_s
+        return x, aux_sum, (out_states or None)
+
+    # ---- scan over cycles -------------------------------------------------
+    def body(carry, xs):
+        xc, aux_acc = carry
+        params_c, states_c = xs
+        xc, aux, new_states = _cycle_body(params_c, xc, positions, cfg,
+                                          rules, mode, states_c)
+        aux_acc = {k: aux_acc.get(k, 0.0) + aux.get(k, 0.0)
+                   for k in set(aux_acc) | set(aux)}
+        return (xc, aux_acc), (new_states or 0)
+
+    if mode == "train":
+        body = _remat_wrap(body, cfg.remat_policy)
+
+    aux0: Dict[str, jax.Array] = {}
+    if any(f == "moe" for _, f in pattern):
+        aux0 = {"moe_balance": jnp.zeros((), jnp.float32),
+                "moe_zloss": jnp.zeros((), jnp.float32)}
+    (x, aux_sum), ys = jax.lax.scan(body, (x, aux0), (params, states))
+    new_states = ys if states is not None or mode == "prefill" else None
+    if isinstance(new_states, int):
+        new_states = None
+    return x, aux_sum, new_states
+
+
+# ---------------------------------------------------------------------------
+# Recurrent/KV cache specs (decode & prefill states)
+# ---------------------------------------------------------------------------
+
+def _mixer_state_specs(cfg: ModelConfig, mixer: str, batch: int,
+                       max_len: int) -> Optional[Dict[str, ParamSpec]]:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    di = cfg.ssm_inner
+    if mixer == "attn" and cfg.kv_layout == "tiered":
+        from ..kvcache.lsm_cache import cache_config_for
+        cc = cache_config_for(max_len, cfg.kv_tail_cap, cfg.kv_l1_comps)
+        kvh = ("batch", "kv_seq", "act_kv_heads", "head_dim")
+        scalar = lambda: ParamSpec((), (), "zeros", dtype=jnp.int32)
+        return {
+            "tail_k": ParamSpec((batch, cc.tail_cap, kv, hd),
+                                ("batch", None, "act_kv_heads", "head_dim"),
+                                "zeros", dtype=jnp.bfloat16),
+            "tail_v": ParamSpec((batch, cc.tail_cap, kv, hd),
+                                ("batch", None, "act_kv_heads", "head_dim"),
+                                "zeros", dtype=jnp.bfloat16),
+            "tail_len": scalar(),
+            "l1_k": ParamSpec((cc.l1_comps, batch, cc.tail_cap, kv, hd),
+                              (None, "batch", None, "act_kv_heads",
+                               "head_dim"), "zeros", dtype=jnp.bfloat16),
+            "l1_v": ParamSpec((cc.l1_comps, batch, cc.tail_cap, kv, hd),
+                              (None, "batch", None, "act_kv_heads",
+                               "head_dim"), "zeros", dtype=jnp.bfloat16),
+            "l1_count": scalar(),
+            "l2_k": ParamSpec((batch, cc.max_len, kv, hd), kvh, "zeros",
+                              dtype=jnp.bfloat16),
+            "l2_v": ParamSpec((batch, cc.max_len, kv, hd), kvh, "zeros",
+                              dtype=jnp.bfloat16),
+            "l2_len": scalar(),
+            "flushes": scalar(),
+            "merges": scalar(),
+        }
+    if mixer == "attn":
+        return {
+            "k": ParamSpec((batch, max_len, kv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", "head_dim"),
+                           "zeros", dtype=jnp.bfloat16),
+            "v": ParamSpec((batch, max_len, kv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", "head_dim"),
+                           "zeros", dtype=jnp.bfloat16),
+        }
+    if mixer == "mamba":
+        return {
+            "conv": ParamSpec((batch, cfg.ssm_conv - 1, di),
+                              ("batch", None, "ssm_inner_act"), "zeros",
+                              dtype=jnp.bfloat16),
+            "ssm": ParamSpec((batch, di, cfg.ssm_state),
+                             ("batch", "ssm_inner_act", None), "zeros",
+                             dtype=jnp.float32),
+        }
+    if mixer == "mlstm":
+        mi = 2 * cfg.d_model
+        nh = cfg.xlstm_heads
+        dh = mi // nh
+        return {
+            "conv": ParamSpec((batch, cfg.ssm_conv - 1, mi),
+                              ("batch", None, "ssm_inner_act"), "zeros",
+                              dtype=jnp.bfloat16),
+            "C": ParamSpec((batch, nh, dh, dh), ("batch", None, None, None),
+                           "zeros", dtype=jnp.float32),
+            "n": ParamSpec((batch, nh, dh), ("batch", None, None), "zeros",
+                           dtype=jnp.float32),
+            "m": ParamSpec((batch, nh), ("batch", None), "zeros",
+                           dtype=jnp.float32),
+        }
+    if mixer == "slstm":
+        d = cfg.d_model
+        return {k: ParamSpec((batch, d), ("batch", "act_model"),
+                             "ones" if k == "n" else "zeros",
+                             dtype=jnp.float32)
+                for k in ("c", "n", "m", "h")}
+    raise ValueError(mixer)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Decode-state ParamSpec tree matching run_stack's ``states`` layout."""
+    pattern = cfg.layer_pattern
+    cycles = cfg.num_layers // len(pattern)
+    per_pos = {f"pos{i}": _mixer_state_specs(cfg, m, batch, max_len)
+               for i, (m, _) in enumerate(pattern)}
+    per_pos = {k: v for k, v in per_pos.items() if v is not None}
+    if cfg.scan_layers and cycles > 1:
+        return stacked(per_pos, cycles)
+    if cycles == 1:
+        return per_pos
+    return {f"cycle{c}": {f"pos{i}": _mixer_state_specs(cfg, m, batch, max_len)
+                          for i, (m, _) in enumerate(pattern)}
+            for c in range(cycles)}

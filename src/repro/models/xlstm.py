@@ -1,0 +1,345 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential with recurrent gate weights).  arXiv:2405.04517.
+
+The mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = o_t ⊙ (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))
+is another associative first-order recurrence — the same merge algebra as the
+LSM component merge (DESIGN.md §2) — so we evaluate it chunkwise: a parallel
+(attention-like) intra-chunk term plus a sequentially carried (C, n, m) state,
+with exp-gating stabilized by the running max ``m`` exactly as flash attention
+stabilizes softmax.
+
+sLSTM has *recurrent gate weights* (h_{t-1} feeds the gates), which breaks
+chunk parallelism — the paper accepts this for its state-tracking power.  We
+scan over time; its cost is O(S·d·d/nh) (block-diagonal recurrent matrices).
+
+Sharding: the expanded inner dim is TP-sharded over `model`; heads of the
+125m config (4) do not divide the model axis (16) so the safe rule replicates
+them (cf. runtime/sharding.py docstring).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..runtime.sharding import ShardingRules, DEFAULT_RULES, constrain
+from .layers import ParamSpec
+from .ssm import _causal_conv
+
+__all__ = [
+    "mlstm_specs", "mlstm_mixer", "mlstm_prefill", "mlstm_decode",
+    "init_mlstm_state", "slstm_specs", "slstm_mixer", "slstm_prefill",
+    "slstm_decode", "init_slstm_state",
+]
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = 2 * cfg.d_model
+    nh = cfg.xlstm_heads
+    assert di % nh == 0
+    return di, nh, di // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di, nh, dh = _mlstm_dims(cfg)
+    return {
+        "up": ParamSpec((d, 2 * di), ("d_model", "ssm_inner"), "scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv, di), ("conv_k", "ssm_inner"),
+                            "scaled", 1.0),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "wq": ParamSpec((di, di), ("ssm_inner", None), "scaled"),
+        "wk": ParamSpec((di, di), ("ssm_inner", None), "scaled"),
+        "wv": ParamSpec((di, di), ("ssm_inner", None), "scaled"),
+        # scalar i/f gate per head from the block input
+        "w_if": ParamSpec((di, 2 * nh), ("ssm_inner", None), "scaled"),
+        "b_if": ParamSpec((2 * nh,), (None,), "zeros", dtype=jnp.float32),
+        "ln_scale": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "down": ParamSpec((di, d), ("ssm_inner", "d_model"), "scaled"),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    di, nh, dh = _mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkvif(params, xc, cfg, state_conv=None):
+    """Shared projections.  xc: [B, S, di] pre-conv; returns q,k,v [B,S,nh,dh],
+    logi/logf [B,S,nh], new conv ring."""
+    di, nh, dh = _mlstm_dims(cfg)
+    conv = _causal_conv(xc, params["conv_w"], params["conv_b"],
+                        prev=state_conv)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(xc.dtype)
+    q = jnp.einsum("bsi,ij->bsj", conv, params["wq"],
+                   preferred_element_type=jnp.float32).astype(xc.dtype)
+    k = jnp.einsum("bsi,ij->bsj", conv, params["wk"],
+                   preferred_element_type=jnp.float32).astype(xc.dtype)
+    v = jnp.einsum("bsi,ij->bsj", xc, params["wv"],
+                   preferred_element_type=jnp.float32).astype(xc.dtype)
+    B, S = xc.shape[:2]
+    q = q.reshape(B, S, nh, dh)
+    k = k.reshape(B, S, nh, dh) / math.sqrt(dh)
+    v = v.reshape(B, S, nh, dh)
+    gates = jnp.einsum("bsi,ig->bsg", xc, params["w_if"],
+                       preferred_element_type=jnp.float32) + params["b_if"]
+    logi, logf_raw = gates[..., :nh], gates[..., nh:]
+    logf = jax.nn.log_sigmoid(logf_raw)
+    return q, k, v, logi, logf
+
+
+def _mlstm_chunk_scan(q, k, v, logi, logf, carry, chunk: int):
+    """Chunkwise stabilized mLSTM.  q,k,v: [B,S,nh,dh]; logi/logf: [B,S,nh].
+
+    carry: (C [B,nh,dh,dh] storing C/exp(m), n [B,nh,dh], m [B,nh]).
+    Returns (h [B,S,nh,dh], new carry).
+    """
+    B, S, nh, dh = q.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def to_chunks(x):
+        return x.reshape((B, nc, chunk) + x.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, x.ndim + 1)))
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    lic, lfc = map(to_chunks, (logi, logf))
+
+    def step(carry, inp):
+        C, n, m = carry                      # C,n already divided by exp(m)
+        qj, kj, vj, li, lf = inp             # [B,c,nh,*]
+        F = jnp.cumsum(lf, axis=1)           # [B,c,nh] inclusive
+        total = F[:, -1]                     # [B,nh]
+        # intra-chunk decay matrix: D̃[t,s] = F_t - F_s + li_s  (s <= t)
+        Dt = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dt = jnp.where(tri[None, :, :, None], Dt, -1e30)   # [B,t,s,nh]
+        m_intra = jnp.max(Dt, axis=2)                      # [B,c,nh]
+        m_inter = F + m[:, None]                           # [B,c,nh]
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(Dt - m_t[:, :, None, :])               # [B,t,s,nh]
+        S_ts = jnp.einsum("bthd,bshd->btsh", qj, kj) * D
+        inter_w = jnp.exp(m_inter - m_t)                   # [B,c,nh]
+        h_num = jnp.einsum("btsh,bshd->bthd", S_ts, vj) \
+            + inter_w[..., None] * jnp.einsum("bthd,bhde->bthe", qj, C)
+        n_dot = jnp.einsum("btsh->bth", S_ts) \
+            + inter_w * jnp.einsum("bthd,bhd->bth", qj, n)
+        denom = jnp.maximum(jnp.abs(n_dot), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+        # ---- carry update to chunk end ----
+        m_next = jnp.maximum(total + m, jnp.max(
+            total[:, None] - F + li, axis=1))              # [B,nh]
+        kw = jnp.exp(total[:, None] - F + li - m_next[:, None])  # [B,c,nh]
+        C_new = jnp.exp(total + m - m_next)[..., None, None] * C \
+            + jnp.einsum("bshd,bshe,bsh->bhde", kj, vj, kw)
+        n_new = jnp.exp(total + m - m_next)[..., None] * n \
+            + jnp.einsum("bshd,bsh->bhd", kj, kw)
+        return (C_new, n_new, m_next), h
+
+    carry, hc = jax.lax.scan(step, carry, (qc, kc, vc, lic, lfc))
+    h = hc.transpose(1, 0, 2, 3, 4).reshape(B, Sp, nh, dh)[:, :S]
+    return h, carry
+
+
+def _mlstm_block(params, x, cfg, rules, carry, conv_prev):
+    di, nh, dh = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dz->bsz", x, params["up"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xc, z = jnp.split(up, 2, axis=-1)
+    xc = constrain(xc, ("batch", "seq", "ssm_inner_act"), rules)
+    q, k, v, logi, logf = _mlstm_qkvif(params, xc, cfg, conv_prev)
+    h, carry = _mlstm_chunk_scan(q, k, v, logi, logf, carry, cfg.seq_chunk)
+    h = h.reshape(x.shape[0], x.shape[1], di).astype(x.dtype)
+    # per-channel norm then output gate
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    h = (hf * jax.lax.rsqrt(var + 1e-5)
+         * params["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsz,zd->bsd", h, params["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = constrain(out, ("batch", "seq_blocks", "act_model"), rules)
+    # new conv ring = last k-1 pre-conv inputs
+    kk = cfg.ssm_conv
+    padn = max(0, kk - 1 - x.shape[1])
+    padz = jnp.zeros((x.shape[0], padn, di), xc.dtype)
+    ring = jnp.concatenate([padz, xc[:, -(kk - 1):]], axis=1) if kk > 1 \
+        else jnp.zeros((x.shape[0], 0, di), xc.dtype)
+    return out, carry, ring
+
+
+def mlstm_mixer(params, x, positions, cfg: ModelConfig,
+                rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    del positions
+    carry = (jnp.zeros((x.shape[0], cfg.xlstm_heads,) + ((2 * cfg.d_model)
+             // cfg.xlstm_heads,) * 2, jnp.float32),
+             jnp.zeros((x.shape[0], cfg.xlstm_heads,
+                        (2 * cfg.d_model) // cfg.xlstm_heads), jnp.float32),
+             jnp.full((x.shape[0], cfg.xlstm_heads), -1e30, jnp.float32))
+    out, _, _ = _mlstm_block(params, x, cfg, rules, carry, None)
+    return out
+
+
+def mlstm_prefill(params, x, positions, cfg: ModelConfig,
+                  rules: ShardingRules = DEFAULT_RULES):
+    del positions
+    st0 = init_mlstm_state(cfg, x.shape[0], x.dtype)
+    out, carry, ring = _mlstm_block(params, x, cfg, rules,
+                                    (st0["C"], st0["n"], st0["m"]), None)
+    return out, {"conv": ring, "C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def mlstm_decode(params, x, state, pos, cfg: ModelConfig,
+                 rules: ShardingRules = DEFAULT_RULES):
+    """One token: sequential stabilized update.  x: [B, 1, d]."""
+    del pos
+    di, nh, dh = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dz->bsz", x, params["up"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xc, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkvif(params, xc, cfg, state["conv"])
+    ring = jnp.concatenate([state["conv"][:, 1:],
+                            xc[:, :1].astype(state["conv"].dtype)], axis=1) \
+        if cfg.ssm_conv > 1 else state["conv"]
+    q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    li, lf = logi[:, 0], logf[:, 0]                     # [B,nh]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)[..., None]
+    iw = jnp.exp(li - m_new)[..., None]
+    C_new = fw[..., None] * C + jnp.einsum("bhd,bhe->bhde",
+                                           k1 * iw, v1)
+    n_new = fw * n + k1 * iw
+    num = jnp.einsum("bhd,bhde->bhe", q1, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x.shape[0], 1, di).astype(x.dtype)
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    h = (hf * jax.lax.rsqrt(var + 1e-5)
+         * params["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsz,zd->bsd", h, params["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"conv": ring, "C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, nh = cfg.d_model, cfg.xlstm_heads
+    dh = d // nh
+    return {
+        # input weights for 4 gates (z, i, f, o), fused
+        "w_in": ParamSpec((d, 4 * d), ("d_model", None), "scaled"),
+        "b_in": ParamSpec((4 * d,), (None,), "zeros", dtype=jnp.float32),
+        # block-diagonal recurrent weights per head per gate
+        "r": ParamSpec((4, nh, dh, dh), (None, None, None, None),
+                       "normal", 1.0 / math.sqrt(dh)),
+        "ln_scale": ParamSpec((d,), ("act_model",), "ones"),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(params, xg, state, cfg: ModelConfig):
+    """One step.  xg: [B, 4d] = W_in x + b (precomputed); returns new state."""
+    d, nh = cfg.d_model, cfg.xlstm_heads
+    dh = d // nh
+    B = xg.shape[0]
+    h_heads = state["h"].reshape(B, nh, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", h_heads,
+                     params["r"].astype(jnp.float32))   # [4,B,nh,dh]
+    rec = rec.reshape(4, B, d)
+    g = xg.reshape(B, 4, d).transpose(1, 0, 2) + rec
+    zt = jnp.tanh(g[0])
+    it, ft, ot = g[1], g[2], jax.nn.sigmoid(g[3])
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + state["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lf + state["m"] - m_new)
+    c_new = f_p * state["c"] + i_p * zt
+    n_new = f_p * state["n"] + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def _slstm_seq(params, x, state, cfg: ModelConfig):
+    """x: [B, S, d] -> (h [B, S, d], final state).  Sequential scan."""
+    xg = jnp.einsum("bsd,dg->bsg", x, params["w_in"],
+                    preferred_element_type=jnp.float32) + params["b_in"]
+
+    def step(st, xg_t):
+        st2 = _slstm_cell(params, xg_t, st, cfg)
+        return st2, st2["h"]
+
+    state, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), state
+
+
+def _slstm_out(params, hs, x, rules):
+    hf = hs.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    out = (hf * jax.lax.rsqrt(var + 1e-5)
+           * params["ln_scale"].astype(jnp.float32)).astype(x.dtype)
+    return constrain(out, ("batch", "seq_blocks", "act_model"), rules)
+
+
+def slstm_mixer(params, x, positions, cfg: ModelConfig,
+                rules: ShardingRules = DEFAULT_RULES) -> jax.Array:
+    del positions
+    hs, _ = _slstm_seq(params, x, init_slstm_state(cfg, x.shape[0]), cfg)
+    return _slstm_out(params, hs, x, rules)
+
+
+def slstm_prefill(params, x, positions, cfg: ModelConfig,
+                  rules: ShardingRules = DEFAULT_RULES):
+    del positions
+    hs, state = _slstm_seq(params, x, init_slstm_state(cfg, x.shape[0]), cfg)
+    return _slstm_out(params, hs, x, rules), state
+
+
+def slstm_decode(params, x, state, pos, cfg: ModelConfig,
+                 rules: ShardingRules = DEFAULT_RULES):
+    del pos
+    xg = jnp.einsum("bsd,dg->bsg", x, params["w_in"],
+                    preferred_element_type=jnp.float32) + params["b_in"]
+    st = _slstm_cell(params, xg[:, 0], state, cfg)
+    return _slstm_out(params, st["h"][:, None], x, rules), st

@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression for the pod-axis reduction.
+
+Beyond-paper distributed-optimization trick (task deliverable): the pod axis
+crosses the slowest links (inter-pod DCN/ICI), so the cross-pod gradient
+all-reduce is the wire-dominant collective of a multi-pod step.  We compress
+it ~3.8x with blockwise-int8 quantization (collectives.int8_encode) and keep
+the quantization residual in an *error-feedback* buffer added back to the
+next step's gradient — the standard EF-SGD construction that preserves
+convergence (Karimireddy et al., 2019).
+
+Two entry points:
+  * ``ef_quantize``/``ef_state`` — pure-pytree transform usable under GSPMD
+    (quantize-dequantize with residual carry; the wire saving is realized
+    when the reduction runs via ``collectives.compressed_psum`` under
+    shard_map — see training/train_step.py::make_train_step(compress=...)).
+  * property-tested in tests/test_collectives.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.collectives import int8_decode, int8_encode
+
+__all__ = ["ef_state", "ef_quantize"]
+
+
+def ef_state(params: Any) -> Any:
+    """Residual buffers, shaped/sharded like the gradients (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _leaf(g: jax.Array, e: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32) + e
+    q, scale = int8_encode(gf, block=block)
+    deq = int8_decode(q, scale, gf.shape)
+    return deq.astype(g.dtype), gf - deq
+
+
+def ef_quantize(grads: Any, err: Any, *, block: int = 256
+                ) -> Tuple[Any, Any]:
+    """Quantize-dequantize each gradient leaf with error feedback.
+
+    Returns (compressed_grads, new_err).  The returned gradients are exactly
+    the values a quantized all-reduce would contribute from this shard, so
+    applying them under the normal (GSPMD-inserted) reduction models the
+    compressed collective's *numerics*; the wire saving itself is measured in
+    benchmarks/collectives_bench.py via compressed_psum.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [_leaf(g, e, block) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))

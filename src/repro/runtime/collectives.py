@@ -1,0 +1,151 @@
+"""Exchange operators — the Hyracks Connector library on ICI.
+
+Paper §4.1 lists six Connectors; each has a collective twin on a TPU mesh:
+
+  OneToOneConnector            -> no-op (partitioning already agrees)
+  MToNPartitioningConnector    -> all_to_all     (repartition by a new key)
+  MToNReplicatingConnector     -> all_gather     (replicate to all peers)
+  MToNPartitioningMerging      -> reduce_scatter (partition + merge)
+  global aggregation fan-in    -> psum / all_reduce
+  LocalityAwareMToN            -> hierarchical reduce (model-axis first, then
+                                  data, then pod — cheapest links first)
+
+These helpers are shard_map-level building blocks used where we take explicit
+control of the schedule (gradient reduction, distributed decode merge,
+compressed collectives).  Most model code instead relies on sharding
+constraints + GSPMD, per DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "one_to_one", "replicate", "partition_by", "partition_merge",
+    "hierarchical_psum", "int8_encode", "int8_decode", "compressed_psum",
+    "logsumexp_merge",
+]
+
+
+# ---------------------------------------------------------------------------
+# Connector twins (for use inside shard_map bodies)
+# ---------------------------------------------------------------------------
+
+def one_to_one(x: jax.Array) -> jax.Array:
+    return x
+
+
+def replicate(x: jax.Array, axis: str) -> jax.Array:
+    """MToNReplicating: gather everyone's partition along a mesh axis."""
+    return jax.lax.all_gather(x, axis, tiled=True)
+
+
+def partition_by(x: jax.Array, axis: str, *, split_dim: int,
+                 concat_dim: int) -> jax.Array:
+    """MToNPartitioning: re-key data across the axis (all_to_all)."""
+    return jax.lax.all_to_all(x, axis, split_axis=split_dim,
+                              concat_axis=concat_dim, tiled=True)
+
+
+def partition_merge(x: jax.Array, axis: str, *, scatter_dim: int) -> jax.Array:
+    """MToNPartitioningMerging: combine + repartition (reduce_scatter)."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_dim,
+                                tiled=True)
+
+
+def hierarchical_psum(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """LocalityAware fan-in: reduce over the cheapest axes first.  Axes must
+    be ordered fastest-link-first (e.g. ("model", "data", "pod"))."""
+    for ax in axes:
+        x = jax.lax.psum(x, ax)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (beyond-paper distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def int8_encode(x: jax.Array, *, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization.  Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decode(q: jax.Array, scale: jax.Array, shape: Tuple[int, ...],
+                dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis: str, *, block: int = 256) -> jax.Array:
+    """All-reduce of an int8-compressed tensor over ``axis``.
+
+    Quantize -> all_gather(q, scales) -> dequantize + sum.  For an axis of
+    size A this moves ~A * n * (1 + 4/block) bytes instead of the 4n-byte
+    float ring all-reduce; at A=2 (pod axis) the wire bytes drop ~3.8x.
+    The quantization error is bounded by scale/2 per element; pair with
+    error feedback (optim.grad_compress) for training-neutral behavior.
+    """
+    q, scale = int8_encode(x, block=block)
+    qg = jax.lax.all_gather(q, axis)            # [A, nblk, block] int8
+    sg = jax.lax.all_gather(scale, axis)        # [A, nblk, 1] f32
+    deq = qg.astype(jnp.float32) * sg
+    total = jnp.sum(deq, axis=0)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return total.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Logsumexp merge — the LSM component-merge, distributed
+# ---------------------------------------------------------------------------
+
+def logsumexp_merge(partials: Sequence[Tuple[jax.Array, jax.Array, jax.Array]]
+                    ) -> jax.Array:
+    """Merge per-component partial attention results.
+
+    Each partial is (out, m, l): un-normalized weighted value sum ``out`` with
+    running max ``m`` and normalizer ``l`` (flash-attention state).  Merging K
+    partials is associative/commutative — exactly the property LSM merge
+    relies on for disk components (paper §4.3) — so components can be merged
+    in any order, pairwise, or across mesh shards via psum.
+    """
+    out, m, l = partials[0]
+    for o2, m2, l2 in partials[1:]:
+        m_new = jnp.maximum(m, m2)
+        a = jnp.exp(m - m_new)
+        b = jnp.exp(m2 - m_new)
+        out = out * a[..., None] + o2 * b[..., None]
+        l = l * a + l2 * b
+        m = m_new
+    return out / jnp.maximum(l, 1e-20)[..., None]
+
+
+def distributed_logsumexp_merge(out: jax.Array, m: jax.Array, l: jax.Array,
+                                axis: str) -> jax.Array:
+    """Merge flash-attention partials held by shards along ``axis``.
+
+    Used for context-parallel decode: each shard attends over its KV slice;
+    the merge is two cheap collectives (max + weighted psum) instead of
+    gathering the KV cache.
+    """
+    m_glob = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - m_glob)
+    out = jax.lax.psum(out * corr[..., None], axis)
+    l = jax.lax.psum(l * corr, axis)
+    return out / jnp.maximum(l, 1e-20)[..., None]

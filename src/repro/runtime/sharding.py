@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules — the Algebricks analogue for tensors.
+
+AsterixDB's optimizer (paper §4.2, §5.1) is *rule-based*: deterministic "safe"
+rewrites assign partitioning properties to each operator, and data only moves
+when the required property differs from the delivered one.  We port that idea:
+every tensor dimension carries a *logical axis name*; a rule table maps logical
+axes to mesh axes; ``constrain`` applies the resulting PartitionSpec.  GSPMD
+then inserts the minimal exchanges (collectives) exactly where partitioning
+changes — the Connector-insertion step of Hyracks job construction.
+
+Rules are *safe* in the paper's sense: a mapping is dropped (axis replicated)
+whenever the mesh axis does not divide the dimension, rather than failing.
+Per-arch "hints" (paper Query 14) override entries in the table.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import current_mesh
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "LONG_CONTEXT_RULES",
+           "DECODE_KVSEQ_RULES", "resolve_spec", "constrain",
+           "named_sharding", "logical_axes_spec"]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Ordered mapping logical-axis -> mesh axis (or tuple of mesh axes)."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...]
+
+    def lookup(self, logical: str) -> MeshAxes:
+        for k, v in self.table:
+            if k == logical:
+                return v
+        return None
+
+    def override(self, **kv: MeshAxes) -> "ShardingRules":
+        """Per-arch hints (paper §5.1 'query optimization hints')."""
+        tbl = [(k, kv.pop(k)) if k in kv else (k, v) for k, v in self.table]
+        tbl.extend(kv.items())
+        return ShardingRules(tuple(tbl))
+
+
+# The "safe rules" table.  Activation batch over (pod, data); model-parallel
+# width axes over `model`; parameter non-width axes over `data` (= FSDP / ZeRO-3,
+# the tensor analogue of hash-partitioning datasets by primary key).
+DEFAULT_RULES = ShardingRules((
+    # -- activations
+    ("batch",        ("pod", "data")),
+    ("seq",          None),
+    ("act_model",    None),          # d_model of activations: replicated
+    ("act_ff",       "model"),       # hidden activations: TP-sharded
+    ("act_heads",    "model"),
+    ("act_kv_heads", "model"),
+    ("kv_seq",       None),          # KV-cache sequence axis
+    ("head_dim",     None),
+    ("act_experts",  "model"),
+    # -- parameters (2-D sharded: width over `model`, depth over `data`)
+    ("vocab",        "model"),
+    ("d_model",      "data"),        # FSDP axis of weight matrices
+    ("heads",        "model"),
+    ("kv_heads",     "model"),
+    ("d_ff",         "model"),
+    ("experts",      "model"),
+    ("ssm_state",    None),
+    ("ssm_inner",    "model"),
+    ("ssm_inner_act", "model"),      # activation twin of ssm_inner
+    ("layers",       None),          # scan-over-layers leading axis
+    ("conv_k",       None),
+))
+
+# Context-parallel overlay for long_500k decode (batch=1): the KV cache is
+# sharded over BOTH batch-free axes; per-shard partial attention merges via
+# logsumexp reductions (the distributed LSM-component merge, DESIGN.md §2).
+LONG_CONTEXT_RULES = DEFAULT_RULES.override(
+    kv_seq=("data", "model"),
+    act_kv_heads=None,
+    act_heads=None,
+    batch="pod",
+)
+
+# Decode overlay for archs whose KV-head count does not divide the model
+# axis (kv < 16): the cache's sequence axis takes `model` instead, otherwise
+# a 32k decode cache replicates 16x and blows past HBM (observed 54 GiB/dev
+# for internlm2 decode_32k before this rule).
+DECODE_KVSEQ_RULES = DEFAULT_RULES.override(
+    kv_seq="model",
+    act_kv_heads=None,
+    act_heads=None,
+)
+
+
+def _axes_tuple(a: MeshAxes) -> Tuple[str, ...]:
+    if a is None:
+        return ()
+    if isinstance(a, str):
+        return (a,)
+    return tuple(a)
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 rules: ShardingRules, mesh: Mesh) -> P:
+    """Map logical axis names to a PartitionSpec, applying the safety rules:
+    (1) a mesh axis may be used at most once; (2) the product of mesh-axis
+    sizes must divide the dimension; otherwise the dim is replicated."""
+    if len(shape) != len(logical):
+        raise ValueError(f"shape {tuple(shape)} vs logical axes {logical}")
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical):
+        chosen: Tuple[str, ...] = ()
+        if name is not None:
+            want = [ax for ax in _axes_tuple(rules.lookup(name))
+                    if ax in mesh.shape and ax not in used]
+            # greedy prefix that divides the dimension
+            acc = []
+            prod = 1
+            for ax in want:
+                if dim % (prod * mesh.shape[ax]) == 0:
+                    acc.append(ax)
+                    prod *= mesh.shape[ax]
+            chosen = tuple(acc)
+            used.update(chosen)
+        if len(chosen) == 0:
+            spec.append(None)
+        elif len(chosen) == 1:
+            spec.append(chosen[0])
+        else:
+            spec.append(chosen)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def named_sharding(shape: Sequence[int], logical: Sequence[Optional[str]],
+                   rules: ShardingRules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical, rules, mesh))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]],
+              rules: ShardingRules = DEFAULT_RULES,
+              mesh: Optional[Mesh] = None) -> jax.Array:
+    """``with_sharding_constraint`` driven by logical axis names.  No-op when
+    no mesh is active (single-device tests).  Falls back to the jax
+    ``with mesh:`` context when our own use_mesh() stack is empty."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        try:
+            from jax._src import mesh as _mesh_lib
+            env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+        except (ImportError, AttributeError):  # pragma: no cover
+            from jax.interpreters import pxla
+            env_mesh = pxla.thread_resources.env.physical_mesh
+        if not env_mesh.empty:
+            mesh = env_mesh
+    if mesh is None or np.prod(list(mesh.shape.values())) == 1:
+        return x
+    spec = resolve_spec(x.shape, logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logical_axes_spec(logical: Sequence[Optional[str]],
+                      rules: ShardingRules, mesh: Mesh,
+                      shape: Sequence[int]) -> P:
+    """Public alias used by checkpoint restore to recompute specs on a new
+    mesh (elastic scaling)."""
+    return resolve_spec(shape, logical, rules, mesh)

@@ -1,0 +1,115 @@
+"""Straggler detection + elastic-degradation policy (1000+-node deliverable).
+
+Two mechanisms (both simulated deterministically on CPU, designed for the
+fleet):
+
+1. **Data-layer racing** — data/feeds.RedundantIntake already races N intake
+   replicas first-wins (exactly-once by deterministic cursors).
+
+2. **Step-time watchdog** (this module) — per-step wall times feed a robust
+   outlier detector (median + MAD); a persistent straggler triggers the
+   elastic policy: checkpoint (validity-bit component), drop the slow hosts,
+   and resume on a smaller mesh (checkpoint/manager's elastic restore
+   re-resolves every PartitionSpec against the new mesh).
+
+On a real fleet the wall-times come per-host from the coordinator's
+heartbeats; here the Trainer feeds its local step times (tests inject
+synthetic slow hosts).
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["StragglerWatchdog", "ElasticPolicy"]
+
+
+@dataclass
+class StragglerWatchdog:
+    """Flags hosts whose step times are persistent robust outliers.
+
+    ``threshold``: multiple of the median absolute deviation above the
+    median that counts as slow.  ``patience``: consecutive slow steps before
+    a host is reported (transient jitter is not a straggler).
+    """
+
+    threshold: float = 4.0
+    patience: int = 3
+    window: int = 32
+    history: Dict[str, List[float]] = field(default_factory=dict)
+    strikes: Dict[str, int] = field(default_factory=dict)
+
+    def observe(self, step_times: Dict[str, float]) -> List[str]:
+        """Feed one step's per-host wall times; returns hosts to evict."""
+        times = list(step_times.values())
+        med = statistics.median(times)
+        mad = statistics.median([abs(t - med) for t in times]) or \
+            max(med * 0.01, 1e-9)
+        flagged = []
+        for host, t in step_times.items():
+            self.history.setdefault(host, []).append(t)
+            del self.history[host][:-self.window]
+            if t > med + self.threshold * mad:
+                self.strikes[host] = self.strikes.get(host, 0) + 1
+            else:
+                self.strikes[host] = 0
+            if self.strikes[host] >= self.patience:
+                flagged.append(host)
+        return flagged
+
+    def slowdown(self, host: str) -> float:
+        """Estimated slowdown factor vs the fleet median (for logs)."""
+        all_times = [t for ts in self.history.values() for t in ts]
+        if not all_times or host not in self.history:
+            return 1.0
+        return (statistics.median(self.history[host])
+                / statistics.median(all_times))
+
+
+@dataclass
+class ElasticPolicy:
+    """Decides the degraded mesh after evictions.
+
+    The production mesh axes must keep their divisibility contract, so the
+    policy shrinks the `data` axis to the largest power-of-two of surviving
+    hosts and reports the new (data, model) shape; the caller checkpoints,
+    re-creates the mesh, and restores (elastic restore is exercised in
+    tests/test_system.py::test_elastic_checkpoint_restore_across_meshes).
+    """
+
+    model_axis: int = 16
+    min_data_axis: int = 1
+
+    def degraded_mesh(self, surviving_hosts: int,
+                      chips_per_host: int = 4) -> Tuple[int, int]:
+        chips = surviving_hosts * chips_per_host
+        data = max(self.min_data_axis, 1)
+        while data * 2 * self.model_axis <= chips:
+            data *= 2
+        return (data, self.model_axis)
+
+
+def run_with_watchdog(step_fn: Callable[[], float], hosts: Sequence[str],
+                      host_latency: Callable[[str, int], float],
+                      steps: int,
+                      watchdog: Optional[StragglerWatchdog] = None,
+                      on_evict: Optional[Callable[[List[str]], None]] = None,
+                      ) -> Dict[str, object]:
+    """Simulation driver: run ``steps`` steps, synthesizing per-host wall
+    times as base_step_time x host_latency(host, step); evictions fire the
+    callback once and stop the run (the caller restarts elastically)."""
+    wd = watchdog or StragglerWatchdog()
+    evicted: List[str] = []
+    for s in range(steps):
+        base = step_fn()
+        times = {h: base * host_latency(h, s) for h in hosts}
+        bad = wd.observe(times)
+        if bad:
+            evicted = bad
+            if on_evict is not None:
+                on_evict(bad)
+            break
+    return {"evicted": evicted, "steps_run": s + 1,
+            "slowdowns": {h: wd.slowdown(h) for h in evicted}}

@@ -1,0 +1,103 @@
+"""ADM open/closed record types (paper §2.1) — unit + property tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adm
+
+
+def _person(open_=True):
+    return adm.RecordType("Person", (
+        adm.Field("id", adm.INT32),
+        adm.Field("name", adm.STRING),
+        adm.Field("zip", adm.STRING, optional=True),
+    ), open=open_)
+
+
+def test_closed_type_rejects_extras():
+    rt = _person(open_=False)
+    with pytest.raises(adm.ValidationError):
+        rt.validate({"id": 1, "name": "a", "hobby": "chess"})
+
+
+def test_open_type_keeps_extras():
+    rt = _person(open_=True)
+    rec = rt.validate({"id": 1, "name": "a", "hobby": "chess"})
+    assert rec["hobby"] == "chess"
+
+
+def test_missing_required_field():
+    rt = _person()
+    with pytest.raises(adm.ValidationError):
+        rt.validate({"id": 1})
+
+
+def test_optional_field_roundtrip():
+    rt = _person()
+    enc = rt.encode(rt.validate({"id": 1, "name": "a"}))
+    dec, _ = rt.decode(enc)
+    assert dec == {"id": 1, "name": "a"}
+
+
+def test_key_only_encoding_is_larger():
+    """Table 2: KeyOnly (open) instances carry field names inline."""
+    rt = _person(open_=True)
+    ko = rt.key_only("id")
+    rec = {"id": 7, "name": "NameNameName", "zip": "92617"}
+    assert ko.encoded_size(rec) > rt.encoded_size(rec)
+
+
+def test_int32_range():
+    with pytest.raises(adm.ValidationError):
+        adm.INT32.validate(2 ** 40)
+
+
+def test_nested_record_and_bag():
+    addr = adm.RecordType("Addr", (adm.Field("city", adm.STRING),),
+                          open=False)
+    rt = adm.RecordType("U", (
+        adm.Field("id", adm.INT32),
+        adm.Field("address", addr),
+        adm.Field("friend-ids", adm.BagType(adm.INT32)),
+        adm.Field("employment", adm.OrderedListType(addr)),
+    ))
+    rec = rt.validate({"id": 1, "address": {"city": "irvine"},
+                       "friend-ids": [3, 1, 2],
+                       "employment": [{"city": "x"}]})
+    assert rec["friend-ids"] == [1, 2, 3]  # bags canonicalize
+    enc = rt.encode(rec)
+    dec, _ = rt.decode(enc)
+    assert dec == rec
+
+
+@given(st.dictionaries(
+    st.text(min_size=1, max_size=8).filter(lambda s: s not in ("id",)),
+    st.one_of(st.integers(min_value=-2**40, max_value=2**40),
+              st.text(max_size=12), st.booleans(),
+              st.floats(allow_nan=False, allow_infinity=False),
+              st.lists(st.integers(min_value=0, max_value=100), max_size=4)),
+    max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_open_fields_roundtrip_property(extras):
+    """Any JSON-ish open payload encodes/decodes losslessly."""
+    rt = adm.RecordType("T", (adm.Field("id", adm.INT32),), open=True)
+    rec = rt.validate({"id": 1, **extras})
+    dec, _ = rt.decode(rt.encode(rec))
+    assert dec == rec
+
+
+def test_dataverse_catalog_metadata_as_data():
+    dv = adm.Dataverse("TinyTest")
+    dv.create_type(_person())
+    with pytest.raises(adm.ValidationError):
+        dv.create_type(_person())
+
+    class DS:  # minimal dataset stub
+        dtype = _person()
+        primary_key = ("id",)
+        num_partitions = 4
+
+    dv.create_dataset("People", DS())
+    cat = dv.catalog_records()
+    assert cat[0]["dataset"] == "People"
+    assert cat[0]["primary_key"] == ["id"]

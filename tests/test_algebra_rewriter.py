@@ -1,0 +1,116 @@
+"""Algebricks-analogue plan rewriter (paper §4.2, §5.1): rule behavior."""
+
+import pytest
+
+from repro.core import algebra as A
+from repro.core.rewriter import Catalog, IndexInfo, RewriteConfig, optimize
+
+
+def _catalog():
+    return Catalog(
+        primary_keys={"Users": ("id",), "Msgs": ("message-id",)},
+        indexes=[IndexInfo("ix_since", "Users", "user-since"),
+                 IndexInfo("ix_author", "Msgs", "author-id")],
+        num_partitions=4)
+
+
+def _ops(phys):
+    return [op.kind for op in phys.all_ops()]
+
+
+def test_index_access_path_with_post_validate():
+    """R2: SELECT(sargable) over SCAN becomes Figure 6's plan: secondary
+    search -> SORT_PK -> primary lookup -> POST-VALIDATE."""
+    plan = A.select(A.scan("Users"), pred=lambda r: True,
+                    fields=["user-since"],
+                    ranges={"user-since": (1, 2)})
+    phys = optimize(plan, _catalog())
+    kinds = _ops(phys)
+    assert kinds == ["POST_VALIDATE_SELECT", "PRIMARY_INDEX_LOOKUP",
+                     "SORT_PK", "SECONDARY_INDEX_SEARCH"]
+
+
+def test_no_index_falls_back_to_scan():
+    plan = A.select(A.scan("Users"), pred=lambda r: True,
+                    fields=["name"], ranges={"name": ("a", "b")})
+    phys = optimize(plan, _catalog())
+    assert "SECONDARY_INDEX_SEARCH" not in _ops(phys)
+    assert "DATASET_SCAN" in _ops(phys)
+
+
+def test_skip_index_hint():
+    plan = A.select(A.scan("Users"), pred=lambda r: True,
+                    fields=["user-since"], ranges={"user-since": (1, 2)},
+                    hints=["skip-index"])
+    phys = optimize(plan, _catalog())
+    assert "SECONDARY_INDEX_SEARCH" not in _ops(phys)
+
+
+def test_equijoin_is_hash_join_with_minimal_exchange():
+    """R3+R6: both sides hash-partitioned only if they aren't already."""
+    plan = A.join(A.scan("Msgs"), A.scan("Users"), ["author-id"], ["id"])
+    phys = optimize(plan, _catalog())
+    assert phys.kind == "HYBRID_HASH_JOIN"
+    lconn, rconn = phys.connectors
+    # left: scan is partitioned by message-id, join needs author-id -> move
+    assert lconn.name == "MToNHashPartition"
+    # right: Users is ALREADY hash-partitioned by id == join key -> no move
+    assert rconn.name == "OneToOne"
+
+
+def test_indexnl_hint():
+    plan = A.join(A.scan("Msgs"), A.scan("Users"), ["author-id"], ["id"],
+                  hints=["indexnl"])
+    phys = optimize(plan, _catalog())
+    assert phys.kind == "INDEX_NL_JOIN"
+    assert phys.attrs["right_dataset"] == "Users"
+
+
+def test_agg_split_local_global():
+    """R4 (Figure 6): LOCAL_AGG per partition -> one GLOBAL_AGG."""
+    plan = A.aggregate(A.scan("Msgs"), {"c": ("count", "*")})
+    phys = optimize(plan, _catalog())
+    assert _ops(phys) == ["GLOBAL_AGG", "LOCAL_AGG", "DATASET_SCAN"]
+    assert phys.connectors[0].name == "ReplicateToOne"
+    # disabling the split: single global agg
+    phys2 = optimize(plan, _catalog(),
+                     RewriteConfig(split_aggregation=False))
+    assert "LOCAL_AGG" not in _ops(phys2)
+
+
+def test_groupby_split_preagg():
+    plan = A.group_by(A.scan("Msgs"), ["author-id"], {"c": ("count", "*")})
+    phys = optimize(plan, _catalog())
+    assert _ops(phys) == ["GLOBAL_GROUP", "LOCAL_PREAGG", "DATASET_SCAN"]
+    assert phys.connectors[0].name == "MToNHashPartition"
+
+
+def test_limit_pushed_into_sort():
+    """R5 (beyond paper §5.3.2): ORDERBY+LIMIT -> per-partition TopK."""
+    plan = A.limit(A.order_by(A.scan("Msgs"), ["timestamp"]), 3)
+    phys = optimize(plan, _catalog())
+    assert _ops(phys) == ["TOPK_MERGE", "LOCAL_TOPK", "DATASET_SCAN"]
+    off = optimize(plan, _catalog(),
+                   RewriteConfig(push_limit_into_sort=False))
+    assert _ops(off)[0] == "STREAM_LIMIT"
+
+
+def test_select_pushdown_below_join():
+    plan = A.select(
+        A.join(A.scan("Msgs", columns=("message-id", "author-id")),
+               A.scan("Users", columns=("id", "name")),
+               ["author-id"], ["id"]),
+        pred=lambda r: True, fields=["name"])
+    phys = optimize(plan, _catalog())
+    # the select must sit below the join on the Users side
+    assert phys.kind == "HYBRID_HASH_JOIN"
+    right = phys.children[1]
+    assert right.kind == "STREAM_SELECT"
+
+
+def test_partitioning_satisfies():
+    h = A.hash_partitioned("id")
+    assert h.satisfies(A.RANDOM)
+    assert h.satisfies(A.hash_partitioned("id"))
+    assert not h.satisfies(A.hash_partitioned("other"))
+    assert not A.RANDOM.satisfies(h)

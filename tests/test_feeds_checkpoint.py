@@ -1,0 +1,189 @@
+"""Data feeds (paper §2.4/§4.5), checkpoint shadowing, and the fault-tolerant
+trainer: integration tests of the ingestion + recovery story."""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.data.feeds import (BatchAssembler, Feed, FeedJoint,
+                              RedundantIntake, SocketAdaptor,
+                              SyntheticTokenAdaptor)
+from repro.optim.adamw import OptimizerConfig
+from repro.training.trainer import InjectedFailure, Trainer
+
+
+# ---------------------------------------------------------------------------
+# feeds
+# ---------------------------------------------------------------------------
+
+def test_primary_feed_to_store():
+    seen = []
+    feed = Feed("f", adaptor=SyntheticTokenAdaptor(8, 100),
+                store=lambda rs: seen.extend(rs))
+    feed.pump(5)
+    assert len(seen) == 5 and feed.cursor == 5
+    assert seen[0]["tokens"].shape == (8,)
+
+
+def test_feed_udf_transform_and_filter():
+    feed = Feed("f", adaptor=SyntheticTokenAdaptor(8, 100),
+                udfs=[lambda r: r if r["doc_id"] % 2 == 0 else None,
+                      lambda r: {**r, "extra": 1}])
+    n = feed.pump(10)
+    assert n == 5                      # odd docs filtered
+    assert all("extra" in r for r in feed.joint.buffer)
+
+
+def test_secondary_feed_subscribes_to_joint():
+    """Paper §2.4: secondary feeds consume another feed's joint."""
+    primary = Feed("p", adaptor=SyntheticTokenAdaptor(8, 100))
+    collected = []
+    secondary = Feed("s", source_joint=primary.joint,
+                     store=lambda rs: collected.extend(rs))
+    primary.pump(6)
+    secondary.pump(4)
+    secondary.pump(4)
+    assert [r["doc_id"] for r in collected] == [0, 1, 2, 3, 4, 5]
+
+
+def test_joint_multiple_subscribers_and_window():
+    joint = FeedJoint(window=16)
+    joint.subscribe("a")
+    joint.subscribe("b")
+    joint.publish(list(range(6)))
+    assert joint.consume("a", 3) == [0, 1, 2]
+    assert joint.consume("b", 6) == list(range(6))
+    joint.publish(list(range(6, 12)))
+    assert joint.consume("a", 100) == list(range(3, 12))
+
+
+def test_joint_fall_behind_raises():
+    joint = FeedJoint(window=4)
+    joint.subscribe("slow")
+    joint.publish(list(range(4)))
+    joint.subscribe("fast")
+    joint.publish(list(range(4, 12)))   # slow falls out of the window
+    with pytest.raises(RuntimeError):
+        joint.consume("slow", 1)
+
+
+def test_deterministic_replay_after_seek():
+    a1 = SyntheticTokenAdaptor(16, 1000, seed=3)
+    ref = a1.next_batch(7)
+    a1.seek(0)
+    again = a1.next_batch(7)
+    for r1, r2 in zip(ref, again):
+        np.testing.assert_array_equal(r1["tokens"], r2["tokens"])
+
+
+def test_redundant_intake_straggler_mitigation():
+    """First-wins racing returns identical records regardless of winner."""
+    mk = lambda: SyntheticTokenAdaptor(8, 100, seed=5)
+    lat = lambda replica, cursor: (0.5 if replica == 0 else 0.01) \
+        if cursor >= 8 else (0.01 if replica == 0 else 0.5)
+    red = RedundantIntake([mk(), mk()], latency=lat)
+    recs = red.next_batch(8) + red.next_batch(8)
+    assert red.stats["wins"] == [1, 1]   # each replica won one batch
+    oracle = SyntheticTokenAdaptor(8, 100, seed=5).next_batch(16)
+    for r1, r2 in zip(recs, oracle):
+        np.testing.assert_array_equal(r1["tokens"], r2["tokens"])
+
+
+def test_socket_adaptor_push_pull():
+    sock = SocketAdaptor()
+    feed = Feed("s", adaptor=sock)
+    sock.push([{"x": i} for i in range(5)])
+    assert feed.pump(3) == 3
+    assert feed.pump(10) == 2
+
+
+def test_batch_assembler():
+    asm = BatchAssembler(global_batch=4)
+    feed = Feed("f", adaptor=SyntheticTokenAdaptor(8, 100), store=asm)
+    feed.pump(3)
+    assert asm.take() is None
+    feed.pump(3)
+    b = asm.take()
+    assert b["tokens"].shape == (4, 8) and b["labels"].shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def _state(x=1.0):
+    return {"params": {"w": np.full((4, 4), x, np.float32)},
+            "opt": {"step": np.int32(3)}}
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            cm.save(s, _state(s), extra={"feed": {"cursor": s * 10}})
+        assert cm.valid_steps() == [3, 4]
+        step, state, extra = cm.load_latest()
+        assert step == 4
+        assert state["params"]["w"][0, 0] == 4.0
+        assert extra["feed"]["cursor"] == 40
+
+
+def test_crash_before_validity_is_invisible():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=3)
+        cm.save(1, _state(1.0), extra={})
+        cm.save(2, _state(2.0), extra={}, crash_before_validity=True)
+        got = cm.load_latest()
+        assert got[0] == 1                      # torn component ignored...
+        assert cm.valid_steps() == [1]          # ...and removed
+
+
+def test_async_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=3)
+        cm.save(7, _state(7.0), extra={}, asynchronous=True)
+        cm.wait()
+        assert cm.valid_steps() == [7]
+
+
+def test_wal_torn_tail_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.log_step({"step": 1})
+        cm.log_step({"step": 2})
+        with open(cm.wal_path, "a") as f:
+            f.write('{"step": 3, "loss"')      # torn write
+        assert [r["step"] for r in cm.read_wal()] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# trainer fault tolerance (integration)
+# ---------------------------------------------------------------------------
+
+def test_trainer_crash_recovery_is_deterministic():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=20)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        t_ref = Trainer(cfg, global_batch=4, seq_len=16, ckpt_dir=d1,
+                        opt_cfg=opt)
+        t_ref.init_or_restore()
+        t_ref.run(6)
+        ref = [h["loss"] for h in t_ref.history]
+
+        t1 = Trainer(cfg, global_batch=4, seq_len=16, ckpt_dir=d2,
+                     opt_cfg=opt)
+        t1.init_or_restore()
+        with pytest.raises(InjectedFailure):
+            t1.run(6, checkpoint_every=2, fail_at_step=4)
+        t2 = Trainer(cfg, global_batch=4, seq_len=16, ckpt_dir=d2,
+                     opt_cfg=opt)
+        t2.init_or_restore()
+        assert t2.step == 4
+        t2.run(2)
+        rec = [h["loss"] for h in t2.history]
+        np.testing.assert_allclose(ref[4:], rec, rtol=1e-4)

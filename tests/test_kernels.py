@@ -1,0 +1,157 @@
+"""Per-kernel allclose vs the ref.py oracles: shape/dtype sweeps in
+interpret mode (the kernel body runs in Python on CPU), plus hypothesis
+property tests on the merge algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.lsm_decode_attention import decode_partial
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bk", [
+    (1, 128, 4, 4, 64, 64, 64),       # MHA
+    (2, 256, 8, 2, 32, 128, 64),      # GQA 4:1
+    (1, 512, 4, 1, 16, 128, 128),     # MQA
+    (2, 64, 2, 2, 128, 32, 32),       # wide head
+])
+def test_flash_attention_sweep(B, S, H, KV, hd, bq, bk, dtype):
+    q = _mk((B, S, H, hd), dtype)
+    k = _mk((B, S, KV, hd), dtype)
+    v = _mk((B, S, KV, hd), dtype)
+    got = ops.flash_attention(q, k, v, True, bq, bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_noncausal():
+    q = _mk((1, 128, 2, 32), jnp.float32)
+    k = _mk((1, 128, 2, 32), jnp.float32)
+    v = _mk((1, 128, 2, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, False, 64, 64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_unaligned_seq_pads():
+    q = _mk((1, 100, 2, 32), jnp.float32)
+    k = _mk((1, 100, 2, 32), jnp.float32)
+    v = _mk((1, 100, 2, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, True, 64, 64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_oracle():
+    q = _mk((1, 64, 2, 16), jnp.float32)
+    k = _mk((1, 64, 2, 16), jnp.float32)
+    v = _mk((1, 64, 2, 16), jnp.float32)
+
+    def f_kernel(q):
+        return jnp.sum(ops.flash_attention(q, k, v, True, 32, 32) ** 2)
+
+    def f_ref(q):
+        return jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+
+    np.testing.assert_allclose(jax.grad(f_kernel)(q), jax.grad(f_ref)(q),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LSM decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,hd,Sc", [
+    (2, 8, 4, 32, 256), (1, 4, 4, 64, 128), (3, 6, 2, 16, 384)])
+def test_decode_partial_sweep(B, H, KV, hd, Sc, dtype):
+    q = _mk((B, H, hd), dtype)
+    k = _mk((B, Sc, KV, hd), dtype)
+    v = _mk((B, Sc, KV, hd), dtype)
+    vl = jnp.int32(Sc - 17)
+    got = decode_partial(q, k, v, vl, block_k=128, interpret=True)
+    want = ref.decode_partial_ref(q, k, v, vl)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+def test_lsm_merge_equals_flat_attention():
+    """Attention over N components merged associatively == flat attention
+    over the concatenation (the LSM merge-correctness property)."""
+    B, H, KV, hd = 2, 4, 2, 32
+    q = _mk((B, H, hd), jnp.float32)
+    comps, ks, vs = [], [], []
+    for sc, vl in [(128, 128), (128, 40), (256, 200)]:
+        k, v = _mk((B, sc, KV, hd), jnp.float32), _mk((B, sc, KV, hd),
+                                                      jnp.float32)
+        comps.append((k, v, jnp.int32(vl)))
+        ks.append(k[:, :vl])
+        vs.append(v[:, :vl])
+    got = ops.lsm_decode_attention(q, comps)
+    kc, vc = jnp.concatenate(ks, 1), jnp.concatenate(vs, 1)
+    want = ref.flash_attention_ref(q[:, None], kc, vc, causal=False)[:, 0]
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(1, 5), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_merge_associativity_property(n_parts, seed):
+    """logsumexp merge is order-independent (LSM merge in any order)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(n_parts):
+        acc = jnp.asarray(rng.normal(size=(2, 3, 8)), jnp.float32)
+        m = jnp.asarray(rng.normal(size=(2, 3)), jnp.float32)
+        l = jnp.asarray(rng.uniform(0.5, 2.0, size=(2, 3)), jnp.float32)
+        parts.append((acc, m, l))
+    a = ref.merge_partials_ref(parts)
+    b = ref.merge_partials_ref(list(reversed(parts)))
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(256, 64), (100, 96), (4, 7, 128)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = _mk(shape, dtype)
+    w = _mk(shape[-1:], jnp.float32)
+    got = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_rmsnorm_kernel_direct():
+    x = _mk((512, 128), jnp.float32)
+    w = _mk((128,), jnp.float32)
+    got = rmsnorm_kernel(x, w, block_rows=128, interpret=True)
+    np.testing.assert_allclose(got, ref.rmsnorm_ref(x, w), atol=1e-5,
+                               rtol=1e-5)

@@ -1,0 +1,97 @@
+"""LSM index framework (paper §4.3-4.4): flush/merge/recovery + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsm import (LSMIndex, TieredMergePolicy, TOMBSTONE, recover)
+
+
+def test_flush_and_lookup():
+    ix = LSMIndex(flush_threshold=4)
+    for i in range(10):
+        ix.insert(i, {"v": i})
+    assert ix.stats["flushes"] >= 2
+    for i in range(10):
+        assert ix.lookup(i) == {"v": i}
+    assert ix.lookup(99) is None
+
+
+def test_newest_wins_across_components():
+    ix = LSMIndex(flush_threshold=2)
+    ix.insert(1, "old")
+    ix.insert(2, "x")          # triggers flush
+    ix.insert(1, "new")
+    assert ix.lookup(1) == "new"
+
+
+def test_delete_tombstone_and_merge_collapse():
+    ix = LSMIndex(flush_threshold=2, merge_policy=TieredMergePolicy(k=2))
+    ix.insert(1, "a")
+    ix.insert(2, "b")
+    ix.delete(1)
+    ix.insert(3, "c")          # flush -> merge may fire
+    assert ix.lookup(1) is None
+    assert sorted(k for k, _ in ix.items()) == [2, 3]
+
+
+def test_range_merges_all_components():
+    ix = LSMIndex(flush_threshold=3)
+    for i in range(20):
+        ix.insert(i, i * 10)
+    got = ix.range(5, 12)
+    assert [k for k, _ in got] == list(range(5, 13))
+
+
+def test_crash_recovery_drops_invalid_components():
+    ix = LSMIndex(flush_threshold=100)
+    for i in range(10):
+        ix.insert(i, i)
+    comp = ix.flush(crash_before_validity=True)   # torn flush
+    assert not comp.valid
+    rec = recover(ix.components, ix.wal)
+    # the invalid component is ignored but the WAL replays everything
+    assert sorted(k for k, _ in rec.items()) == list(range(10))
+
+
+def test_recovery_equivalence_after_crash():
+    """Recovery from (components + WAL) == state before crash."""
+    ix = LSMIndex(flush_threshold=4)
+    ops = [("i", k, k * 2) for k in range(17)] + \
+          [("d", k, None) for k in (3, 9)] + [("i", 3, 99)]
+    for op, k, v in ops:
+        (ix.insert if op == "i" else lambda k, v=None: ix.delete(k))(k, v) \
+            if op == "i" else ix.delete(k)
+    before = list(ix.items())
+    rec = recover(ix.components, ix.wal)
+    assert list(rec.items()) == before
+
+
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=0, max_value=30),
+                          st.integers()), max_size=80),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_lsm_vs_dict_property(ops, threshold):
+    """LSM index behaves exactly like a dict under any op sequence."""
+    ix = LSMIndex(flush_threshold=threshold)
+    oracle = {}
+    for is_insert, k, v in ops:
+        if is_insert:
+            ix.insert(k, v)
+            oracle[k] = v
+        else:
+            ix.delete(k)
+            oracle.pop(k, None)
+    assert dict(ix.items()) == oracle
+    # and recovery preserves it
+    rec = recover(ix.components, ix.wal)
+    assert dict(rec.items()) == oracle
+
+
+def test_tiered_merge_policy_bounds_components():
+    ix = LSMIndex(flush_threshold=2, merge_policy=TieredMergePolicy(k=3))
+    for i in range(200):
+        ix.insert(i, i)
+    assert len([c for c in ix.components if c.valid]) < 12
+    assert ix.stats["merges"] >= 1

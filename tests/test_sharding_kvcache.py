@@ -1,0 +1,129 @@
+"""Sharding rule table (the tensor Algebricks) + LSM-tiered KV cache tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref as kref
+from repro.kvcache.lsm_cache import (TieredCacheConfig, init_tiered_cache,
+                                     tiered_decode_attention)
+from repro.runtime.sharding import (DECODE_KVSEQ_RULES, DEFAULT_RULES,
+                                    LONG_CONTEXT_RULES, resolve_spec)
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH3 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_rule_resolution():
+    spec = resolve_spec((256, 4096), ("batch", "seq"), DEFAULT_RULES, MESH3)
+    assert spec == P(("pod", "data"))
+    spec = resolve_spec((12288, 33792), ("d_model", "d_ff"), DEFAULT_RULES,
+                        MESH)
+    assert spec == P("data", "model")
+
+
+def test_safe_rule_drops_nondividing_axis():
+    """The paper's 'safe rules': replicate rather than fail (kv=8 vs 16)."""
+    spec = resolve_spec((8192, 8, 128), ("d_model", "kv_heads", "head_dim"),
+                        DEFAULT_RULES, MESH)
+    assert spec == P("data")            # kv dim replicated
+    # starcoder2 heads=24: 24 % 16 != 0 -> replicated
+    spec = resolve_spec((3072, 24, 128), ("d_model", "heads", "head_dim"),
+                        DEFAULT_RULES, MESH)
+    assert spec == P("data")
+
+
+def test_axis_used_at_most_once():
+    spec = resolve_spec((1024, 1024), ("d_ff", "act_ff"), DEFAULT_RULES,
+                        MESH)
+    # both want "model"; only the first gets it
+    assert spec == P("model")
+
+
+def test_long_context_rules_shard_kv_seq_two_axes():
+    spec = resolve_spec((1, 524288, 8, 128),
+                        ("batch", "kv_seq", "act_kv_heads", "head_dim"),
+                        LONG_CONTEXT_RULES, MESH)
+    assert spec == P(None, ("data", "model"))
+
+
+def test_decode_kvseq_rules():
+    spec = resolve_spec((128, 32768, 8, 128),
+                        ("batch", "kv_seq", "act_kv_heads", "head_dim"),
+                        DECODE_KVSEQ_RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_override_is_hint_mechanism():
+    rules = DEFAULT_RULES.override(seq="model")
+    assert rules.lookup("seq") == "model"
+    assert DEFAULT_RULES.lookup("seq") is None   # original untouched
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_resolve_spec_always_divides(d0, d1):
+    """Property: any chosen sharding divides its dimension exactly."""
+    spec = resolve_spec((d0, d1), ("d_model", "d_ff"), DEFAULT_RULES, MESH)
+    sizes = {"data": 16, "model": 16}
+    for dim, entry in zip((d0, d1), tuple(spec) + (None,) * 2):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        assert dim % prod == 0
+
+
+# ---------------------------------------------------------------------------
+# tiered KV cache
+# ---------------------------------------------------------------------------
+
+def test_tiered_cache_exact_over_long_decode():
+    rng = np.random.default_rng(0)
+    B, KV, H, hd = 2, 2, 4, 16
+    ccfg = TieredCacheConfig(tail_cap=8, l1_comps=3, max_len=64)
+    cache = init_tiered_cache(B, KV, hd, ccfg, jnp.float32)
+    S = 40
+    ks = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    step = jax.jit(lambda c, q, k, v: tiered_decode_attention(c, q, k, v,
+                                                              ccfg))
+    for t in range(S):
+        out, cache = step(cache, qs[:, t], ks[:, t:t + 1], vs[:, t:t + 1])
+        want = kref.flash_attention_ref(qs[:, t:t + 1], ks[:, :t + 1],
+                                        vs[:, :t + 1], causal=False)[:, 0]
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+    assert int(cache["flushes"]) == (S - 1) // ccfg.tail_cap
+    assert int(cache["merges"]) == 1
+
+
+def test_tiered_cache_lsm_counters_match_policy():
+    """Flush fires when the tail fills; merge fires when the L1 ring fills —
+    the merge-policy contract of paper §4.3."""
+    B, KV, hd = 1, 1, 8
+    ccfg = TieredCacheConfig(tail_cap=4, l1_comps=2, max_len=32)
+    cache = init_tiered_cache(B, KV, hd, ccfg, jnp.float32)
+    k = jnp.ones((B, 1, KV, hd), jnp.float32)
+    q = jnp.ones((B, 2, hd), jnp.float32)
+    step = jax.jit(lambda c: tiered_decode_attention(c, q, k, k, ccfg)[1])
+    for _ in range(17):
+        cache = step(cache)
+    # 17 tokens, tail=4: flushes at tokens 5,9,13,17 -> 4; merges at ring
+    # full (2 comps) -> 2
+    assert int(cache["flushes"]) == 4
+    assert int(cache["merges"]) == 2
+    total = int(cache["l2_len"]) + int(cache["l1_count"]) * 4 + \
+        int(cache["tail_len"])
+    assert total == 17

@@ -1,0 +1,168 @@
+"""rtree (spatial, paper Q5) and keyword (fuzzy text, paper Q6) index paths:
+plan shape, executor results vs oracles, and Table-1 function units."""
+
+import datetime as dt
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tinysocial import build_dataverse
+from repro.core import algebra as A
+from repro.core.functions import (edit_distance, edit_distance_check,
+                                  gram_tokens, interval_bin,
+                                  similarity_jaccard, spatial_cell,
+                                  spatial_distance, word_tokens)
+from repro.core.rewriter import RewriteConfig
+from repro.storage.query import run_query
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    _, ds = build_dataverse(num_users=80, num_messages=500,
+                            num_partitions=4, flush_threshold=64,
+                            with_indexes=True)
+    msgs = ds["MugshotMessages"]
+    msgs.create_index("sender-location", kind="rtree")
+    msgs.create_index("message", kind="keyword")
+    return ds
+
+
+# ---------------------------------------------------------------------------
+# Table-1 functions
+# ---------------------------------------------------------------------------
+
+def test_edit_distance_basics():
+    # the paper's Q6 example: "tonite" fuzzy-matches "tonight" at ed <= 3
+    assert edit_distance("tonight", "tonite") == 3
+    assert edit_distance("", "abc") == 3
+    assert edit_distance("same", "same") == 0
+    assert edit_distance_check("tonight", "tonite", 3)
+    assert not edit_distance_check("tonight", "xyz", 3)
+
+
+@given(st.text(max_size=12), st.text(max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_edit_distance_metric_properties(a, b):
+    d = edit_distance(a, b)
+    assert d == edit_distance(b, a)                    # symmetry
+    assert (d == 0) == (a == b)                        # identity
+    assert d <= max(len(a), len(b))
+
+
+def test_tokens_and_jaccard():
+    assert word_tokens("Hello, World! 42") == ["hello", "world", "42"]
+    assert similarity_jaccard({"a", "b"}, {"b", "c"}) == pytest.approx(1 / 3)
+    assert len(gram_tokens("abc", 3)) == 5
+
+
+def test_interval_bin():
+    origin = dt.datetime(2014, 1, 1)
+    w = dt.timedelta(days=7)
+    t = dt.datetime(2014, 1, 20, 13, 0)
+    b = interval_bin(t, origin, w)
+    assert b == dt.datetime(2014, 1, 15)
+    assert b <= t < b + w
+
+
+# ---------------------------------------------------------------------------
+# Q5: spatial selection through the rtree path
+# ---------------------------------------------------------------------------
+
+def test_spatial_index_plan_and_results(tiny):
+    msgs = tiny["MugshotMessages"]
+    center, radius = (33.5, -117.5), 0.12
+    plan = A.select(
+        A.scan("MugshotMessages"),
+        pred=lambda r: spatial_distance(r["sender-location"],
+                                        center) <= radius,
+        fields=["sender-location"],
+        spatial=("sender-location", center, radius))
+    rows, ex = run_query(plan, tiny)
+    oracle = [m for m in msgs.scan()
+              if spatial_distance(m["sender-location"], center) <= radius]
+    assert sorted(r["message-id"] for r in rows) == \
+        sorted(m["message-id"] for m in oracle)
+    assert "SPATIAL_INDEX_SEARCH" in ex.stats.op_rows
+    # the index pruned: candidates << dataset
+    assert ex.stats.op_rows["SPATIAL_INDEX_SEARCH"] < len(msgs.scan())
+    # and post-validation dropped grid false positives
+    assert ex.stats.op_rows["POST_VALIDATE_SELECT"] <= \
+        ex.stats.op_rows["SPATIAL_INDEX_SEARCH"]
+
+
+def test_spatial_no_index_fallback(tiny):
+    center, radius = (33.5, -117.5), 0.1
+    plan = A.select(
+        A.scan("MugshotMessages"),
+        pred=lambda r: spatial_distance(r["sender-location"],
+                                        center) <= radius,
+        fields=["sender-location"],
+        spatial=("sender-location", center, radius))
+    rows_ix, _ = run_query(plan, tiny)
+    rows_sc, ex = run_query(plan, tiny,
+                            config=RewriteConfig(use_indexes=False))
+    assert sorted(r["message-id"] for r in rows_ix) == \
+        sorted(r["message-id"] for r in rows_sc)
+    assert "SPATIAL_INDEX_SEARCH" not in ex.stats.op_rows
+
+
+# ---------------------------------------------------------------------------
+# Q6: fuzzy keyword selection
+# ---------------------------------------------------------------------------
+
+def test_keyword_exact_match(tiny):
+    msgs = tiny["MugshotMessages"]
+    plan = A.select(
+        A.scan("MugshotMessages"),
+        pred=lambda r: "tonight" in word_tokens(r["message"]),
+        fields=["message"],
+        keyword=("message", "tonight", 0))
+    rows, ex = run_query(plan, tiny)
+    oracle = [m for m in msgs.scan()
+              if "tonight" in word_tokens(m["message"])]
+    assert sorted(r["message-id"] for r in rows) == \
+        sorted(m["message-id"] for m in oracle)
+    assert "KEYWORD_INDEX_SEARCH" in ex.stats.op_rows
+
+
+def test_keyword_fuzzy_match(tiny):
+    """paper Q6: ~= 'tonight' with edit distance <= 3 matches 'tonite'."""
+    msgs = tiny["MugshotMessages"]
+    # plant a typo'd message
+    donor = msgs.scan()[0]
+    rec = dict(donor)
+    rec["message-id"] = 99999
+    rec["message"] = "see you tonite maybe"
+    msgs.insert(rec)
+    plan = A.select(
+        A.scan("MugshotMessages"),
+        pred=lambda r: any(edit_distance_check(t, "tonight", 3)
+                           for t in word_tokens(r["message"])),
+        fields=["message"],
+        keyword=("message", "tonight", 3))
+    rows, _ = run_query(plan, tiny)
+    oracle = [m for m in msgs.scan()
+              if any(edit_distance_check(t, "tonight", 3)
+                     for t in word_tokens(m["message"]))]
+    assert sorted(r["message-id"] for r in rows) == \
+        sorted(m["message-id"] for m in oracle)
+    assert any(r["message-id"] == 99999 for r in rows)
+    msgs.delete(99999)
+
+
+def test_keyword_index_maintained_under_update(tiny):
+    msgs = tiny["MugshotMessages"]
+    donor = dict(msgs.scan()[0])
+    donor["message-id"] = 77777
+    donor["message"] = "zzuniquetoken here"
+    msgs.insert(donor)
+    pks = []
+    for i in range(msgs.num_partitions):
+        pks += msgs.keyword_search_partition(i, "message", "zzuniquetoken")
+    assert pks == [77777]
+    msgs.delete(77777)
+    pks = []
+    for i in range(msgs.num_partitions):
+        pks += msgs.keyword_search_partition(i, "message", "zzuniquetoken")
+    assert pks == []

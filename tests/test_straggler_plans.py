@@ -1,0 +1,120 @@
+"""Straggler watchdog/elastic policy tests + hypothesis-generated query plans
+executed against a brute-force oracle (the strongest correctness property of
+the query engine: ANY plan, ANY rewrite configuration, same answer)."""
+
+import datetime as dt
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.tinysocial import build_dataverse
+from repro.core import algebra as A
+from repro.core.rewriter import RewriteConfig
+from repro.storage.query import run_query
+from repro.training.straggler import (ElasticPolicy, StragglerWatchdog,
+                                      run_with_watchdog)
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_persistent_straggler_only():
+    wd = StragglerWatchdog(threshold=4.0, patience=3)
+    hosts = [f"h{i}" for i in range(8)]
+    lat = lambda h, s: 6.0 if h == "h3" and s >= 2 else 1.0
+    out = run_with_watchdog(lambda: 0.1, hosts, lat, steps=20, watchdog=wd)
+    assert out["evicted"] == ["h3"]
+    assert out["steps_run"] == 5          # 2 warmup + patience 3
+    assert out["slowdowns"]["h3"] > 3.0
+
+
+def test_watchdog_ignores_transient_jitter():
+    wd = StragglerWatchdog(threshold=4.0, patience=3)
+    hosts = [f"h{i}" for i in range(8)]
+    # every host occasionally slow, never persistently
+    lat = lambda h, s: 6.0 if (s + hash(h)) % 5 == 0 else 1.0
+    out = run_with_watchdog(lambda: 0.1, hosts, lat, steps=30, watchdog=wd)
+    assert out["evicted"] == []
+    assert out["steps_run"] == 30
+
+
+def test_elastic_policy_degraded_mesh():
+    pol = ElasticPolicy(model_axis=16)
+    assert pol.degraded_mesh(64, 4) == (16, 16)      # full pod
+    assert pol.degraded_mesh(63, 4) == (8, 16)       # one host lost
+    assert pol.degraded_mesh(33, 4) == (8, 16)
+    assert pol.degraded_mesh(8, 4) == (2, 16)
+
+
+def test_watchdog_plus_elastic_end_to_end():
+    evictions = []
+    pol = ElasticPolicy(model_axis=16)
+    out = run_with_watchdog(
+        lambda: 0.05, [f"h{i}" for i in range(64)],
+        lambda h, s: 9.0 if h == "h17" else 1.0, steps=10,
+        on_evict=lambda bad: evictions.append(
+            pol.degraded_mesh(64 - len(bad), 4)))
+    assert out["evicted"] == ["h17"]
+    assert evictions == [(8, 16)]        # checkpoint -> restore on 8x16
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random plans vs brute-force oracle
+# ---------------------------------------------------------------------------
+
+_DV, _DS = build_dataverse(num_users=60, num_messages=250,
+                           num_partitions=3, flush_threshold=32)
+_USERS = _DS["MugshotUsers"].scan()
+_MSGS = _DS["MugshotMessages"].scan()
+_T0 = dt.datetime(2014, 1, 1)
+
+
+def _oracle(lo_days, hi_days, agg_by_author, topk):
+    lo = _T0 + dt.timedelta(days=lo_days)
+    hi = _T0 + dt.timedelta(days=hi_days)
+    rows = [m for m in _MSGS if lo <= m["timestamp"] <= hi]
+    if not agg_by_author:
+        return len(rows)
+    from collections import Counter
+    counts = Counter(m["author-id"] for m in rows)
+    return sorted(counts.values(), reverse=True)[:topk]
+
+
+@given(lo=st.integers(0, 100), span=st.integers(0, 60),
+       agg=st.booleans(), topk=st.integers(1, 5),
+       use_idx=st.booleans(), split=st.booleans(), push=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_random_plans_match_oracle(lo, span, agg, topk, use_idx, split,
+                                   push):
+    lo_t = _T0 + dt.timedelta(days=lo)
+    hi_t = _T0 + dt.timedelta(days=lo + span)
+    sel = A.select(A.scan("MugshotMessages"),
+                   pred=lambda r: lo_t <= r["timestamp"] <= hi_t,
+                   fields=["timestamp"],
+                   ranges={"timestamp": (lo_t, hi_t)})
+    cfgq = RewriteConfig(use_indexes=use_idx, split_aggregation=split,
+                         push_limit_into_sort=push)
+    if agg:
+        plan = A.limit(A.order_by(
+            A.group_by(sel, ["author-id"], {"cnt": ("count", "*")}),
+            ["cnt"], desc=True), topk)
+        rows, _ = run_query(plan, _DS, config=cfgq)
+        got = [r["cnt"] for r in rows]
+        assert got == _oracle(lo, lo + span, True, topk)
+    else:
+        plan = A.aggregate(sel, {"n": ("count", "*")})
+        rows, _ = run_query(plan, _DS, config=cfgq)
+        assert rows[0]["n"] == _oracle(lo, lo + span, False, 0)
+
+
+@given(key_field=st.sampled_from(["author-id"]),
+       use_idx=st.booleans(), hint_nl=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_join_plans_match_oracle(key_field, use_idx, hint_nl):
+    plan = A.join(A.scan("MugshotMessages"), A.scan("MugshotUsers"),
+                  [key_field], ["id"], hints=["indexnl"] if hint_nl else [])
+    rows, _ = run_query(plan, _DS, config=RewriteConfig(use_indexes=use_idx))
+    assert len(rows) == len(_MSGS)       # FK join: every message matches
+    ids = {u["id"] for u in _USERS}
+    assert all(r[key_field] in ids for r in rows[:20])
