@@ -89,6 +89,26 @@ def run() -> list:
     (res_s, t_s) = _timed(lambda: run_query(agg, ds))
     (res_n, t_n) = _timed(lambda: run_query(
         agg, ds, config=RewriteConfig(split_aggregation=False)))
+
+    # -- the same aggregate, row engine vs columnar engine ------------------
+    agg_v = A.aggregate(
+        A.select(A.scan("MugshotMessages"),
+                 pred=lambda rr: rr["timestamp"] >= mlo,
+                 fields=["timestamp"],
+                 ranges={"timestamp": (mlo, dt.datetime(2015, 1, 1))},
+                 ranges_exact=True, hints=["skip-index"]),
+        {"cnt": ("count", "*"), "avg_author": ("avg", "author-id")})
+    (res_vr, t_vr) = _timed(lambda: run_query(agg_v, ds))
+    (res_vc, t_vc) = _timed(lambda: run_query(agg_v, ds, vectorize=True))
+    from .columnar_bench import approx_equal
+    assert approx_equal(res_vr[0], res_vc[0])   # exact on CPU; f32 on TPU
+    rows.append({"bench": "table3_agg_columnar",
+                 "us_per_call": t_vr * 1e6,
+                 "us_columnar": t_vc * 1e6,
+                 "derived": f"columnar engine {t_vr / t_vc:.1f}x vs "
+                            f"row engine on the same plan "
+                            f"({res_vc[1].stats.rows_vectorized} rows "
+                            f"vectorized)"})
     moved_split = res_s[1].stats.rows_moved.get("ReplicateToOne", 0)
     moved_nosplit = res_n[1].stats.rows_moved.get("ReplicateToOne", 0)
     rows.append({"bench": "table3_agg",

@@ -54,6 +54,23 @@ plan = A.select(A.scan("MugshotUsers"),
 rows, _ = run_query(plan, ds)
 print(f"  part-timers via open field: {[r['id'] for r in rows]}")
 
+print("== Columnar engine: same plan, vectorized operators ==")
+plan = A.aggregate(
+    A.select(A.scan("MugshotMessages"),
+             pred=lambda r: r["timestamp"] >= dt.datetime(2014, 2, 1),
+             fields=["timestamp"],
+             ranges={"timestamp": (dt.datetime(2014, 2, 1),
+                                   dt.datetime(2030, 1, 1))},
+             ranges_exact=True, hints=["skip-index"]),
+    {"cnt": ("count", "*"), "avg_author": ("avg", "author-id")})
+rows_row, _ = run_query(plan, ds)
+rows_col, ex = run_query(plan, ds, vectorize=True)
+assert rows_row[0]["cnt"] == rows_col[0]["cnt"]
+assert abs(rows_row[0]["avg_author"] - rows_col[0]["avg_author"]) < 1e-3
+print(f"  filter+aggregate fused on column batches: {rows_col[0]} "
+      f"({ex.stats.rows_vectorized} rows vectorized, "
+      f"{ex.stats.rows_fallback} fell back)")
+
 print("== Query 10/11: aggregation + grouped top-k ==")
 plan = A.aggregate(A.scan("MugshotMessages"),
                    {"n": ("count", "*"), "avg_author": ("avg", "author-id")})

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the one command that must stay green (see ROADMAP.md).
+# Collection regressions (import errors, missing optional deps) show up
+# here before anything else does.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

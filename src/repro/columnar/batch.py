@@ -1,0 +1,219 @@
+"""ColumnBatch: the columnar record format (dense arrays + validity
+bitmaps + per-column sorted string dictionaries).
+
+One ColumnBatch holds N shredded ADM records.  Every column carries a
+validity bitmap (False = field absent in that record) so open types and
+optional fields round-trip losslessly: ``ColumnBatch.from_rows(rows)
+.to_rows() == rows`` for anything core/adm validates, with
+present-but-null and non-scalar values riding in ``obj`` columns.
+
+String columns dictionary-encode against a *sorted* per-batch dictionary,
+so code order equals lexicographic order and range predicates evaluate
+directly on the int32 codes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .schema import ColumnSchema, decode_scalar, encode_scalar, infer_kind, \
+    unify_kinds
+
+__all__ = ["Column", "ColumnBatch", "MISSING"]
+
+
+class _Missing:
+    def __repr__(self) -> str:
+        return "<MISSING>"
+
+
+MISSING = _Missing()
+
+_NP_DTYPE = {"i64": np.int64, "f64": np.float64, "bool": np.bool_,
+             "dt": np.int64, "date": np.int64, "str": np.int32}
+
+
+@dataclass
+class Column:
+    kind: str
+    data: np.ndarray                    # physical values (codes for 'str')
+    valid: np.ndarray                   # bool bitmap: field present?
+    values: Optional[List[str]] = None  # sorted dictionary for 'str'
+
+    def __len__(self) -> int:
+        return int(self.data.shape[0])
+
+    def take(self, idx: np.ndarray) -> "Column":
+        return Column(self.kind, self.data[idx], self.valid[idx], self.values)
+
+    def decode(self) -> List[Any]:
+        """Python values; MISSING where invalid."""
+        if self.kind == "obj":
+            out = list(self.data)
+        elif self.kind == "str":
+            vals = self.values or []
+            out = [vals[c] for c in self.data.tolist()]
+        elif self.kind in ("dt", "date"):
+            out = [decode_scalar(x, self.kind) for x in self.data.tolist()]
+        else:
+            out = self.data.tolist()
+        ok = self.valid
+        return [v if ok[i] else MISSING for i, v in enumerate(out)]
+
+
+def _empty_column(kind: str, n: int) -> Column:
+    if kind == "obj":
+        data = np.empty(n, dtype=object)
+    else:
+        data = np.zeros(n, dtype=_NP_DTYPE[kind])
+    vals: Optional[List[str]] = [] if kind == "str" else None
+    return Column(kind, data, np.zeros(n, dtype=bool), vals)
+
+
+def build_column(raw: Sequence[Any], kind: str) -> Column:
+    """Shred one field's values (MISSING marks absent) into a Column,
+    downgrading to ``obj`` if any present value defies the kind."""
+    n = len(raw)
+    valid = np.fromiter((v is not MISSING for v in raw), dtype=bool, count=n)
+    if kind == "obj":
+        data = np.empty(n, dtype=object)
+        for i, v in enumerate(raw):
+            data[i] = None if v is MISSING else v
+        return Column("obj", data, valid)
+    try:
+        if kind == "str":
+            present = sorted({v for v in raw if v is not MISSING})
+            if any(not isinstance(v, str) for v in present):
+                raise TypeError("non-string in str column")
+            code = {v: i for i, v in enumerate(present)}
+            data = np.fromiter(
+                (0 if v is MISSING else code[v] for v in raw),
+                dtype=np.int32, count=n)
+            return Column("str", data, valid, present)
+        data = np.fromiter(
+            (0 if v is MISSING else encode_scalar(v, kind) for v in raw),
+            dtype=_NP_DTYPE[kind], count=n)
+        return Column(kind, data, valid)
+    except (TypeError, ValueError, OverflowError):
+        return build_column(raw, "obj")
+
+
+def _remap_dictionary(col: Column, merged: List[str]) -> Column:
+    """Re-express a str column's codes against a larger sorted dictionary."""
+    if col.values == merged:
+        return col
+    old = np.asarray(col.values if col.values else [""], dtype=object)
+    lut = np.searchsorted(np.asarray(merged, dtype=object), old)
+    data = lut[col.data].astype(np.int32) if len(col.values or []) \
+        else np.zeros(len(col), dtype=np.int32)
+    return Column("str", data, col.valid, merged)
+
+
+@dataclass
+class ColumnBatch:
+    columns: Dict[str, Column] = field(default_factory=dict)
+    length: int = 0
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_rows(cls, rows: Sequence[Dict[str, Any]],
+                  schema: Optional[ColumnSchema] = None,
+                  columns: Optional[Sequence[str]] = None) -> "ColumnBatch":
+        """Shred row dicts.  Without a schema, kinds are inferred from the
+        values (open-type friendly).  ``columns`` restricts shredding to a
+        projection."""
+        if schema is None:
+            schema = ColumnSchema()
+            for r in rows:
+                for k, v in r.items():
+                    schema.observe_value(k, v)
+        names = list(columns) if columns is not None else list(schema)
+        out: Dict[str, Column] = {}
+        for name in names:
+            if columns is not None and name not in schema:
+                continue
+            raw = [r.get(name, MISSING) for r in rows]
+            out[name] = build_column(raw, schema.kind(name))
+        return cls(out, len(rows))
+
+    @classmethod
+    def concat(cls, batches: Sequence["ColumnBatch"]) -> "ColumnBatch":
+        batches = [b for b in batches]
+        if not batches:
+            return cls({}, 0)
+        if len(batches) == 1:
+            return batches[0]
+        n = sum(b.length for b in batches)
+        names: List[str] = []
+        for b in batches:
+            for k in b.columns:
+                if k not in names:
+                    names.append(k)
+        out: Dict[str, Column] = {}
+        for name in names:
+            pieces = [b.columns.get(name) for b in batches]
+            kinds = {p.kind for p in pieces if p is not None}
+            if len(kinds) > 1:          # mixed representations: objectify
+                decoded: List[Any] = []
+                for b, p in zip(batches, pieces):
+                    decoded.extend(p.decode() if p is not None
+                                   else [MISSING] * b.length)
+                out[name] = build_column(decoded, "obj")
+                continue
+            kind = kinds.pop()
+            cols = [p if p is not None else _empty_column(kind, b.length)
+                    for b, p in zip(batches, pieces)]
+            if kind == "str":
+                merged = sorted(set().union(*(c.values or [] for c in cols)))
+                cols = [_remap_dictionary(c, merged) for c in cols]
+                out[name] = Column(
+                    "str", np.concatenate([c.data for c in cols]),
+                    np.concatenate([c.valid for c in cols]), merged)
+            else:
+                out[name] = Column(
+                    kind, np.concatenate([c.data for c in cols]),
+                    np.concatenate([c.valid for c in cols]))
+        return cls(out, n)
+
+    # -- relational views ---------------------------------------------------
+    def project(self, cols: Sequence[str]) -> "ColumnBatch":
+        return ColumnBatch({c: self.columns[c] for c in cols
+                            if c in self.columns}, self.length)
+
+    def take(self, idx: np.ndarray) -> "ColumnBatch":
+        return ColumnBatch({k: c.take(idx) for k, c in self.columns.items()},
+                           int(len(idx)))
+
+    def filter(self, mask: np.ndarray) -> "ColumnBatch":
+        return self.take(np.nonzero(mask)[0])
+
+    def slice(self, n: int) -> "ColumnBatch":
+        return self.take(np.arange(min(n, self.length)))
+
+    def with_column(self, name: str, col: Column) -> "ColumnBatch":
+        cols = dict(self.columns)
+        cols[name] = col
+        return ColumnBatch(cols, self.length)
+
+    # -- record reassembly --------------------------------------------------
+    def to_rows(self) -> List[Dict[str, Any]]:
+        """Reassemble record dicts; absent (invalid) fields are omitted."""
+        decoded = {k: c.decode() for k, c in self.columns.items()}
+        out: List[Dict[str, Any]] = []
+        for i in range(self.length):
+            r = {}
+            for k, vals in decoded.items():
+                v = vals[i]
+                if v is not MISSING:
+                    r[k] = v
+            out.append(r)
+        return out
+
+    def schema(self) -> ColumnSchema:
+        return ColumnSchema({k: c.kind for k, c in self.columns.items()})
+
+    def __len__(self) -> int:
+        return self.length

@@ -1,0 +1,340 @@
+"""Lowers supported PhysicalOp subplans to columnar pipelines.
+
+``storage/query.Executor(vectorize=True)`` calls ``try_lower`` on every
+operator before falling back to row-at-a-time execution.  A successful
+lowering executes the whole subtree on ColumnBatches — connectors
+included (hash repartitioning is placement-identical to the row engine's
+``hash_partition``) — and converts back to row dicts only at the
+boundary.  Unsupported operators (index access paths, opaque predicates
+without sargable ranges, exotic aggregate/kind combos) return None and
+the row engine runs them; their *children* still get their own chance to
+vectorize.
+
+Lowered operator set:
+
+  DATASET_SCAN            per-component column projection scan
+  STREAM_SELECT           sargable ranges (+ residual pred re-check
+                          unless the plan declared ``ranges_exact``)
+  STREAM_PROJECT          column projection
+  LOCAL_AGG/GLOBAL_AGG    fused filter+aggregate kernel when the child
+                          is an exact-range select
+  LOCAL_PREAGG/HASH_GROUP/GLOBAL_GROUP   vectorized grouped aggregation
+  LOCAL_SORT/SORT_MERGE_GATHER/LOCAL_TOPK/TOPK_MERGE/STREAM_LIMIT
+  HYBRID_HASH_JOIN        int/str/f64-domain equality keys
+
+Every lowered operator records its cardinality in ``ExecStats.op_rows``
+(same keys as the row engine) plus ``rows_vectorized``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core.algebra import Connector, PhysicalOp
+from . import operators as O
+from .batch import ColumnBatch
+
+__all__ = ["try_lower", "Unsupported"]
+
+# node() -> per-partition batches
+Node = Callable[[], List[ColumnBatch]]
+
+
+class Unsupported(Exception):
+    """This subplan stays on the row engine."""
+
+
+_VECTOR_COMPUTE = {
+    "STREAM_SELECT", "LOCAL_AGG", "GLOBAL_AGG", "LOCAL_PREAGG",
+    "HASH_GROUP", "GLOBAL_GROUP", "LOCAL_SORT", "SORT_MERGE_GATHER",
+    "LOCAL_TOPK", "TOPK_MERGE", "HYBRID_HASH_JOIN",
+}
+
+
+def try_lower(op: PhysicalOp, ex: Any) -> Optional[Callable[[], list]]:
+    """Compile ``op``'s subtree to a columnar pipeline, or None.  The
+    returned callable yields the row engine's row Parts up to row order
+    inside unordered operators (grouped/joined row order may be permuted;
+    sorts, top-k and limits are order-exact)."""
+    if not _profitable(op):
+        return None
+    if op.kind == "HYBRID_HASH_JOIN":
+        # a join at the pipeline root materializes its full output as row
+        # dicts at the boundary, which costs more than the row engine's
+        # dict merge; joins vectorize only under a reducing operator
+        # (aggregate/group/top-k), where the output never widens to rows
+        return None
+    try:
+        node = _compile(op, ex, None)
+    except Unsupported:
+        return None
+
+    def run() -> list:
+        return [b.to_rows() for b in node()]
+    return run
+
+
+def _profitable(op: PhysicalOp) -> bool:
+    """A pipeline that only scans/projects/limits would pay shred+decode
+    for nothing; require at least one vectorized compute operator."""
+    if op.kind in _VECTOR_COMPUTE:
+        return True
+    return any(_profitable(c) for c in op.children)
+
+
+def _check_aggs(aggs: Dict[str, Tuple[str, str]]) -> None:
+    for name, (fn, _col) in aggs.items():
+        if fn not in O._AGG_FNS:
+            raise Unsupported(f"aggregate {fn}")
+
+
+def _empty(n: int) -> List[ColumnBatch]:
+    return [ColumnBatch({}, 0) for _ in range(n)]
+
+
+def _total(cparts: Sequence[ColumnBatch]) -> int:
+    return sum(len(b) for b in cparts)
+
+
+def _apply_conn(conn: Connector, cparts: List[ColumnBatch], ex: Any,
+                p: int) -> List[ColumnBatch]:
+    import numpy as np
+    if conn.name == "OneToOne":
+        return cparts
+    if conn.name in ("MToNHashPartition", "MToNHashPartitionMerge"):
+        buckets: List[List[ColumnBatch]] = [[] for _ in range(p)]
+        moved = 0
+        for i, b in enumerate(cparts):
+            if not len(b):
+                continue
+            ids = O.partition_ids(b, conn.keys, p)
+            moved += int((ids != i).sum())
+            for j in range(p):
+                sel = ids == j
+                if sel.any():
+                    buckets[j].append(b.filter(sel))
+        out = [ColumnBatch.concat(bs) if bs else ColumnBatch({}, 0)
+               for bs in buckets]
+        if conn.name == "MToNHashPartitionMerge" and conn.sort_keys:
+            out = [O.sort_batch(b, conn.sort_keys, False) for b in out]
+        ex.stats.moved(conn.name, moved)
+        return out
+    if conn.name == "MToNReplicate":
+        allb = O.concat_gather(cparts)
+        ex.stats.moved(conn.name, len(allb) * (p - 1))
+        return [allb for _ in range(p)]
+    if conn.name == "ReplicateToOne":
+        ex.stats.moved(conn.name, sum(len(b) for b in cparts[1:]))
+        return [O.concat_gather(cparts)] + _empty(p - 1)
+    raise Unsupported(conn.name)
+
+
+def _agg_out_cols(aggs: Dict[str, Tuple[str, str]]) -> Set[str]:
+    return {c for (_fn, c) in aggs.values() if c != "*"}
+
+
+def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
+    k = op.kind
+    p = ex.num_partitions
+    attrs = op.attrs
+
+    if k == "DATASET_SCAN":
+        ds = ex.datasets.get(attrs["dataset"])
+        if ds is None or not hasattr(ds, "scan_partition_batch"):
+            raise Unsupported("dataset has no columnar scan")
+        cols = None if needed is None else sorted(needed)
+
+        def run_scan():
+            cparts = [ds.scan_partition_batch(i, cols)
+                      for i in range(ds.num_partitions)]
+            cparts += _empty(p - ds.num_partitions)
+            ex.stats.vectorized(k, _total(cparts))
+            return cparts
+        return run_scan
+
+    if k == "STREAM_SELECT":
+        ranges = attrs.get("ranges") or {}
+        if not ranges:
+            raise Unsupported("no sargable ranges")
+        pred = attrs.get("pred")
+        residual = not attrs.get("ranges_exact", False)
+        child_needed = None if residual else (
+            None if needed is None else needed | set(ranges))
+        child = _compile(op.children[0], ex, child_needed)
+        conn = op.connectors[0]
+
+        def run_select():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [O.select_batch(b, ranges, pred, residual)
+                   for b in cparts]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_select
+
+    if k == "STREAM_PROJECT":
+        cols = tuple(attrs["cols"])
+        child = _compile(op.children[0], ex, set(cols))
+        conn = op.connectors[0]
+
+        def run_project():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [b.project(cols) for b in cparts]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_project
+
+    if k == "LOCAL_AGG":
+        aggs = attrs["aggs"]
+        _check_aggs(aggs)
+        child_op = op.children[0]
+        conn = op.connectors[0]
+        # fusion: exact-range select directly below the aggregate runs as
+        # one filter+reduce kernel pass per partition
+        fuse = (child_op.kind == "STREAM_SELECT"
+                and bool(child_op.attrs.get("ranges"))
+                and bool(child_op.attrs.get("ranges_exact")))
+        if fuse:
+            ranges = child_op.attrs["ranges"]
+            inner = _compile(child_op.children[0], ex,
+                             _agg_out_cols(aggs) | set(ranges))
+            sel_conn = child_op.connectors[0]
+
+            def run_fused_agg():
+                cparts = inner()
+                cparts = _apply_conn(sel_conn, cparts, ex, p)
+                out, survivors = [], 0
+                for b in cparts:
+                    r = O.fused_select_aggregate(b, ranges, aggs,
+                                                 partial=True)
+                    if r is None:
+                        sb = O.select_batch(b, ranges,
+                                            child_op.attrs.get("pred"),
+                                            residual=False)
+                        r = O.aggregate_batch(sb, aggs, partial=True)
+                    row, surv = r
+                    survivors += surv
+                    out.append(ColumnBatch.from_rows([row]))
+                ex.stats.vectorized("STREAM_SELECT", survivors)
+                ex.stats.vectorized(k, len(out))
+                out = _apply_conn(conn, out, ex, p)
+                return out
+            return run_fused_agg
+        child = _compile(child_op, ex, _agg_out_cols(aggs) or None)
+
+        def run_local_agg():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = []
+            for b in cparts:
+                row, _surv = O.aggregate_batch(b, aggs, partial=True)
+                out.append(ColumnBatch.from_rows([row]))
+            ex.stats.vectorized(k, len(out))
+            return out
+        return run_local_agg
+
+    if k == "GLOBAL_AGG":
+        aggs = attrs["aggs"]
+        _check_aggs(aggs)
+        child = _compile(op.children[0], ex, None)
+        conn = op.connectors[0]
+
+        def run_global_agg():
+            from ..storage.query import _agg_merge, _agg_row
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            rows = [r for b in cparts for r in b.to_rows()]
+            merged = _agg_merge(rows, aggs) if rows \
+                else _agg_row([], aggs, partial=False)
+            out = [ColumnBatch.from_rows([merged])] + _empty(p - 1)
+            ex.stats.vectorized(k, 1)
+            return out
+        return run_global_agg
+
+    if k in ("LOCAL_PREAGG", "HASH_GROUP", "GLOBAL_GROUP"):
+        keys = tuple(attrs["keys"])
+        aggs = attrs["aggs"]
+        _check_aggs(aggs)
+        mode = {"LOCAL_PREAGG": "partial", "HASH_GROUP": "final",
+                "GLOBAL_GROUP": "merge"}[k]
+        child_needed = None if mode == "merge" \
+            else set(keys) | _agg_out_cols(aggs)
+        child = _compile(op.children[0], ex, child_needed)
+        conn = op.connectors[0]
+
+        def run_group():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [O.group_aggregate(b, keys, aggs, mode)
+                   for b in cparts]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_group
+
+    if k in ("LOCAL_SORT", "LOCAL_TOPK"):
+        keys = tuple(attrs["keys"])
+        desc = attrs.get("desc", False)
+        limit = attrs.get("n") if k == "LOCAL_TOPK" else None
+        child_needed = None if needed is None else needed | set(keys)
+        child = _compile(op.children[0], ex, child_needed)
+        conn = op.connectors[0]
+
+        def run_local_sort():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [O.sort_batch(b, keys, desc, limit) for b in cparts]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_local_sort
+
+    if k in ("SORT_MERGE_GATHER", "TOPK_MERGE"):
+        keys = tuple(attrs["keys"])
+        desc = attrs.get("desc", False)
+        limit = attrs.get("n") if k == "TOPK_MERGE" else None
+        child_needed = None if needed is None else needed | set(keys)
+        child = _compile(op.children[0], ex, child_needed)
+        conn = op.connectors[0]
+
+        def run_merge_sort():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [O.sort_batch(cparts[0], keys, desc, limit)] \
+                + list(cparts[1:])
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_merge_sort
+
+    if k == "STREAM_LIMIT":
+        n = attrs["n"]
+        child = _compile(op.children[0], ex, needed)
+        conn = op.connectors[0]
+
+        def run_limit():
+            cparts = child()
+            cparts = _apply_conn(conn, cparts, ex, p)
+            out = [b.slice(n) for b in cparts]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_limit
+
+    if k == "HYBRID_HASH_JOIN":
+        lk, rk = tuple(attrs["lkeys"]), tuple(attrs["rkeys"])
+        lneeded = None if needed is None else needed | set(lk)
+        rneeded = None if needed is None else needed | set(rk)
+        left = _compile(op.children[0], ex, lneeded)
+        right = _compile(op.children[1], ex, rneeded)
+        lconn, rconn = op.connectors
+
+        def run_join():
+            lparts = left()
+            rparts = right()
+            lparts = _apply_conn(lconn, lparts, ex, p)
+            rparts = _apply_conn(rconn, rparts, ex, p)
+            out = [O.join_batches(lb, rb, lk, rk)
+                   for lb, rb in zip(lparts, rparts)]
+            ex.stats.vectorized(k, _total(out))
+            return out
+        return run_join
+
+    raise Unsupported(k)

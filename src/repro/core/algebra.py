@@ -135,16 +135,20 @@ def select(child: LogicalOp, pred: Callable, *, fields: Sequence[str],
            ranges: Optional[Dict[str, Tuple[Any, Any]]] = None,
            spatial: Optional[Tuple[str, Tuple[float, float], float]] = None,
            keyword: Optional[Tuple[str, str, int]] = None,
-           hints: Sequence[str] = ()) -> LogicalOp:
+           hints: Sequence[str] = (),
+           ranges_exact: bool = False) -> LogicalOp:
     """``pred`` evaluates a row -> bool.  ``ranges`` exposes sargable
     [lo, hi] bounds per field (btree rule); ``spatial`` = (field, center,
     radius) exposes a circle predicate (rtree rule, paper Q5); ``keyword`` =
     (field, token, edit_distance) exposes a token predicate (keyword index
-    rule, paper Q6)."""
+    rule, paper Q6).  ``ranges_exact=True`` asserts that ``ranges`` fully
+    captures ``pred``, letting the columnar engine skip the row-at-a-time
+    residual re-check (and fuse filter+aggregate into one kernel pass)."""
     return LogicalOp("SELECT", (child,),
                      {"pred": pred, "fields": tuple(fields),
                       "ranges": dict(ranges or {}), "spatial": spatial,
-                      "keyword": keyword, "hints": tuple(hints)})
+                      "keyword": keyword, "hints": tuple(hints),
+                      "ranges_exact": bool(ranges_exact)})
 
 
 def project(child: LogicalOp, cols: Sequence[str]) -> LogicalOp:

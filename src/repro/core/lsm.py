@@ -12,6 +12,12 @@ This module is the host-side framework: it "LSM-ifies" a sorted-array index
 partitioned storage engine (storage/) and the same component/validity/merge
 calculus is reused device-side by the LSM-tiered KV cache (kvcache/) and by
 the checkpoint manager (checkpoint/).
+
+Because components are immutable, each one carries a lazily-filled
+``col_cache`` of shredded columns (columnar/batch.Column keyed by field
+name): the columnar engine (columnar/, used by storage/dataset
+``scan_partition_batch``) shreds a component's records at most once per
+column, and flush/merge naturally invalidate by creating new components.
 """
 
 from __future__ import annotations
@@ -55,6 +61,9 @@ class Component:
     rows: np.ndarray                 # object array of dict | TOMBSTONE
     valid: bool = False
     comp_id: int = field(default_factory=lambda: next(_component_ids))
+    # columnar engine's per-component shredded columns (name -> Column);
+    # immutability makes this cache trivially coherent
+    col_cache: Dict[str, Any] = field(default_factory=dict, repr=False)
 
     @property
     def size(self) -> int:

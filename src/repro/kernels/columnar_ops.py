@@ -1,0 +1,312 @@
+"""Fused columnar predicate + reduction kernels (the columnar engine's
+hot path).
+
+Two entry points, numpy in / python out, mirroring the ``ops.py``
+backend-dispatch idiom:
+
+  range_mask(preds)              conjunctive [lo, hi] range predicate over
+                                 K columns -> bool mask
+  fused_filter_aggregate(...)    the same mask fused with count/sum/min/max
+                                 reductions over M aggregate columns in one
+                                 pass (no materialized mask, no gather)
+
+On TPU both run as compiled Pallas kernels: predicate columns are stacked
+into one [K, N] f32 operand, reductions accumulate across the row-block
+grid in VMEM (f32 — documented precision caveat for int64-domain columns).
+Elsewhere the pure-jnp oracle runs under ``jax.experimental.enable_x64``
+so int64 epoch-microsecond and dictionary-code columns evaluate exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+
+from .ops import use_pallas
+
+__all__ = ["range_mask", "fused_filter_aggregate"]
+
+# (data [N], valid [N] bool, lo, hi) — already in the column's physical
+# (numeric) domain; None bound means unbounded on that side.
+Pred = Tuple[np.ndarray, np.ndarray, Any, Any]
+
+_BIG = 3.0e38   # f32-safe infinity stand-in for min/max identities
+
+
+def _bounds(lo: Any, hi: Any) -> Tuple[float, float]:
+    return (-np.inf if lo is None else lo, np.inf if hi is None else hi)
+
+
+# ---------------------------------------------------------------------------
+# jnp oracle (exact: runs in the column's native dtype under x64; jitted so
+# one query costs one dispatch per partition, not one per column op)
+# ---------------------------------------------------------------------------
+
+def _prep_bounds(data: np.ndarray, lo: Any, hi: Any
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Same-dtype 0-d bound arrays (unbounded -> dtype extremes) so the
+    jitted core never mixes int64 with float infinities."""
+    if np.issubdtype(data.dtype, np.integer):
+        info = np.iinfo(data.dtype)
+        return (np.asarray(info.min if lo is None else lo, data.dtype),
+                np.asarray(info.max if hi is None else hi, data.dtype))
+    return (np.asarray(-np.inf if lo is None else lo, data.dtype),
+            np.asarray(np.inf if hi is None else hi, data.dtype))
+
+
+@jax.jit
+def _mask_core(datas, valids, los, his):
+    m = None
+    for x, v, lo, hi in zip(datas, valids, los, his):
+        mm = v & (x >= lo) & (x <= hi)
+        m = mm if m is None else (m & mm)
+    return m
+
+
+def _ident(dtype, is_min: bool):
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.asarray(info.max if is_min else info.min, dtype)
+    return jnp.asarray(jnp.inf if is_min else -jnp.inf, dtype)
+
+
+@jax.jit
+def _agg_core(datas, valids, los, his, agg_datas, agg_valids):
+    if datas:
+        mask = _mask_core(datas, valids, los, his)
+    else:
+        mask = jnp.ones(agg_datas[0].shape, dtype=bool)
+    total = jnp.sum(mask)
+    per_col = []
+    for x, v in zip(agg_datas, agg_valids):
+        ok = mask & v
+        cnt = jnp.sum(ok)
+        s = jnp.sum(jnp.where(ok, x, jnp.asarray(0, x.dtype)))
+        mn = jnp.min(jnp.where(ok, x, _ident(x.dtype, True)))
+        mx = jnp.max(jnp.where(ok, x, _ident(x.dtype, False)))
+        per_col.append((s, mn, mx, cnt))
+    return total, tuple(per_col)
+
+
+def _split_preds(preds: Sequence[Pred]):
+    datas = tuple(p[0] for p in preds)
+    valids = tuple(p[1] for p in preds)
+    bounds = [_prep_bounds(p[0], p[2], p[3]) for p in preds]
+    los = tuple(b[0] for b in bounds)
+    his = tuple(b[1] for b in bounds)
+    return datas, valids, los, his
+
+
+def _mask_jnp(preds: Sequence[Pred]) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_mask_core(*_split_preds(preds)))
+
+
+def _agg_jnp(preds: Sequence[Pred],
+             aggs: Sequence[Tuple[np.ndarray, np.ndarray]],
+             n: int) -> Dict[str, Any]:
+    with enable_x64():
+        if not aggs:
+            mask = _mask_jnp(preds) if preds else np.ones(n, dtype=bool)
+            return {"count": int(mask.sum()), "sums": [], "mins": [],
+                    "maxs": [], "cnts": []}
+        datas, valids, los, his = _split_preds(preds)
+        total, per_col = _agg_core(
+            datas, valids, los, his,
+            tuple(a[0] for a in aggs), tuple(a[1] for a in aggs))
+        out: Dict[str, Any] = {"count": int(total), "sums": [], "mins": [],
+                               "maxs": [], "cnts": []}
+        for s, mn, mx, cnt in per_col:
+            c = int(cnt)
+            out["cnts"].append(c)
+            out["sums"].append(s.item())
+            out["mins"].append(mn.item() if c else None)
+            out["maxs"].append(mx.item() if c else None)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (TPU): stacked [K, N] operands, grid-accumulated output
+# ---------------------------------------------------------------------------
+
+def _mask_kernel(p_ref, lo_ref, hi_ref, o_ref):
+    p = p_ref[...]                                  # [K8, bn]
+    lo = lo_ref[:, 0:1]
+    hi = hi_ref[:, 0:1]
+    m = jnp.all((p >= lo) & (p <= hi), axis=0)      # [bn]
+    o_ref[...] = jnp.broadcast_to(m.astype(jnp.float32)[None, :],
+                                  o_ref.shape)
+
+
+def _agg_kernel(p_ref, lo_ref, hi_ref, a_ref, av_ref, o_ref):
+    i = pl.program_id(0)
+    p = p_ref[...]                                  # [K8, bn]
+    lo = lo_ref[:, 0:1]
+    hi = hi_ref[:, 0:1]
+    m = jnp.all((p >= lo) & (p <= hi), axis=0)      # [bn]
+    a = a_ref[...]                                  # [M8, bn]
+    ok = m[None, :] & (av_ref[...] > 0.5)           # [M8, bn]
+    okf = ok.astype(jnp.float32)
+    m8 = a.shape[0]
+    pad = 128 - m8
+
+    def row(v, fill):
+        return jnp.pad(v, (0, pad), constant_values=fill)[None, :]
+
+    sums = row(jnp.sum(a * okf, axis=1), 0.0)
+    mins = row(jnp.min(jnp.where(ok, a, _BIG), axis=1), _BIG)
+    maxs = row(jnp.max(jnp.where(ok, a, -_BIG), axis=1), -_BIG)
+    cnts = row(jnp.sum(okf, axis=1), 0.0)
+    total = jnp.full((1, 128), 0.0, jnp.float32) \
+        .at[0, 0].set(jnp.sum(m.astype(jnp.float32)))
+    pad_rows = jnp.zeros((o_ref.shape[0] - 5, 128), jnp.float32)
+    upd = jnp.concatenate([sums, mins, maxs, cnts, total, pad_rows], axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        ident = jnp.concatenate([
+            jnp.zeros((1, 128), jnp.float32),
+            jnp.full((1, 128), _BIG, jnp.float32),
+            jnp.full((1, 128), -_BIG, jnp.float32),
+            jnp.zeros((2, 128), jnp.float32),
+            pad_rows], axis=0)
+        o_ref[...] = ident
+
+    s = o_ref[...]
+    o_ref[...] = jnp.concatenate([
+        s[0:1] + upd[0:1],
+        jnp.minimum(s[1:2], upd[1:2]),
+        jnp.maximum(s[2:3], upd[2:3]),
+        s[3:4] + upd[3:4],
+        s[4:5] + upd[4:5],
+        s[5:]], axis=0)
+
+
+def _stack_preds(preds: Sequence[Pred], n: int, block_n: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """[K8, Np] f32 value matrix + [K8, 128] lo/hi bound columns.  Row K is
+    the row-validity predicate (1 for real rows, 0 for padding), so padded
+    lanes never contribute."""
+    k8 = max(8, ((len(preds) + 1 + 7) // 8) * 8)
+    np_pad = ((n + block_n - 1) // block_n) * block_n if n else block_n
+    vals = np.zeros((k8, np_pad), dtype=np.float32)
+    lo = np.full((k8, 128), -_BIG, dtype=np.float32)
+    hi = np.full((k8, 128), _BIG, dtype=np.float32)
+    for j, (data, valid, l, h) in enumerate(preds):
+        l, h = _bounds(l, h)
+        x = data.astype(np.float32)
+        x = np.where(valid, x, _BIG)        # invalid fails the hi bound
+        vals[j, :n] = x
+        lo[j, :] = np.float32(max(l, -_BIG))
+        hi[j, :] = np.float32(min(h, _BIG - 1))
+    j = len(preds)
+    vals[j, :n] = 1.0                       # row-validity predicate
+    lo[j, :] = 0.5
+    hi[j, :] = 1.5
+    return vals, lo, hi, np_pad
+
+
+def _mask_pallas(preds: Sequence[Pred], n: int, *, block_n: int = 512,
+                 interpret: bool = False) -> np.ndarray:
+    vals, lo, hi, np_pad = _stack_preds(preds, n, block_n)
+    k8 = vals.shape[0]
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(np_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((k8, block_n), lambda i: (0, i)),
+            pl.BlockSpec((k8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((k8, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
+        interpret=interpret,
+    )(vals, lo, hi)
+    return np.asarray(out)[0, :n] > 0.5
+
+
+def _agg_pallas(preds: Sequence[Pred],
+                aggs: Sequence[Tuple[np.ndarray, np.ndarray]], n: int,
+                *, block_n: int = 512,
+                interpret: bool = False) -> Dict[str, Any]:
+    vals, lo, hi, np_pad = _stack_preds(preds, n, block_n)
+    k8 = vals.shape[0]
+    m8 = max(8, ((len(aggs) + 7) // 8) * 8)
+    if m8 > 128:
+        raise ValueError("fused kernel supports at most 128 agg columns")
+    a = np.zeros((m8, np_pad), dtype=np.float32)
+    av = np.zeros((m8, np_pad), dtype=np.float32)
+    for j, (data, valid) in enumerate(aggs):
+        a[j, :n] = data.astype(np.float32)
+        av[j, :n] = valid.astype(np.float32)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(np_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((k8, block_n), lambda i: (0, i)),
+            pl.BlockSpec((k8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((k8, 128), lambda i: (0, 0)),
+            pl.BlockSpec((m8, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m8, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        interpret=interpret,
+    )(vals, lo, hi, a, av)
+    out = np.asarray(out, dtype=np.float64)
+    m = len(aggs)
+    cnts = [int(round(c)) for c in out[3, :m]]
+    return {
+        "count": int(round(out[4, 0])),
+        "sums": [float(s) for s in out[0, :m]],
+        "mins": [None if c == 0 else float(v)
+                 for c, v in zip(cnts, out[1, :m])],
+        "maxs": [None if c == 0 else float(v)
+                 for c, v in zip(cnts, out[2, :m])],
+        "cnts": cnts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# dispatching wrappers
+# ---------------------------------------------------------------------------
+
+def range_mask(preds: Sequence[Pred], n: int,
+               *, force_pallas: Optional[bool] = None,
+               interpret: bool = False) -> np.ndarray:
+    """Conjunctive range mask over K predicate columns -> bool [n]."""
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    if not preds:
+        return np.ones(n, dtype=bool)
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas:
+        return _mask_pallas(preds, n, interpret=interpret)
+    return _mask_jnp(preds)
+
+
+def fused_filter_aggregate(preds: Sequence[Pred],
+                           aggs: Sequence[Tuple[np.ndarray, np.ndarray]],
+                           n: int, *, force_pallas: Optional[bool] = None,
+                           interpret: bool = False) -> Dict[str, Any]:
+    """Filter + reduce in one pass.
+
+    Returns ``{"count", "sums", "mins", "maxs", "cnts"}`` where ``count``
+    is the number of mask survivors and per-aggregate lists are aligned
+    with ``aggs`` (``cnts`` = valid survivors per column; ``mins``/
+    ``maxs`` are None when that is 0).
+    """
+    if n == 0:
+        return {"count": 0, "sums": [0] * len(aggs),
+                "mins": [None] * len(aggs), "maxs": [None] * len(aggs),
+                "cnts": [0] * len(aggs)}
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas:
+        return _agg_pallas(preds, aggs, n, interpret=interpret)
+    return _agg_jnp(preds, aggs, n)

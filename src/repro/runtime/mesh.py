@@ -18,7 +18,12 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 has explicit axis types; 0.4.x does not
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 __all__ = [
     "make_mesh", "make_host_mesh", "batch_axes", "mesh_axis_size",
@@ -42,9 +47,9 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
             f"mesh {tuple(shape)} needs {need} devices but only {have} are "
             f"visible; launchers must set XLA_FLAGS=--xla_force_host_platform_"
             f"device_count before importing jax")
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes))
+    kwargs = ({"axis_types": (AxisType.Auto,) * len(axes)}
+              if AxisType is not None else {})
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:

@@ -10,7 +10,12 @@ Faithful structure:
   * records are ADM instances (open/closed types, core/adm) — the encoded
     size difference between Schema and KeyOnly types reproduces Table 2;
   * record-level "transactions": every insert/delete WAL-logs before apply;
-    recovery = drop invalid components + replay WAL tail (paper §4.4).
+    recovery = drop invalid components + replay WAL tail (paper §4.4);
+  * ``scan_partition_batch`` serves the columnar engine (columnar/): each
+    LSM component shreds into cached per-column arrays on first touch, so
+    projected scans skip full-record decode (cf. the columnar-LSM paper in
+    PAPERS.md); the dataset tracks observed open fields on insert so
+    schemaless records still get columns.
 """
 
 from __future__ import annotations
@@ -24,7 +29,10 @@ import numpy as np
 from ..core import adm
 from ..core.functions import (cells_covering_circle, spatial_cell,
                               spatial_intersect_circle, word_tokens)
-from ..core.lsm import LSMIndex, TieredMergePolicy, WALRecord, recover
+from ..core.lsm import LSMIndex, TOMBSTONE, TieredMergePolicy, WALRecord, \
+    recover
+from ..columnar.batch import Column, ColumnBatch, MISSING, build_column
+from ..columnar.schema import ColumnSchema
 
 __all__ = ["PartitionedDataset", "hash_partition"]
 
@@ -70,6 +78,12 @@ class PartitionedDataset:
         self.index_kinds: Dict[str, str] = {}   # btree | rtree | keyword
         self.spatial_cell_size = 0.05
         self.stats = {"inserts": 0, "deletes": 0, "bytes_encoded": 0}
+        # columnar engine: open fields seen so far (name -> column kind)
+        self._open_schema = ColumnSchema()
+        self._declared = tuple(f.name for f in dtype.fields)
+        # per-partition assembled-scan cache, invalidated by any mutation
+        # (keyed on component ids + mutation counters)
+        self._scan_cache: Dict[int, Dict[str, Any]] = {}
 
     # -- DDL ---------------------------------------------------------------
     def _sec_keys(self, fld: str, value: Any, pk: Any) -> List[Tuple]:
@@ -102,6 +116,7 @@ class PartitionedDataset:
     def insert(self, record: Dict[str, Any]) -> None:
         rec = self.dtype.validate(record)
         self.stats["bytes_encoded"] += len(self.dtype.encode(rec))
+        self._open_schema.observe_row(rec, self._declared)
         key = rec[self.pk]
         part = self.partitions[hash_partition(key, self.num_partitions)]
         old = part.primary.lookup(key)
@@ -148,6 +163,106 @@ class PartitionedDataset:
         out: List[Dict[str, Any]] = []
         for i in range(self.num_partitions):
             out.extend(self.scan_partition(i))
+        return out
+
+    # -- columnar read path --------------------------------------------------
+    def columnar_schema(self) -> ColumnSchema:
+        """Declared fields (from the RecordType) + open fields observed on
+        insert — the schema the columnar engine shreds against."""
+        return ColumnSchema.from_record_type(self.dtype) \
+            .union(self._open_schema)
+
+    def _component_columns(self, comp, names: Sequence[str],
+                           schema: ColumnSchema):
+        """Column-at-a-time shred of one immutable component.  Each column
+        is built once and cached on the component (core/lsm Component
+        ``col_cache``), so projected scans never decode unrequested
+        fields and repeat scans reuse prior work."""
+        cache = comp.col_cache
+        tomb = cache.get("__tomb")
+        if tomb is None:
+            tomb = np.fromiter((r is TOMBSTONE for r in comp.rows),
+                               dtype=bool, count=comp.size)
+            cache["__tomb"] = tomb
+        cols: Dict[str, Column] = {}
+        for name in names:
+            kind = schema.kind(name)
+            col = cache.get(name)
+            if col is None or (col.kind != kind and col.kind != "obj"):
+                raw = [MISSING if r is TOMBSTONE else r.get(name, MISSING)
+                       for r in comp.rows]
+                col = build_column(raw, kind)
+                cache[name] = col
+            cols[name] = col
+        return ColumnBatch(cols, comp.size), comp.keys, tomb
+
+    def scan_partition_batch(self, i: int,
+                             columns: Optional[Sequence[str]] = None
+                             ) -> ColumnBatch:
+        """Columnar scan of one partition: per-component cached column
+        projection + vectorized newest-wins dedup across components and
+        the memtable.  Row order (sorted by pk) and contents match
+        ``scan_partition`` exactly."""
+        schema = self.columnar_schema()
+        names = list(schema) if columns is None \
+            else [c for c in columns if c in schema]
+        prim = self.partitions[i].primary
+        ver = (tuple(c.comp_id for c in prim.components if c.valid),
+               prim.stats["inserts"], prim.stats["deletes"])
+        cache = self._scan_cache.get(i)
+        if cache is None or cache["ver"] != ver:
+            cache = {"ver": ver, "batches": {}, "idx": None}
+            self._scan_cache[i] = cache
+        ckey = tuple(names)
+        if ckey in cache["batches"]:
+            return cache["batches"][ckey]
+        batches: List[ColumnBatch] = []
+        key_arrays: List[np.ndarray] = []
+        tombs: List[np.ndarray] = []
+        mem = prim.memtable            # newest version of any key it holds
+        if mem:
+            mrows = list(mem.values())
+            batches.append(ColumnBatch.from_rows(
+                [({} if r is TOMBSTONE else r) for r in mrows],
+                schema, names))
+            key_arrays.append(np.asarray(list(mem), dtype=object))
+            tombs.append(np.fromiter((r is TOMBSTONE for r in mrows),
+                                     dtype=bool, count=len(mrows)))
+        for comp in prim.components:   # newest first
+            if not comp.valid or comp.size == 0:
+                continue
+            cb, keys, tomb = self._component_columns(comp, names, schema)
+            batches.append(cb)
+            key_arrays.append(keys)
+            tombs.append(tomb)
+        if not batches:
+            out = ColumnBatch.from_rows([], schema, names)
+            cache["batches"][ckey] = out
+            return out
+        combined = ColumnBatch.concat(batches)
+        idx = cache["idx"]
+        if idx is None:
+            all_tomb = np.concatenate(tombs)
+            flat_keys = [k for ka in key_arrays for k in ka.tolist()]
+            try:
+                all_keys = np.asarray(flat_keys)
+                if all_keys.dtype == object:
+                    raise TypeError("inhomogeneous keys")
+                # first occurrence in newest-first concat order == newest
+                _, idx = np.unique(all_keys, return_index=True)
+            except TypeError:
+                seen = set()
+                first = []
+                for pos, k2 in enumerate(flat_keys):
+                    if k2 not in seen:
+                        seen.add(k2)
+                        first.append((k2, pos))
+                first.sort(key=lambda t: t[0])
+                idx = np.asarray([p for _, p in first], dtype=np.int64)
+            idx = idx[~all_tomb[idx]]
+            cache["idx"] = idx
+        out = combined.take(idx)
+        cache["batches"][ckey] = out
         return out
 
     def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any

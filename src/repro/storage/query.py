@@ -13,6 +13,14 @@ redistribute it exactly as the paper's connector library does:
 The executor also collects per-query counters (rows moved per connector,
 operator cardinalities) used by the benchmarks to show e.g. the Figure-6
 local/global aggregation split reducing "network" traffic.
+
+``Executor(..., vectorize=True)`` additionally offers every operator to
+the columnar engine first (columnar/lower.try_lower): supported subplans
+— scans, sargable selects, aggregates, groups, sorts/top-k, equijoins —
+execute on ColumnBatches with Pallas/jnp kernels (kernels/columnar_ops)
+and convert back to row dicts only at the boundary; everything else
+(index access paths, opaque predicates) falls back to the row engine
+below, and ``ExecStats`` records rows_vectorized vs rows_fallback.
 """
 
 from __future__ import annotations
@@ -35,6 +43,9 @@ Parts = List[Rows]
 class ExecStats:
     rows_moved: Dict[str, int] = field(default_factory=dict)
     op_rows: Dict[str, int] = field(default_factory=dict)
+    rows_vectorized: int = 0    # produced by columnar-lowered operators
+    rows_fallback: int = 0      # produced by the row engine while
+    #                             vectorize=True (unsupported subplans)
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -42,13 +53,19 @@ class ExecStats:
     def produced(self, op: str, parts: Parts) -> None:
         self.op_rows[op] = self.op_rows.get(op, 0) + sum(map(len, parts))
 
+    def vectorized(self, op: str, n: int) -> None:
+        self.op_rows[op] = self.op_rows.get(op, 0) + n
+        self.rows_vectorized += n
+
 
 class Executor:
-    def __init__(self, datasets: Dict[str, PartitionedDataset]):
+    def __init__(self, datasets: Dict[str, PartitionedDataset],
+                 vectorize: bool = False):
         self.datasets = datasets
         self.num_partitions = max(ds.num_partitions
                                   for ds in datasets.values())
         self.stats = ExecStats()
+        self.vectorize = vectorize
 
     # -- connectors ----------------------------------------------------------
     def _apply_connector(self, conn: Connector, parts: Parts) -> Parts:
@@ -93,6 +110,12 @@ class Executor:
     def execute_op(self, op: PhysicalOp) -> Parts:
         k = op.kind
         P = self.num_partitions
+
+        if self.vectorize:
+            from ..columnar.lower import try_lower
+            lowered = try_lower(op, self)
+            if lowered is not None:
+                return lowered()
 
         if k == "DATASET_SCAN":
             ds = self.datasets[op.attrs["dataset"]]
@@ -251,6 +274,8 @@ class Executor:
             raise ValueError(f"unknown physical operator {k}")
 
         self.stats.produced(k, parts)
+        if self.vectorize:
+            self.stats.rows_fallback += sum(map(len, parts))
         return parts
 
 
@@ -311,10 +336,12 @@ def _agg_merge(rows: Rows, aggs: Dict[str, Tuple[str, str]]
 
 def run_query(plan, datasets: Dict[str, PartitionedDataset],
               catalog: Optional[Catalog] = None,
-              config: RewriteConfig = RewriteConfig()
+              config: RewriteConfig = RewriteConfig(),
+              vectorize: bool = False
               ) -> Tuple[Rows, "Executor"]:
     """Optimize a LogicalOp plan and execute it.  Returns (rows, executor)
-    — the executor carries connector/operator statistics."""
+    — the executor carries connector/operator statistics.  With
+    ``vectorize=True`` supported subplans run on the columnar engine."""
     if catalog is None:
         catalog = Catalog(
             primary_keys={n: ds.primary_key
@@ -329,7 +356,7 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
                     f"{n}_{fld}_idx", n, fld,
                     kind=getattr(ds, "index_kinds", {}).get(fld, "btree")))
     phys = optimize(plan, catalog, config)
-    ex = Executor(datasets)
+    ex = Executor(datasets, vectorize=vectorize)
     parts = ex.execute_op(phys)
     rows = [r for p in parts for r in p]
     return rows, ex

@@ -1,0 +1,143 @@
+"""Seeded stand-in for the tiny slice of hypothesis these tests use.
+
+The pinned container has no ``hypothesis``; rather than skip every
+property test, modules fall back to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+``given`` then runs ``max_examples`` deterministic seeded examples per
+test.  Only the strategies this repo's tests use are implemented.
+"""
+
+from __future__ import annotations
+
+import random
+import string
+from typing import Any, Callable, List, Optional, Sequence
+
+
+class Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+    def example(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def sample(rng: random.Random) -> Any:
+            for _ in range(1000):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for fallback shim")
+        return Strategy(sample)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._sample(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: Optional[int] = None,
+                 max_value: Optional[int] = None) -> Strategy:
+        lo = -(2 ** 40) if min_value is None else min_value
+        hi = 2 ** 40 if max_value is None else max_value
+        return Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(allow_nan: bool = True, allow_infinity: bool = True,
+               min_value: Optional[float] = None,
+               max_value: Optional[float] = None) -> Strategy:
+        lo = -1e9 if min_value is None else min_value
+        hi = 1e9 if max_value is None else max_value
+
+        def sample(rng: random.Random) -> float:
+            specials = []
+            if allow_nan:
+                specials.append(float("nan"))
+            if allow_infinity:
+                specials += [float("inf"), float("-inf")]
+            if specials and rng.random() < 0.05:
+                return rng.choice(specials)
+            if rng.random() < 0.2:
+                return float(rng.choice([0.0, -0.0, 1.0, -1.0]))
+            return rng.uniform(lo, hi)
+        return Strategy(sample)
+
+    @staticmethod
+    def text(min_size: int = 0, max_size: int = 16,
+             alphabet: Optional[str] = None) -> Strategy:
+        chars = alphabet or (string.ascii_letters + string.digits
+                             + " -_.éλß")
+        return Strategy(lambda rng: "".join(
+            rng.choice(chars)
+            for _ in range(rng.randint(min_size, max_size))))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 16) -> Strategy:
+        return Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elements: Strategy) -> Strategy:
+        return Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def dictionaries(keys: Strategy, values: Strategy, min_size: int = 0,
+                     max_size: int = 8) -> Strategy:
+        def sample(rng: random.Random) -> dict:
+            n = rng.randint(min_size, max_size)
+            out = {}
+            for _ in range(n * 3):
+                if len(out) >= n:
+                    break
+                out[keys.example(rng)] = values.example(rng)
+            return out
+        return Strategy(sample)
+
+    @staticmethod
+    def one_of(*options: Strategy) -> Strategy:
+        return Strategy(lambda rng: rng.choice(options).example(rng))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 30, deadline: Any = None, **_: Any):
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy, **kwstrats: Strategy):
+    """Run the test body over seeded examples (deterministic per test name)."""
+    def deco(fn: Callable) -> Callable:
+        n = getattr(fn, "_fallback_max_examples", 30)
+
+        def runner():
+            rng = random.Random(f"shim:{fn.__name__}")
+            for _ in range(n):
+                args = [s.example(rng) for s in strats]
+                kwargs = {k: s.example(rng) for k, s in kwstrats.items()}
+                fn(*args, **kwargs)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

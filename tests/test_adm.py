@@ -1,7 +1,14 @@
 """ADM open/closed record types (paper §2.1) — unit + property tests."""
 
+import random
+
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests degrade to the seeded fallback below
+    HAVE_HYPOTHESIS = False
 
 from repro.core import adm
 
@@ -70,20 +77,59 @@ def test_nested_record_and_bag():
     assert dec == rec
 
 
-@given(st.dictionaries(
-    st.text(min_size=1, max_size=8).filter(lambda s: s not in ("id",)),
-    st.one_of(st.integers(min_value=-2**40, max_value=2**40),
-              st.text(max_size=12), st.booleans(),
-              st.floats(allow_nan=False, allow_infinity=False),
-              st.lists(st.integers(min_value=0, max_value=100), max_size=4)),
-    max_size=6))
-@settings(max_examples=60, deadline=None)
-def test_open_fields_roundtrip_property(extras):
-    """Any JSON-ish open payload encodes/decodes losslessly."""
+if HAVE_HYPOTHESIS:
+    @given(st.dictionaries(
+        st.text(min_size=1, max_size=8).filter(lambda s: s not in ("id",)),
+        st.one_of(st.integers(min_value=-2**40, max_value=2**40),
+                  st.text(max_size=12), st.booleans(),
+                  st.floats(allow_nan=False, allow_infinity=False),
+                  st.lists(st.integers(min_value=0, max_value=100),
+                           max_size=4)),
+        max_size=6))
+    @settings(max_examples=60, deadline=None)
+    def test_open_fields_roundtrip_property(extras):
+        """Any JSON-ish open payload encodes/decodes losslessly."""
+        rt = adm.RecordType("T", (adm.Field("id", adm.INT32),), open=True)
+        rec = rt.validate({"id": 1, **extras})
+        dec, _ = rt.decode(rt.encode(rec))
+        assert dec == rec
+else:
+    def test_open_fields_roundtrip_property():
+        pytest.importorskip("hypothesis")
+
+
+def _random_open_value(rng: random.Random, depth: int = 0):
+    kinds = ["int", "str", "bool", "float", "none"]
+    if depth < 2:
+        kinds += ["list", "dict"]
+    k = rng.choice(kinds)
+    if k == "int":
+        return rng.randrange(-2**40, 2**40)
+    if k == "str":
+        return "".join(rng.choice("abcxyz-0189 é") for _ in range(rng.randrange(12)))
+    if k == "bool":
+        return rng.random() < 0.5
+    if k == "float":
+        return rng.uniform(-1e6, 1e6)
+    if k == "none":
+        return None
+    if k == "list":
+        return [_random_open_value(rng, depth + 1)
+                for _ in range(rng.randrange(4))]
+    return {f"k{i}": _random_open_value(rng, depth + 1)
+            for i in range(rng.randrange(4))}
+
+
+def test_open_fields_roundtrip_seeded():
+    """Seeded, hypothesis-free analogue of the property test above."""
+    rng = random.Random(1234)
     rt = adm.RecordType("T", (adm.Field("id", adm.INT32),), open=True)
-    rec = rt.validate({"id": 1, **extras})
-    dec, _ = rt.decode(rt.encode(rec))
-    assert dec == rec
+    for _ in range(60):
+        extras = {f"f{i}": _random_open_value(rng)
+                  for i in range(rng.randrange(7))}
+        rec = rt.validate({"id": 1, **extras})
+        dec, _ = rt.decode(rt.encode(rec))
+        assert dec == rec
 
 
 def test_dataverse_catalog_metadata_as_data():

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_config

@@ -5,7 +5,10 @@ import datetime as dt
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.tinysocial import build_dataverse
 from repro.core import algebra as A

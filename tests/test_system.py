@@ -34,8 +34,8 @@ def test_connector_collective_twins():
         from jax.experimental.shard_map import shard_map
         from repro.runtime import collectives as C
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.runtime.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
         x = jnp.arange(8.0).reshape(4, 2)
 
         rep = shard_map(lambda x: C.replicate(x, "data"), mesh=mesh,
@@ -68,8 +68,8 @@ def test_distributed_logsumexp_merge():
         from repro.runtime.collectives import distributed_logsumexp_merge
         from repro.kernels import ref as kref
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.runtime.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
         B, H, hd, S = 2, 4, 16, 64
         q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
@@ -100,10 +100,9 @@ def test_elastic_checkpoint_restore_across_meshes():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint.manager import CheckpointManager
 
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.runtime.mesh import make_mesh
+        mesh8 = make_mesh((8,), ("data",))
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         w = jnp.arange(64.0).reshape(8, 8)
         w8 = jax.device_put(w, NamedSharding(mesh8, P("data")))
         with tempfile.TemporaryDirectory() as d:
@@ -129,8 +128,8 @@ def test_dryrun_machinery_on_reduced_mesh():
         from repro.configs.base import reduced
         from repro.launch.specs import input_specs, make_step, pick_rules
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.runtime.mesh import make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
         for arch, shape_name in [("olmoe-1b-7b", "train_4k"),
                                  ("jamba-v0.1-52b", "decode_32k")]:
             cfg = reduced(get_config(arch))
@@ -142,8 +141,16 @@ def test_dryrun_machinery_on_reduced_mesh():
             with mesh:
                 c = jax.jit(step, donate_argnums=donate).lower(*args) \
                     .compile()
-                assert c.memory_analysis().peak_memory_in_bytes > 0
-                assert "flops" in c.cost_analysis()
+                ma = c.memory_analysis()
+                peak = getattr(ma, "peak_memory_in_bytes", None)
+                if peak is None:  # jax 0.4.x stats have no peak field
+                    peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes)
+                assert peak > 0
+                ca = c.cost_analysis()
+                if isinstance(ca, (list, tuple)):  # jax 0.4.x: per-device
+                    ca = ca[0]
+                assert "flops" in ca
         print("DRYRUN-OK")
     """)
     assert "DRYRUN-OK" in _run_in_subprocess(code, devices=4)
