@@ -1,0 +1,140 @@
+"""Index access paths: row engine vs columnar candidate intersection.
+
+Benchmarks the vectorized Figure-6 chains (secondary btree / rtree /
+keyword search -> PK bitmap intersect -> gather -> post-validate) against
+the row engine on the same plans, asserting zero result diffs.  Every
+index plan must report ``rows_index_vectorized > 0`` with
+``rows_fallback == 0`` — a silent fallback to the row engine fails the
+bench (scripts/verify.sh runs ``--smoke``).
+
+Expected shape of the numbers: index -> aggregate/group pipelines win big
+(no row materialization at all); selective full-record selects sit near
+the row engine's latency, paying only the row boundary decode.
+
+Usage: PYTHONPATH=src python -m benchmarks.index_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime as dt
+import sys
+import time
+
+from repro.configs.tinysocial import build_dataverse
+from repro.core import algebra as A
+from repro.storage.query import run_query
+
+N_USERS, N_MSGS = 4000, 12000
+SMOKE_USERS, SMOKE_MSGS = 400, 1200
+
+
+def _timed(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _canon(rows):
+    return sorted(repr(sorted(r.items(), key=lambda kv: kv[0]))
+                  for r in rows)
+
+
+def _plans(n_users):
+    from repro.core.functions import spatial_distance, word_tokens
+    lo, hi = dt.datetime(2010, 1, 1), dt.datetime(2010, 3, 1)
+    mlo = dt.datetime(2014, 1, 15)
+    center, radius = (33.5, -117.5), 0.12
+    return {
+        # selective point-ish range, full records out (boundary-bound)
+        "btree_select": A.select(
+            A.scan("MugshotUsers"),
+            pred=lambda r: lo <= r["user-since"] <= hi,
+            fields=["user-since"], ranges={"user-since": (lo, hi)},
+            ranges_exact=True),
+        # wide range feeding a fused aggregate: no row ever materializes
+        "btree_agg": A.aggregate(
+            A.select(A.scan("MugshotMessages"),
+                     pred=lambda r: r["timestamp"] >= mlo,
+                     fields=["timestamp"],
+                     ranges={"timestamp": (mlo, None)}, ranges_exact=True),
+            {"c": ("count", "*"), "av": ("avg", "author-id"),
+             "mx": ("max", "timestamp")}),
+        # two btree indexes: candidate bitmaps intersect before decode
+        "multi_index_group": A.group_by(
+            A.select(A.scan("MugshotMessages"),
+                     pred=lambda r, k=n_users // 2:
+                     r["timestamp"] >= mlo and r["author-id"] <= k,
+                     fields=["timestamp", "author-id"],
+                     ranges={"timestamp": (mlo, None),
+                             "author-id": (None, n_users // 2)},
+                     ranges_exact=True),
+            ["author-id"], {"c": ("count", "*")}),
+        "rtree_select": A.select(
+            A.scan("MugshotMessages"),
+            pred=lambda r: spatial_distance(r["sender-location"],
+                                            center) <= radius,
+            fields=["sender-location"],
+            spatial=("sender-location", center, radius)),
+        "keyword_agg": A.aggregate(
+            A.select(A.scan("MugshotMessages"),
+                     pred=lambda r: "tonight" in word_tokens(r["message"]),
+                     fields=["message"],
+                     keyword=("message", "tonight", 0)),
+            {"c": ("count", "*"), "mn": ("min", "message-id")}),
+    }
+
+
+def run(smoke: bool = False) -> list:
+    nu, nm = (SMOKE_USERS, SMOKE_MSGS) if smoke else (N_USERS, N_MSGS)
+    _, ds = build_dataverse(nu, nm, num_partitions=4, flush_threshold=256)
+    msgs = ds["MugshotMessages"]
+    msgs.create_index("sender-location", kind="rtree")
+    msgs.create_index("message", kind="keyword")
+    rows = []
+    repeat = 2 if smoke else 4
+    for name, plan in _plans(nu).items():
+        (res_r, t_r) = _timed(lambda p=plan: run_query(p, ds), repeat)
+        # warm the jit caches outside the timed region
+        run_query(plan, ds, vectorize=True)
+        (res_c, t_c) = _timed(lambda p=plan: run_query(p, ds,
+                                                       vectorize=True),
+                              repeat)
+        assert _canon(res_r[0]) == _canon(res_c[0]), \
+            f"{name}: columnar results diverge from the row engine"
+        ex = res_c[1]
+        assert ex.stats.rows_index_vectorized > 0, \
+            f"{name}: index access path silently fell back to the row engine"
+        assert ex.stats.rows_fallback == 0, \
+            f"{name}: {ex.stats.rows_fallback} rows fell back"
+        rows.append({
+            "bench": f"index_{name}",
+            "us_per_call": t_r * 1e6,
+            "us_columnar": t_c * 1e6,
+            "derived": f"columnar {t_r / t_c:.1f}x vs row engine "
+                       f"({len(res_c[0])} rows out, "
+                       f"{ex.stats.rows_index_vectorized} idx-vec rows)",
+        })
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small dataset, fewer repeats (CI gate)")
+    args = p.parse_args()
+    t0 = time.time()
+    out = run(smoke=args.smoke)
+    print("name,us_per_call,us_columnar,derived")
+    for r in out:
+        print(f"{r['bench']},{r['us_per_call']:.1f},"
+              f"{r['us_columnar']:.1f},{r['derived']}")
+    print(f"# index_bench done in {time.time() - t0:.1f}s "
+          f"({'smoke' if args.smoke else 'full'})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,4 +4,15 @@
 # here before anything else does.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Fixed seed for the whole run: the row-vs-columnar differential harness
+# (tests/test_differential.py, collected below) seeds per test name via
+# the hypothesis shim (real hypothesis runs derandomized); exporting
+# PYTHONHASHSEED pins the remaining hash-order dependence.
+export PYTHONHASHSEED=0
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Index-path smoke bench: fails if any index-search plan silently falls
+# back to the row engine or diverges from it.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.index_bench --smoke

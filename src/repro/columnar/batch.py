@@ -54,8 +54,12 @@ class Column:
         if self.kind == "obj":
             out = list(self.data)
         elif self.kind == "str":
+            # invalid rows carry code 0 even when the dictionary is empty
+            # (all-missing column): only valid rows may index the dict
             vals = self.values or []
-            out = [vals[c] for c in self.data.tolist()]
+            nv = len(vals)
+            out = [vals[c] if c < nv else None
+                   for c in self.data.tolist()]
         elif self.kind in ("dt", "date"):
             out = [decode_scalar(x, self.kind) for x in self.data.tolist()]
         else:

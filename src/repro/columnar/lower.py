@@ -15,6 +15,16 @@ Lowered operator set:
   DATASET_SCAN            per-component column projection scan
   STREAM_SELECT           sargable ranges (+ residual pred re-check
                           unless the plan declared ``ranges_exact``)
+  POST_VALIDATE_SELECT /
+  PRIMARY_INDEX_LOOKUP    Figure-6 index access chains (secondary btree /
+                          rtree / keyword search -> SORT_PK -> primary
+                          lookup [-> post-validate]): per-partition sorted
+                          PK candidate arrays become position bitmaps over
+                          the primary's cached ColumnBatches via the fused
+                          sorted-intersection kernel; multi-index
+                          conjunctions AND bitmaps before any record
+                          decode, and post-validation runs on the gathered
+                          columns
   STREAM_PROJECT          column projection
   LOCAL_AGG/GLOBAL_AGG    fused filter+aggregate kernel when the child
                           is an exact-range select
@@ -23,7 +33,8 @@ Lowered operator set:
   HYBRID_HASH_JOIN        int/str/f64-domain equality keys
 
 Every lowered operator records its cardinality in ``ExecStats.op_rows``
-(same keys as the row engine) plus ``rows_vectorized``.
+(same keys as the row engine) plus ``rows_vectorized``; index-path
+operators additionally count into ``rows_index_vectorized``.
 """
 
 from __future__ import annotations
@@ -48,7 +59,11 @@ _VECTOR_COMPUTE = {
     "STREAM_SELECT", "LOCAL_AGG", "GLOBAL_AGG", "LOCAL_PREAGG",
     "HASH_GROUP", "GLOBAL_GROUP", "LOCAL_SORT", "SORT_MERGE_GATHER",
     "LOCAL_TOPK", "TOPK_MERGE", "HYBRID_HASH_JOIN",
+    "POST_VALIDATE_SELECT", "PRIMARY_INDEX_LOOKUP",
 }
+
+_INDEX_SEARCHES = {"SECONDARY_INDEX_SEARCH", "SPATIAL_INDEX_SEARCH",
+                   "KEYWORD_INDEX_SEARCH"}
 
 
 def try_lower(op: PhysicalOp, ex: Any) -> Optional[Callable[[], list]]:
@@ -171,6 +186,9 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
             ex.stats.vectorized(k, _total(out))
             return out
         return run_select
+
+    if k in ("POST_VALIDATE_SELECT", "PRIMARY_INDEX_LOOKUP"):
+        return _compile_index_path(op, ex, needed, p)
 
     if k == "STREAM_PROJECT":
         cols = tuple(attrs["cols"])
@@ -338,3 +356,129 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
         return run_join
 
     raise Unsupported(k)
+
+
+# ---------------------------------------------------------------------------
+# index access paths (the Figure-6 chain, vectorized)
+# ---------------------------------------------------------------------------
+
+def _chain_child(op: PhysicalOp, kind: str) -> PhysicalOp:
+    """The chain's edges are all OneToOne (R2 keeps secondary lookups
+    node-local); anything else stays on the row engine."""
+    if len(op.children) != 1 or op.connectors[0].name != "OneToOne":
+        raise Unsupported(f"{op.kind} connector")
+    child = op.children[0]
+    if child.kind != kind:
+        raise Unsupported(f"{op.kind} over {child.kind}")
+    return child
+
+
+def _search_candidates(ds: Any, i: int, search: PhysicalOp):
+    """Sorted candidate-PK array of the chain's own index search on one
+    partition."""
+    a = search.attrs
+    if search.kind == "SECONDARY_INDEX_SEARCH":
+        return ds.secondary_candidate_pks(i, a["field"], a["lo"], a["hi"])
+    if search.kind == "SPATIAL_INDEX_SEARCH":
+        center, radius = a["args"]
+        return ds.spatial_candidate_pks(i, a["field"], center, radius)
+    center_token, fuzzy_ed = a["args"]
+    return ds.keyword_candidate_pks(i, a["field"], center_token, fuzzy_ed)
+
+
+def _compile_index_path(op: PhysicalOp, ex: Any,
+                        needed: Optional[Set[str]], p: int) -> Node:
+    """Lower POST_VALIDATE_SELECT <- PRIMARY_INDEX_LOOKUP <- SORT_PK <-
+    {SECONDARY,SPATIAL,KEYWORD}_INDEX_SEARCH onto the columnar engine:
+    each partition's search yields a sorted PK candidate array, the fused
+    sorted-intersection kernel turns it into a position bitmap over the
+    partition's live-pk array (every additional btree-indexed range field
+    contributes another bitmap, ANDed in before any gather), and the
+    surviving positions gather the cached columns for post-validation —
+    no row dict is ever materialized for a non-matching candidate."""
+    if op.kind == "POST_VALIDATE_SELECT":
+        validate: Optional[PhysicalOp] = op
+        lookup = _chain_child(op, "PRIMARY_INDEX_LOOKUP")
+    else:
+        validate, lookup = None, op
+    sort = _chain_child(lookup, "SORT_PK")
+    search = sort.children[0] if len(sort.children) == 1 else None
+    if search is None or search.kind not in _INDEX_SEARCHES \
+            or sort.connectors[0].name != "OneToOne":
+        raise Unsupported("SORT_PK without an index search below")
+    ds = ex.datasets.get(lookup.attrs["dataset"])
+    if ds is None or not hasattr(ds, "scan_partition_batch") \
+            or not hasattr(ds, "partition_pk_array") \
+            or not hasattr(ds, "secondary_candidate_pks"):
+        raise Unsupported("dataset has no columnar index access")
+    if search.attrs["dataset"] != lookup.attrs["dataset"]:
+        raise Unsupported("index search against a different dataset")
+
+    ranges = dict(validate.attrs.get("ranges") or {}) if validate else {}
+    pred = validate.attrs.get("pred") if validate else None
+    fields = tuple(validate.attrs.get("fields", ())) if validate else ()
+    residual = not (validate.attrs.get("ranges_exact", False)
+                    if validate else True)
+    # fields names exactly what pred reads, so projected gathers stay safe
+    # even when a range column degrades to a row-at-a-time re-check
+    cols = None if needed is None \
+        else sorted(set(needed) | set(ranges) | set(fields))
+    # multi-index conjunction: every other btree-indexed range field adds
+    # a candidate bitmap of its own
+    search_field = search.attrs.get("field")
+    extra_fields = tuple(
+        f for f in ranges
+        if f != search_field
+        and getattr(ds, "index_kinds", {}).get(f) == "btree")
+    # ranges already guaranteed by a candidate bitmap (the index holds the
+    # row's *current* value, so live entries are never stale here) need no
+    # vectorized re-check; only non-indexed range fields remain
+    validate_ranges = dict(ranges)
+    for f in extra_fields:
+        validate_ranges.pop(f, None)
+    if search.kind == "SECONDARY_INDEX_SEARCH" \
+            and search_field in validate_ranges \
+            and tuple(validate_ranges[search_field]) == \
+                (search.attrs["lo"], search.attrs["hi"]):
+        validate_ranges.pop(search_field)
+
+    def run_index_path():
+        out: List[ColumnBatch] = []
+        n_cand = n_found = n_valid = 0
+        for i in range(ds.num_partitions):
+            cands = _search_candidates(ds, i, search)
+            n_cand += len(cands)
+            if not len(cands):
+                out.append(ColumnBatch({}, 0))   # short-circuit: no scan
+                continue
+            keys = ds.partition_pk_array(i)
+            if not len(keys):
+                out.append(ColumnBatch({}, 0))   # all-deleted partition
+                continue
+            mask = O.candidate_position_mask(keys, cands)
+            for f in extra_fields:
+                if not mask.any():
+                    break
+                lo, hi = ranges[f]
+                mask = mask & O.candidate_position_mask(
+                    keys, ds.secondary_candidate_pks(i, f, lo, hi))
+            if not mask.any():
+                out.append(ColumnBatch({}, 0))   # empty intersection
+                continue
+            n_found += int(mask.sum())           # live candidates gathered
+            batch = ds.scan_partition_batch(i, cols)
+            if validate is not None:
+                got = O.index_post_validate(batch, mask, validate_ranges,
+                                            pred, residual, fields)
+            else:
+                got = batch.filter(mask)
+            n_valid += len(got)
+            out.append(got)
+        out += _empty(p - ds.num_partitions)
+        ex.stats.index_vectorized(search.kind, n_cand)
+        ex.stats.index_vectorized("SORT_PK", n_cand)
+        ex.stats.index_vectorized("PRIMARY_INDEX_LOOKUP", n_found)
+        if validate is not None:
+            ex.stats.index_vectorized("POST_VALIDATE_SELECT", n_valid)
+        return out
+    return run_index_path

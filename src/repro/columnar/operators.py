@@ -24,6 +24,7 @@ __all__ = [
     "EMPTY", "make_range_preds", "select_batch", "aggregate_batch",
     "fused_select_aggregate", "group_aggregate", "sort_batch",
     "join_batches", "partition_ids", "concat_gather",
+    "candidate_position_mask", "index_post_validate",
 ]
 
 EMPTY = object()          # make_range_preds: "no row can match"
@@ -96,6 +97,73 @@ def select_batch(batch: ColumnBatch, ranges: Dict[str, Tuple[Any, Any]],
                            count=len(rows))
         out = out.filter(keep)
     return out
+
+
+# ---------------------------------------------------------------------------
+# index access: candidate PKs -> position bitmap
+# ---------------------------------------------------------------------------
+
+def candidate_position_mask(keys: np.ndarray, cands: np.ndarray
+                            ) -> np.ndarray:
+    """Position bitmap of a sorted candidate-PK array over a partition's
+    sorted live-pk array (``storage.dataset.partition_pk_array``).  Numeric
+    pk domains run the fused Pallas/jnp sorted-intersection kernel; object
+    pks (strings, tuples) intersect via the numpy sorted merge, degrading
+    to set membership when the key domain is not totally ordered.  Multi-
+    index conjunctions AND these bitmaps together before any record is
+    gathered or decoded."""
+    n = int(len(keys))
+    if n == 0 or len(cands) == 0:
+        return np.zeros(n, dtype=bool)
+    if keys.dtype != object and keys.dtype.kind in "biuf" \
+            and cands.dtype != object and cands.dtype.kind in "biuf":
+        return K.sorted_intersect_mask(keys, cands)
+    try:
+        return K._sorted_merge_mask(keys, cands)
+    except TypeError:          # mixed / incomparable pk types
+        cs = set(cands.tolist())
+        return np.fromiter((k in cs for k in keys.tolist()),
+                           dtype=bool, count=n)
+
+
+def index_post_validate(batch: ColumnBatch, mask: np.ndarray,
+                        ranges: Dict[str, Tuple[Any, Any]],
+                        pred: Optional[Any], residual: bool,
+                        fields: Sequence[str] = ()) -> ColumnBatch:
+    """POST_VALIDATE_SELECT over a candidate position bitmap: the sargable
+    ranges are re-checked vectorized on the *partition* batch (stable
+    shapes, so the jitted mask kernel never retraces per query) and ANDed
+    into the bitmap before the gather; the residual row predicate — or the
+    whole predicate, for opaque (spatial/keyword) criteria and columns
+    that degrade to ``obj`` — runs row-at-a-time on the gathered survivors
+    only.  When the bitmap is sparse relative to the partition, the whole
+    re-check runs row-at-a-time on the few gathered candidates instead
+    (``ranges`` is implied by ``pred``, the select contract), dodging the
+    whole-partition mask's dispatch floor on selective queries."""
+    n = len(batch)
+    found = int(mask.sum())
+    need_pred = pred is not None and residual
+    if ranges:
+        if pred is not None and found * 8 < n:
+            need_pred = True       # pred implies ranges (select contract)
+        else:
+            preds = make_range_preds(batch, ranges)
+            if preds is EMPTY:
+                return batch.take(np.zeros(0, dtype=np.int64))
+            if preds is None:      # obj-degraded column: pred row-checks
+                need_pred = pred is not None
+            else:
+                mask = mask & K.range_mask(preds, n)
+    got = batch.filter(mask)
+    if need_pred and len(got):
+        # decode only the fields pred declares it reads (the select
+        # contract R1 also relies on): survivors alone pay full decode
+        view = got.project(list(fields)) if fields else got
+        rows = view.to_rows()
+        keep = np.fromiter((bool(pred(r)) for r in rows), dtype=bool,
+                           count=len(rows))
+        got = got.filter(keep)
+    return got
 
 
 # ---------------------------------------------------------------------------

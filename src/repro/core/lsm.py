@@ -225,6 +225,19 @@ class LSMIndex:
 
     def range(self, lo: Any, hi: Any) -> List[Tuple[Any, Any]]:
         """Merged range scan across memtable + all valid components."""
+        seen = self._range_merged(lo, hi)
+        return [(k, seen[k]) for k in sorted(seen) if seen[k] is not TOMBSTONE]
+
+    def range_values(self, lo: Any, hi: Any) -> List[Any]:
+        """Live row values in [lo, hi], newest-wins, without sorting by key
+        or materializing (key, row) pairs.  This is the candidate read path
+        for secondary indexes, whose rows are primary keys: the caller gets
+        a flat PK list to sort/intersect columnar-side (vectorized index
+        access), never decoded records."""
+        seen = self._range_merged(lo, hi)
+        return [r for r in seen.values() if r is not TOMBSTONE]
+
+    def _range_merged(self, lo: Any, hi: Any) -> Dict[Any, Any]:
         seen: Dict[Any, Any] = {}
         for c in reversed([c for c in self.components if c.valid]):
             ks, rs = c.range(lo, hi)
@@ -233,7 +246,7 @@ class LSMIndex:
         for k, r in self.memtable.items():
             if lo <= k <= hi:
                 seen[k] = r
-        return [(k, seen[k]) for k in sorted(seen) if seen[k] is not TOMBSTONE]
+        return seen
 
     def __len__(self) -> int:
         return sum(1 for _ in self.items())

@@ -153,7 +153,9 @@ def _to_physical(op: LogicalOp, cat: Catalog, cfg: RewriteConfig) -> PhysicalOp:
                 return PhysicalOp(
                     "POST_VALIDATE_SELECT", (lookup,), (ONE_TO_ONE,),
                     {"pred": op.attrs["pred"], "fields": op.attrs["fields"],
-                     "ranges": op.attrs.get("ranges", {})},
+                     "ranges": op.attrs.get("ranges", {}),
+                     "ranges_exact": bool(op.attrs.get("ranges_exact",
+                                                       False))},
                     lookup.delivered)
         if (cfg.use_indexes and "skip-index" not in hints
                 and child_l.kind == "SCAN" and op.attrs.get("ranges")):
@@ -181,7 +183,9 @@ def _to_physical(op: LogicalOp, cat: Catalog, cfg: RewriteConfig) -> PhysicalOp:
                     return PhysicalOp(
                         "POST_VALIDATE_SELECT", (lookup,), (ONE_TO_ONE,),
                         {"pred": op.attrs["pred"], "fields": op.attrs["fields"],
-                         "ranges": op.attrs["ranges"]},
+                         "ranges": op.attrs["ranges"],
+                         "ranges_exact": bool(op.attrs.get("ranges_exact",
+                                                           False))},
                         lookup.delivered)
         child = _to_physical(child_l, cat, cfg)
         return PhysicalOp("STREAM_SELECT", (child,), (ONE_TO_ONE,),

@@ -1,7 +1,7 @@
 """Fused columnar predicate + reduction kernels (the columnar engine's
 hot path).
 
-Two entry points, numpy in / python out, mirroring the ``ops.py``
+Three entry points, numpy in / python out, mirroring the ``ops.py``
 backend-dispatch idiom:
 
   range_mask(preds)              conjunctive [lo, hi] range predicate over
@@ -9,6 +9,10 @@ backend-dispatch idiom:
   fused_filter_aggregate(...)    the same mask fused with count/sum/min/max
                                  reductions over M aggregate columns in one
                                  pass (no materialized mask, no gather)
+  sorted_intersect_mask(...)     sorted PK candidate set vs a partition's
+                                 sorted live-pk array -> position bitmap
+                                 (the columnar index access path: bitmaps
+                                 intersect before any record is gathered)
 
 On TPU both run as compiled Pallas kernels: predicate columns are stacked
 into one [K, N] f32 operand, reductions accumulate across the row-block
@@ -30,7 +34,7 @@ from jax.experimental import pallas as pl
 
 from .ops import use_pallas
 
-__all__ = ["range_mask", "fused_filter_aggregate"]
+__all__ = ["range_mask", "fused_filter_aggregate", "sorted_intersect_mask"]
 
 # (data [N], valid [N] bool, lo, hi) — already in the column's physical
 # (numeric) domain; None bound means unbounded on that side.
@@ -274,6 +278,104 @@ def _agg_pallas(preds: Sequence[Pred],
 
 
 # ---------------------------------------------------------------------------
+# sorted intersection (columnar index access path)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _intersect_core(keys, cands):
+    """Sorted merge via binary search: for each candidate, its insertion
+    point in ``keys``; a hit scatters into the position bitmap."""
+    n = keys.shape[0]
+    pos = jnp.searchsorted(keys, cands)
+    posc = jnp.clip(pos, 0, n - 1)
+    hit = (pos < n) & (keys[posc] == cands)
+    mask = jnp.zeros(n, dtype=jnp.int32)
+    return mask.at[posc].add(hit.astype(jnp.int32)) > 0
+
+
+def _sorted_merge_mask(keys: np.ndarray, cands: np.ndarray) -> np.ndarray:
+    """Host (numpy) sorted merge: the one shared membership algorithm for
+    the below-dispatch-floor branch and the object-dtype pk fallback in
+    columnar/operators."""
+    n = keys.shape[0]
+    pos = np.searchsorted(keys, cands)
+    posc = np.clip(pos, 0, n - 1)
+    hit = (pos < n) & (keys[posc] == cands)
+    mask = np.zeros(n, dtype=bool)
+    mask[posc[hit]] = True
+    return mask
+
+
+def _pow2_pad(arr: np.ndarray) -> np.ndarray:
+    """Pad a sorted array to the next power of two by duplicating its last
+    element (stays sorted; duplicates never flip membership), bounding the
+    jit retrace count to O(log n * log m) shape pairs."""
+    n = arr.shape[0]
+    np2 = 1 << (n - 1).bit_length()
+    if np2 == n:
+        return arr
+    return np.concatenate([arr, np.full(np2 - n, arr[-1],
+                                        dtype=arr.dtype)])
+
+
+def _intersect_jnp(keys: np.ndarray, cands: np.ndarray) -> np.ndarray:
+    n = keys.shape[0]
+    with enable_x64():
+        mask = np.asarray(_intersect_core(jnp.asarray(_pow2_pad(keys)),
+                                          jnp.asarray(_pow2_pad(cands))))
+    return mask[:n]
+
+
+def _intersect_kernel(k_ref, c_ref, o_ref, *, m):
+    """Membership of a key block in the (VMEM-resident) candidate set.
+    The rolled loop reads one candidate scalar per step and ORs a full
+    vector compare — no gather, no host round-trip; the bitmap comes out
+    fused with the row-validity flag so padded lanes never match."""
+    k = k_ref[...]                               # [8, bn]
+    keys = k[0:1, :]
+    live = k[1:2, :]
+
+    def body(j, acc):
+        c = c_ref[0, j]
+        return jnp.maximum(acc, (keys == c).astype(jnp.float32))
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros_like(keys))
+    o_ref[...] = jnp.broadcast_to(acc * live, o_ref.shape)
+
+
+def _intersect_pallas(keys: np.ndarray, cands: np.ndarray, n: int,
+                      *, block_n: int = 512,
+                      interpret: bool = False) -> np.ndarray:
+    m = int(cands.shape[0])
+    np_pad = ((n + block_n - 1) // block_n) * block_n
+    vals = np.zeros((8, np_pad), dtype=np.float32)
+    vals[0, :n] = keys.astype(np.float32)
+    vals[1, :n] = 1.0                            # row-validity flag
+    mp = max(128, ((m + 127) // 128) * 128)
+    cv = np.zeros((8, mp), dtype=np.float32)
+    cv[0, :m] = cands.astype(np.float32)
+    out = pl.pallas_call(
+        functools.partial(_intersect_kernel, m=m),
+        grid=(np_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((8, block_n), lambda i: (0, i)),
+            pl.BlockSpec((8, mp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
+        interpret=interpret,
+    )(vals, cv)
+    return np.asarray(out)[0, :n] > 0.5
+
+
+def _f32_exact_ints(arr: np.ndarray) -> bool:
+    """f32 compares keys exactly only below 2**24; larger pks (or float
+    pks) stay on the exact x64 oracle."""
+    return np.issubdtype(arr.dtype, np.integer) \
+        and bool((np.abs(arr) < 2 ** 24).all())
+
+
+# ---------------------------------------------------------------------------
 # dispatching wrappers
 # ---------------------------------------------------------------------------
 
@@ -310,3 +412,27 @@ def fused_filter_aggregate(preds: Sequence[Pred],
     if pallas:
         return _agg_pallas(preds, aggs, n, interpret=interpret)
     return _agg_jnp(preds, aggs, n)
+
+
+def sorted_intersect_mask(keys: np.ndarray, cands: np.ndarray,
+                          *, force_pallas: Optional[bool] = None,
+                          interpret: bool = False) -> np.ndarray:
+    """Position bitmap of a sorted candidate-PK array over a partition's
+    sorted live-pk array: ``mask[i] == (keys[i] in cands)``.
+
+    Empty inputs short-circuit (no zero-length kernel launch).  On TPU the
+    Pallas membership kernel runs when both sides are f32-exact ints
+    (|pk| < 2**24); otherwise the jitted x64 searchsorted oracle keeps
+    int64 pks exact.
+    """
+    n, m = int(keys.shape[0]), int(cands.shape[0])
+    if n == 0 or m == 0:
+        return np.zeros(n, dtype=bool)
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas and (force_pallas
+                   or (_f32_exact_ints(keys) and _f32_exact_ints(cands))):
+        return _intersect_pallas(keys, cands, n, interpret=interpret)
+    if n + m <= 4096:
+        # below the jax dispatch floor the host sorted merge wins outright
+        return _sorted_merge_mask(keys, cands)
+    return _intersect_jnp(keys, cands)

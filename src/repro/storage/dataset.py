@@ -173,17 +173,12 @@ class PartitionedDataset:
             .union(self._open_schema)
 
     def _component_columns(self, comp, names: Sequence[str],
-                           schema: ColumnSchema):
+                           schema: ColumnSchema) -> ColumnBatch:
         """Column-at-a-time shred of one immutable component.  Each column
         is built once and cached on the component (core/lsm Component
         ``col_cache``), so projected scans never decode unrequested
         fields and repeat scans reuse prior work."""
         cache = comp.col_cache
-        tomb = cache.get("__tomb")
-        if tomb is None:
-            tomb = np.fromiter((r is TOMBSTONE for r in comp.rows),
-                               dtype=bool, count=comp.size)
-            cache["__tomb"] = tomb
         cols: Dict[str, Column] = {}
         for name in names:
             kind = schema.kind(name)
@@ -194,7 +189,90 @@ class PartitionedDataset:
                 col = build_column(raw, kind)
                 cache[name] = col
             cols[name] = col
-        return ColumnBatch(cols, comp.size), comp.keys, tomb
+        return ColumnBatch(cols, comp.size)
+
+    @staticmethod
+    def _tomb_array(comp) -> np.ndarray:
+        tomb = comp.col_cache.get("__tomb")
+        if tomb is None:
+            tomb = np.fromiter((r is TOMBSTONE for r in comp.rows),
+                               dtype=bool, count=comp.size)
+            comp.col_cache["__tomb"] = tomb
+        return tomb
+
+    def _partition_version(self, i: int) -> Tuple:
+        prim = self.partitions[i].primary
+        return (tuple(c.comp_id for c in prim.components if c.valid),
+                prim.stats["inserts"], prim.stats["deletes"])
+
+    def _live_selection(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Newest-wins live-row selection for partition ``i``: positions
+        ``idx`` into the memtable+components concat (newest first) and the
+        pk array ``keys`` aligned with them, both ordered by ascending pk.
+        Cached per storage version; computed from keys + tombstone flags
+        only — no record decode, no column shred."""
+        ver = self._partition_version(i)
+        cache = self._scan_cache.get(i)
+        if cache is None or cache["ver"] != ver:
+            cache = {"ver": ver, "batches": {}, "idx": None, "keys": None}
+            self._scan_cache[i] = cache
+        if cache["idx"] is not None:
+            return cache["idx"], cache["keys"]
+        prim = self.partitions[i].primary
+        key_arrays: List[np.ndarray] = []
+        tombs: List[np.ndarray] = []
+        mem = prim.memtable            # newest version of any key it holds
+        if mem:
+            key_arrays.append(np.asarray(list(mem), dtype=object))
+            tombs.append(np.fromiter((r is TOMBSTONE
+                                      for r in mem.values()),
+                                     dtype=bool, count=len(mem)))
+        for comp in prim.components:   # newest first
+            if not comp.valid or comp.size == 0:
+                continue
+            key_arrays.append(comp.keys)
+            tombs.append(self._tomb_array(comp))
+        if not key_arrays:
+            idx = np.zeros(0, dtype=np.int64)
+            keys: np.ndarray = np.zeros(0, dtype=np.int64)
+        else:
+            all_tomb = np.concatenate(tombs)
+            flat_keys = [k for ka in key_arrays for k in ka.tolist()]
+            all_keys: Optional[np.ndarray]
+            try:
+                all_keys = np.asarray(flat_keys)
+                if all_keys.dtype == object:
+                    raise TypeError("inhomogeneous keys")
+                # first occurrence in newest-first concat order == newest
+                _, idx = np.unique(all_keys, return_index=True)
+            except TypeError:
+                all_keys = None
+                seen = set()
+                first = []
+                for pos, k2 in enumerate(flat_keys):
+                    if k2 not in seen:
+                        seen.add(k2)
+                        first.append((k2, pos))
+                first.sort(key=lambda t: t[0])
+                idx = np.asarray([p for _, p in first], dtype=np.int64)
+            idx = idx[~all_tomb[idx]]
+            if all_keys is not None:
+                keys = all_keys[idx]
+            else:
+                keys = np.empty(len(idx), dtype=object)
+                for j, pos in enumerate(idx.tolist()):
+                    keys[j] = flat_keys[pos]
+        cache["idx"] = idx
+        cache["keys"] = keys
+        return idx, keys
+
+    def partition_pk_array(self, i: int) -> np.ndarray:
+        """Sorted live primary keys of partition ``i``, aligned row-for-row
+        with ``scan_partition_batch(i, ...)``: element j is the pk of the
+        scan batch's j-th record.  Sorted candidate-PK arrays from the
+        secondary indexes intersect against this array to become position
+        bitmaps over the cached ColumnBatches (columnar index access)."""
+        return self._live_selection(i)[1]
 
     def scan_partition_batch(self, i: int,
                              columns: Optional[Sequence[str]] = None
@@ -206,62 +284,26 @@ class PartitionedDataset:
         schema = self.columnar_schema()
         names = list(schema) if columns is None \
             else [c for c in columns if c in schema]
-        prim = self.partitions[i].primary
-        ver = (tuple(c.comp_id for c in prim.components if c.valid),
-               prim.stats["inserts"], prim.stats["deletes"])
-        cache = self._scan_cache.get(i)
-        if cache is None or cache["ver"] != ver:
-            cache = {"ver": ver, "batches": {}, "idx": None}
-            self._scan_cache[i] = cache
+        idx, _ = self._live_selection(i)
+        cache = self._scan_cache[i]
         ckey = tuple(names)
         if ckey in cache["batches"]:
             return cache["batches"][ckey]
+        prim = self.partitions[i].primary
         batches: List[ColumnBatch] = []
-        key_arrays: List[np.ndarray] = []
-        tombs: List[np.ndarray] = []
-        mem = prim.memtable            # newest version of any key it holds
+        mem = prim.memtable
         if mem:
-            mrows = list(mem.values())
             batches.append(ColumnBatch.from_rows(
-                [({} if r is TOMBSTONE else r) for r in mrows],
+                [({} if r is TOMBSTONE else r) for r in mem.values()],
                 schema, names))
-            key_arrays.append(np.asarray(list(mem), dtype=object))
-            tombs.append(np.fromiter((r is TOMBSTONE for r in mrows),
-                                     dtype=bool, count=len(mrows)))
-        for comp in prim.components:   # newest first
+        for comp in prim.components:   # newest first, as in _live_selection
             if not comp.valid or comp.size == 0:
                 continue
-            cb, keys, tomb = self._component_columns(comp, names, schema)
-            batches.append(cb)
-            key_arrays.append(keys)
-            tombs.append(tomb)
+            batches.append(self._component_columns(comp, names, schema))
         if not batches:
             out = ColumnBatch.from_rows([], schema, names)
-            cache["batches"][ckey] = out
-            return out
-        combined = ColumnBatch.concat(batches)
-        idx = cache["idx"]
-        if idx is None:
-            all_tomb = np.concatenate(tombs)
-            flat_keys = [k for ka in key_arrays for k in ka.tolist()]
-            try:
-                all_keys = np.asarray(flat_keys)
-                if all_keys.dtype == object:
-                    raise TypeError("inhomogeneous keys")
-                # first occurrence in newest-first concat order == newest
-                _, idx = np.unique(all_keys, return_index=True)
-            except TypeError:
-                seen = set()
-                first = []
-                for pos, k2 in enumerate(flat_keys):
-                    if k2 not in seen:
-                        seen.add(k2)
-                        first.append((k2, pos))
-                first.sort(key=lambda t: t[0])
-                idx = np.asarray([p for _, p in first], dtype=np.int64)
-            idx = idx[~all_tomb[idx]]
-            cache["idx"] = idx
-        out = combined.take(idx)
+        else:
+            out = ColumnBatch.concat(batches).take(idx)
         cache["batches"][ckey] = out
         return out
 
@@ -273,8 +315,8 @@ class PartitionedDataset:
         ix = self.partitions[i].secondaries.get(fld)
         if ix is None:
             raise adm.ValidationError(f"no index on {self.name}.{fld}")
-        lo_k = (lo, _MIN)
-        hi_k = (hi, _MAX)
+        lo_k = (_MIN if lo is None else lo, _MIN)   # None = unbounded side
+        hi_k = (_MAX if hi is None else hi, _MAX)
         return [pk for _, pk in ix.range(lo_k, hi_k)]
 
     def spatial_search_partition(self, i: int, fld: str,
@@ -314,6 +356,71 @@ class PartitionedDataset:
             if match:
                 out.append(pk)
         return out
+
+    # -- candidate read paths (columnar index access) -------------------------
+    @staticmethod
+    def _pk_array(pks: Sequence[Any]) -> np.ndarray:
+        """Sorted, deduplicated candidate-PK array.  Numeric when the keys
+        are homogeneous (so the Pallas/jnp sorted-intersection kernel can
+        run on them); object dtype otherwise (string/tuple pks intersect
+        via the numpy merge fallback)."""
+        pks = pks if isinstance(pks, list) else list(pks)
+        if not pks:
+            return np.zeros(0, dtype=np.int64)
+        try:
+            arr = np.asarray(pks)
+            if arr.dtype == object or arr.dtype.kind not in "biuf":
+                raise TypeError("non-numeric pks")
+            return np.unique(arr)
+        except (TypeError, ValueError):
+            uniq = sorted(set(pks))
+            out = np.empty(len(uniq), dtype=object)
+            for j, v in enumerate(uniq):
+                out[j] = v
+            return out
+
+    def secondary_candidate_pks(self, i: int, fld: str, lo: Any, hi: Any
+                                ) -> np.ndarray:
+        """Secondary B+-tree range search -> sorted PK candidate array for
+        one partition.  Unlike ``secondary_search_partition`` this never
+        materializes (key, pk) pairs in key order: the LSM read returns
+        flat live values and the array sorts once, ready for position-
+        bitmap intersection against ``partition_pk_array``."""
+        ix = self.partitions[i].secondaries.get(fld)
+        if ix is None:
+            raise adm.ValidationError(f"no index on {self.name}.{fld}")
+        lo_k = (_MIN if lo is None else lo, _MIN)
+        hi_k = (_MAX if hi is None else hi, _MAX)
+        return self._pk_array(ix.range_values(lo_k, hi_k))
+
+    def spatial_candidate_pks(self, i: int, fld: str,
+                              center: Tuple[float, float],
+                              radius: float) -> np.ndarray:
+        """Grid ('rtree') candidates -> sorted PK array (post-validation
+        still required: covering cells over-approximate the circle)."""
+        ix = self.partitions[i].secondaries.get(fld)
+        if ix is None or self.index_kinds.get(fld) != "rtree":
+            raise adm.ValidationError(f"no rtree index on {self.name}.{fld}")
+        out: List[Any] = []
+        for cell in cells_covering_circle(center, radius,
+                                          self.spatial_cell_size):
+            out.extend(ix.range_values((cell, _MIN), (cell, _MAX)))
+        return self._pk_array(out)
+
+    def keyword_candidate_pks(self, i: int, fld: str, token: str,
+                              fuzzy_ed: int = 0) -> np.ndarray:
+        """Inverted-index candidates -> sorted PK array.  The fuzzy path
+        (ed > 0) reuses the dictionary edit-distance scan, then dedups."""
+        ix = self.partitions[i].secondaries.get(fld)
+        if ix is None or self.index_kinds.get(fld) != "keyword":
+            raise adm.ValidationError(
+                f"no keyword index on {self.name}.{fld}")
+        if fuzzy_ed == 0:
+            token = token.lower()
+            return self._pk_array(ix.range_values(((token,), _MIN),
+                                                  ((token,), _MAX)))
+        return self._pk_array(
+            self.keyword_search_partition(i, fld, token, fuzzy_ed))
 
     def primary_lookup_partition(self, i: int, pks: Sequence[Any]
                                  ) -> List[Dict[str, Any]]:

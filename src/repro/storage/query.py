@@ -16,11 +16,14 @@ local/global aggregation split reducing "network" traffic.
 
 ``Executor(..., vectorize=True)`` additionally offers every operator to
 the columnar engine first (columnar/lower.try_lower): supported subplans
-— scans, sargable selects, aggregates, groups, sorts/top-k, equijoins —
-execute on ColumnBatches with Pallas/jnp kernels (kernels/columnar_ops)
-and convert back to row dicts only at the boundary; everything else
-(index access paths, opaque predicates) falls back to the row engine
-below, and ``ExecStats`` records rows_vectorized vs rows_fallback.
+— scans, sargable selects, index access paths (secondary/rtree/keyword
+search -> PK bitmap intersect -> gather + post-validate), aggregates,
+groups, sorts/top-k, equijoins — execute on ColumnBatches with
+Pallas/jnp kernels (kernels/columnar_ops) and convert back to row dicts
+only at the boundary; everything else (opaque predicates without
+ranges, bare joins at the root) falls back to the row engine below, and
+``ExecStats`` records rows_vectorized / rows_index_vectorized vs
+rows_fallback.
 """
 
 from __future__ import annotations
@@ -46,6 +49,9 @@ class ExecStats:
     rows_vectorized: int = 0    # produced by columnar-lowered operators
     rows_fallback: int = 0      # produced by the row engine while
     #                             vectorize=True (unsupported subplans)
+    rows_index_vectorized: int = 0   # subset of rows_vectorized produced
+    #                             by vectorized index access paths (index
+    #                             search -> bitmap intersect -> gather)
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -56,6 +62,11 @@ class ExecStats:
     def vectorized(self, op: str, n: int) -> None:
         self.op_rows[op] = self.op_rows.get(op, 0) + n
         self.rows_vectorized += n
+
+    def index_vectorized(self, op: str, n: int) -> None:
+        self.op_rows[op] = self.op_rows.get(op, 0) + n
+        self.rows_vectorized += n
+        self.rows_index_vectorized += n
 
 
 class Executor:

@@ -108,6 +108,17 @@ def test_seeded_random_open_roundtrip():
         assert ColumnBatch.from_rows(rows).to_rows() == rows
 
 
+def test_all_missing_str_column_decodes():
+    """Regression (found by the differential harness): a str column that
+    is entirely missing has an empty dictionary but zero-filled codes;
+    decode must not index the empty dictionary."""
+    s = ColumnSchema({"id": "i64", "txt": "str"})
+    rows = [{"id": 1}, {"id": 2}]
+    batch = ColumnBatch.from_rows(rows, s)
+    assert batch.to_rows() == rows
+    assert batch.columns["txt"].values == []
+
+
 def test_concat_unions_schemas_and_dictionaries():
     b1 = ColumnBatch.from_rows([{"id": 1, "s": "zz"}, {"id": 2, "s": "aa"}])
     b2 = ColumnBatch.from_rows([{"id": 3, "x": 1.5}, {"id": 4, "s": "mm"}])
@@ -279,13 +290,19 @@ def test_vectorized_stats_recorded(tiny):
     assert ex.stats.op_rows["DATASET_SCAN"] == 600
     assert ex.stats.op_rows["STREAM_SELECT"] == rows[0]["c"]
 
-    # index access paths stay on the row engine and count as fallback
+    # index access paths vectorize too: candidate PKs -> position bitmaps
     plan_ix = A.select(A.scan("MugshotUsers"),
                        pred=lambda r: LO <= r["user-since"] <= HI,
                        fields=["user-since"],
                        ranges={"user-since": (LO, HI)})
-    _, ex2 = run_query(plan_ix, tiny, vectorize=True)
-    assert ex2.stats.rows_fallback > 0
+    rows_ix, ex2 = run_query(plan_ix, tiny, vectorize=True)
+    assert ex2.stats.rows_fallback == 0
+    assert ex2.stats.rows_index_vectorized > 0
+    assert ex2.stats.op_rows["POST_VALIDATE_SELECT"] == len(rows_ix)
+    # every index-path op keeps the row engine's accounting keys
+    assert ex2.stats.op_rows["SECONDARY_INDEX_SEARCH"] >= len(rows_ix)
+    assert ex2.stats.op_rows["SORT_PK"] == \
+        ex2.stats.op_rows["SECONDARY_INDEX_SEARCH"]
 
 
 def test_min_on_object_column_matches_row_engine(tiny):
@@ -314,6 +331,86 @@ def test_explicit_null_survives_downstream_operators():
     rows_c, _ = run_query(plan, ds, vectorize=True)
     assert _canon(rows_r) == _canon(rows_c)
     assert {"id": 0, "m": None} in rows_c     # None, not a missing key
+
+
+# ---------------------------------------------------------------------------
+# index access path: intersection kernel + short-circuits
+# ---------------------------------------------------------------------------
+
+def test_sorted_intersect_mask_matches_oracle(rng):
+    keys = np.unique(rng.integers(0, 2 ** 20, 4000))
+    cands = np.unique(np.concatenate([
+        rng.choice(keys, min(300, len(keys)), replace=False),
+        rng.integers(0, 2 ** 20, 100)]))
+    oracle = np.isin(keys, cands)
+    assert np.array_equal(K.sorted_intersect_mask(keys, cands), oracle)
+    # the Pallas membership kernel (interpret off-TPU) agrees exactly on
+    # f32-exact int domains
+    assert np.array_equal(
+        K.sorted_intersect_mask(keys, cands, force_pallas=True,
+                                interpret=True), oracle)
+    # zero-length guards: no kernel launch on either empty side
+    assert K.sorted_intersect_mask(keys[:0], cands).shape == (0,)
+    assert not K.sorted_intersect_mask(keys, cands[:0]).any()
+    # pks beyond f32-exact range stay on the exact x64 oracle
+    big = np.asarray([2 ** 40, 2 ** 40 + 1, 2 ** 40 + 2], dtype=np.int64)
+    got = K.sorted_intersect_mask(big, big[1:2])
+    assert got.tolist() == [False, True, False]
+
+
+def test_partition_pk_array_aligned_with_scan(tiny):
+    users = tiny["MugshotUsers"]
+    for i in range(users.num_partitions):
+        keys = users.partition_pk_array(i).tolist()
+        rows = users.scan_partition_batch(i).to_rows()
+        assert keys == [r["id"] for r in rows]
+        assert keys == sorted(keys)
+
+
+def test_empty_candidate_set_short_circuits(tiny):
+    """Index range matching nothing -> empty batches end-to-end: count 0,
+    avg/min as explicit None (no NaN), nothing on the row engine."""
+    future = (dt.datetime(2031, 1, 1), dt.datetime(2032, 1, 1))
+    plan = A.aggregate(
+        A.select(A.scan("MugshotUsers"),
+                 pred=lambda r: future[0] <= r["user-since"] <= future[1],
+                 fields=["user-since"], ranges={"user-since": future}),
+        {"c": ("count", "*"), "m": ("avg", "id"), "mn": ("min", "id")})
+    rows_r, _ = run_query(plan, tiny)
+    rows_c, ex = run_query(plan, tiny, vectorize=True)
+    assert rows_r == rows_c == [{"c": 0, "m": None, "mn": None}]
+    assert ex.stats.rows_fallback == 0
+    assert ex.stats.op_rows["POST_VALIDATE_SELECT"] == 0
+
+
+def test_all_deleted_partitions_short_circuit():
+    """Every row tombstoned: the index path yields empty ColumnBatches
+    (no NaN aggregates, no zero-length kernel launches)."""
+    _, ds = build_dataverse(num_users=40, num_messages=10,
+                            num_partitions=2, flush_threshold=8)
+    users = ds["MugshotUsers"]
+    for r in users.scan():
+        users.delete(r["id"])
+    assert users.scan() == []
+    sel = A.select(A.scan("MugshotUsers"),
+                   pred=lambda r: r["user-since"] >= LO,
+                   fields=["user-since"], ranges={"user-since": (LO, None)})
+    rows_r, _ = run_query(sel, ds)
+    rows_c, ex = run_query(sel, ds, vectorize=True)
+    assert rows_r == rows_c == []
+    assert ex.stats.rows_fallback == 0
+    agg = A.aggregate(
+        A.select(A.scan("MugshotUsers"),
+                 pred=lambda r: r["user-since"] >= LO,
+                 fields=["user-since"],
+                 ranges={"user-since": (LO, None)}),
+        {"s": ("sum", "id"), "m": ("avg", "id")})
+    rows_ra, _ = run_query(agg, ds)
+    rows_ca, _ = run_query(agg, ds, vectorize=True)
+    assert rows_ra == rows_ca == [{"s": 0, "m": None}]
+    for i in range(users.num_partitions):
+        assert len(users.partition_pk_array(i)) == 0
+        assert len(users.scan_partition_batch(i)) == 0
 
 
 def test_schema_inference_unifies_open_fields():

@@ -98,3 +98,86 @@ def test_tiered_merge_policy_bounds_components():
         ix.insert(i, i)
     assert len([c for c in ix.components if c.valid]) < 12
     assert ix.stats["merges"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# candidate read path (columnar index access) across the LSM lifecycle
+# ---------------------------------------------------------------------------
+
+def test_range_values_matches_range():
+    """range_values == range's live values across memtable + components +
+    tombstones (the values-only candidate read skips key sorting)."""
+    ix = LSMIndex(flush_threshold=4)
+    for i in range(30):
+        ix.insert(i, i * 2)
+    for i in (3, 9, 15):
+        ix.delete(i)
+    ix.insert(9, 1234)          # resurrect over a tombstone
+    want = [r for _, r in ix.range(2, 20)]
+    assert sorted(ix.range_values(2, 20)) == sorted(want)
+    assert ix.range_values(100, 200) == []
+
+
+def _mk_dataset(threshold=8, parts=3, k=2):
+    from repro.core import adm
+    from repro.storage.dataset import PartitionedDataset
+    rt = adm.RecordType("T", (adm.Field("id", adm.INT64),
+                              adm.Field("v", adm.INT64)), open=True)
+    return PartitionedDataset("T", rt, "id", num_partitions=parts,
+                              flush_threshold=threshold,
+                              merge_policy=TieredMergePolicy(k=k))
+
+
+def test_candidate_pks_across_flush_merge_delete_recover():
+    """secondary_candidate_pks stays correct while entries migrate across
+    memtable, flushed components, tiered merges, tombstoned deletes,
+    updates that move index keys, and crash recovery."""
+    ds = _mk_dataset()
+    ds.create_index("v")
+    for i in range(120):
+        ds.insert({"id": i, "v": i % 10})
+    for i in range(0, 120, 7):
+        ds.delete(i)
+    for i in range(0, 120, 13):     # update: moves v out of its old key
+        ds.insert({"id": i, "v": 99})
+    assert any(p.secondaries["v"].stats["flushes"] > 0
+               for p in ds.partitions)
+    assert any(p.primary.stats["merges"] > 0 for p in ds.partitions)
+
+    def oracle(lo, hi):
+        return sorted(r["id"] for r in ds.scan() if lo <= r["v"] <= hi)
+
+    def got(lo, hi):
+        out = []
+        for i in range(ds.num_partitions):
+            arr = ds.secondary_candidate_pks(i, "v", lo, hi)
+            assert arr.tolist() == sorted(set(arr.tolist()))  # sorted+uniq
+            out += arr.tolist()
+        return sorted(out)
+
+    for lo, hi in [(3, 6), (99, 99), (0, 9), (50, 60), (None, 4)]:
+        lo_eff = -10 ** 9 if lo is None else lo
+        assert got(lo, hi) == oracle(lo_eff, hi)
+    ds.crash_and_recover()
+    for lo, hi in [(3, 6), (99, 99), (0, 9), (50, 60)]:
+        assert got(lo, hi) == oracle(lo, hi)
+
+
+def test_partition_pk_array_tracks_lifecycle():
+    """The live-pk array (what candidate bitmaps intersect against) stays
+    aligned with the row scan through flushes, deletes, and recovery."""
+    ds = _mk_dataset(threshold=5, parts=2)
+    for i in range(40):
+        ds.insert({"id": i, "v": i})
+    for i in range(0, 40, 3):
+        ds.delete(i)
+
+    def check():
+        for i in range(ds.num_partitions):
+            pks = ds.partition_pk_array(i).tolist()
+            assert pks == [r["id"] for r in ds.scan_partition(i)]
+    check()
+    ds.crash_and_recover()
+    check()
+    ds.insert({"id": 100, "v": 1})
+    check()                        # cache invalidated by the mutation

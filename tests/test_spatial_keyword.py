@@ -154,6 +154,68 @@ def test_keyword_fuzzy_match(tiny):
     msgs.delete(99999)
 
 
+def _canon(rows):
+    return sorted(repr(sorted(r.items(), key=lambda kv: kv[0]))
+                  for r in rows)
+
+
+def test_vectorized_index_paths_across_lsm_lifecycle():
+    """Columnar candidate intersection (Executor(vectorize=True)) stays
+    identical to the row engine for rtree/keyword/btree access paths
+    while the LSM indexes go through flushes, tiered merges, tombstoned
+    deletes, updates, and crash recovery."""
+    _, ds = build_dataverse(num_users=40, num_messages=400,
+                            num_partitions=4, flush_threshold=16,
+                            with_indexes=True)
+    msgs = ds["MugshotMessages"]
+    msgs.create_index("sender-location", kind="rtree")
+    msgs.create_index("message", kind="keyword")
+    for mid in range(0, 400, 5):          # tombstones across components
+        msgs.delete(mid)
+    donor = dict(msgs.scan()[0])
+    donor["message-id"] = 401             # memtable-resident insert
+    donor["message"] = "see you tonight"
+    msgs.insert(donor)
+    assert any(p.primary.stats["flushes"] > 0 for p in msgs.partitions)
+    assert any(p.primary.stats["merges"] > 0 for p in msgs.partitions)
+
+    center, radius = (33.5, -117.5), 0.15
+    plans = {
+        "rtree": A.select(
+            A.scan("MugshotMessages"),
+            pred=lambda r: spatial_distance(r["sender-location"],
+                                            center) <= radius,
+            fields=["sender-location"],
+            spatial=("sender-location", center, radius)),
+        "keyword": A.select(
+            A.scan("MugshotMessages"),
+            pred=lambda r: "tonight" in word_tokens(r["message"]),
+            fields=["message"], keyword=("message", "tonight", 0)),
+        "btree": A.select(
+            A.scan("MugshotMessages"),
+            pred=lambda r: r["timestamp"] >= dt.datetime(2014, 2, 1),
+            fields=["timestamp"],
+            ranges={"timestamp": (dt.datetime(2014, 2, 1), None)}),
+    }
+
+    def check():
+        for name, plan in plans.items():
+            rows_r, _ = run_query(plan, ds)
+            rows_c, ex = run_query(plan, ds, vectorize=True)
+            assert _canon(rows_r) == _canon(rows_c), name
+            assert ex.stats.rows_fallback == 0, name
+            assert ex.stats.rows_index_vectorized > 0, name
+    check()
+    msgs.crash_and_recover()              # drops memtables, replays WAL
+    check()
+    msgs.delete(401)
+    for p in msgs.partitions:             # force everything onto disk
+        p.primary.flush()
+        for sec in p.secondaries.values():
+            sec.flush()
+    check()
+
+
 def test_keyword_index_maintained_under_update(tiny):
     msgs = tiny["MugshotMessages"]
     donor = dict(msgs.scan()[0])
