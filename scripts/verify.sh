@@ -16,3 +16,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # back to the row engine or diverges from it.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.index_bench --smoke
+
+# Ingest-pipeline smoke bench: feed -> flush -> merge -> scan; fails if
+# the columnar-native pipeline diverges from the legacy row path or ever
+# forces a component's lazy row view.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.ingest_bench --smoke

@@ -10,6 +10,15 @@ present-but-null and non-scalar values riding in ``obj`` columns.
 String columns dictionary-encode against a *sorted* per-batch dictionary,
 so code order equals lexicographic order and range predicates evaluate
 directly on the int32 codes.
+
+ColumnBatch is also the *primary* on-disk representation of immutable
+LSM components (core/lsm): flush shreds the memtable in sorted-key order
+(``sort_by`` is the batch-level counterpart for callers holding an
+already-shredded batch), ``merge_sorted`` gathers a column-wise k-way
+merge from the ``sorted_merge_take`` kernel's take-indices, and every
+column caches a pow2-padded view of its arrays (``Column.padded``) so
+the jitted kernels see a bounded, shape-stable set of operand shapes
+across repeated scans and merges.
 """
 
 from __future__ import annotations
@@ -22,7 +31,8 @@ import numpy as np
 from .schema import ColumnSchema, decode_scalar, encode_scalar, infer_kind, \
     unify_kinds
 
-__all__ = ["Column", "ColumnBatch", "MISSING"]
+__all__ = ["Column", "ColumnBatch", "MISSING", "pow2_len",
+           "promotes_lossless"]
 
 
 class _Missing:
@@ -36,15 +46,57 @@ _NP_DTYPE = {"i64": np.int64, "f64": np.float64, "bool": np.bool_,
              "dt": np.int64, "date": np.int64, "str": np.int32}
 
 
+def pow2_len(n: int) -> int:
+    """Smallest power of two >= n (and >= 1): the shape-stable storage
+    granule for kernel operands."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def promotes_lossless(arrays: Sequence[np.ndarray]) -> bool:
+    """True when concatenating these numeric arrays under numpy's common
+    dtype loses no values.  The one guard the sorted-key paths (LSM merge
+    take-indices, the dataset's live-row selection) share against silent
+    key corruption: int64+float64 or int64+uint64 promote to float64,
+    which rounds integers beyond 2**53."""
+    if len({a.dtype for a in arrays}) <= 1:
+        return True
+    promo = np.result_type(*(a.dtype for a in arrays))
+    return promo.kind in "biuf" and all(
+        np.array_equal(a.astype(promo).astype(a.dtype), a) for a in arrays)
+
+
 @dataclass
 class Column:
     kind: str
     data: np.ndarray                    # physical values (codes for 'str')
     valid: np.ndarray                   # bool bitmap: field present?
     values: Optional[List[str]] = None  # sorted dictionary for 'str'
+    # pow2-padded (data, valid) view, built once per immutable column
+    _padded: Optional[tuple] = field(default=None, repr=False, compare=False)
 
     def __len__(self) -> int:
         return int(self.data.shape[0])
+
+    def padded(self) -> tuple:
+        """``(data, valid)`` padded to the next power of two with invalid
+        rows.  Columns are immutable, so the padded view is cached: kernel
+        calls over the same component batch reuse one allocation, and the
+        jitted cores see pow2 shapes only (no per-length retraces)."""
+        n = len(self)
+        np2 = pow2_len(n)
+        if np2 == n:
+            return self.data, self.valid
+        if self._padded is None:
+            pad = np2 - n
+            if self.data.dtype == object:
+                data = np.empty(np2, dtype=object)
+                data[:n] = self.data
+            else:
+                data = np.concatenate(
+                    [self.data, np.zeros(pad, dtype=self.data.dtype)])
+            valid = np.concatenate([self.valid, np.zeros(pad, dtype=bool)])
+            self._padded = (data, valid)
+        return self._padded
 
     def take(self, idx: np.ndarray) -> "Column":
         return Column(self.kind, self.data[idx], self.valid[idx], self.values)
@@ -201,6 +253,73 @@ class ColumnBatch:
         cols = dict(self.columns)
         cols[name] = col
         return ColumnBatch(cols, self.length)
+
+    def sort_by(self, keys: Sequence[str], desc: bool = False
+                ) -> "ColumnBatch":
+        """Rows reordered by the named columns (vectorized lexsort when
+        every key column is dense and comparable; decoded fallback for
+        ``obj`` keys or columns with absent values)."""
+        n = self.length
+        arrs = []
+        vectorized = bool(keys)
+        for k in keys:
+            col = self.columns.get(k)
+            if col is None or col.kind == "obj" or not col.valid.all():
+                vectorized = False
+                break
+            a = col.data.astype(np.int64) if col.kind == "bool" else col.data
+            arrs.append(-a if desc else a)
+        if vectorized:
+            order = np.lexsort(tuple(reversed(arrs)))
+        elif n == 0:
+            order = np.zeros(0, dtype=np.int64)
+        else:
+            rows = self.to_rows()
+            # absent values sort first via the presence flag, so a
+            # missing field is never compared against a real value
+            order = np.asarray(
+                sorted(range(n),
+                       key=lambda i: tuple((k in rows[i], rows[i].get(k))
+                                           for k in keys),
+                       reverse=desc), dtype=np.int64)
+        return self.take(order)
+
+    @classmethod
+    def merge_sorted(cls, batches: Sequence["ColumnBatch"],
+                     key_arrays: Sequence[np.ndarray],
+                     tombs: Optional[Sequence[np.ndarray]] = None,
+                     *, drop_tombstones: bool = False
+                     ) -> tuple:
+        """Column-wise k-way merge of sorted runs (the LSM merge path).
+
+        ``key_arrays[i]`` holds batch i's sorted, unique keys; batches are
+        ordered newest -> oldest and the newest wins each duplicate key.
+        The ``sorted_merge_take`` kernel computes take-indices once, then
+        every column — string dictionaries included (``concat`` remaps
+        codes onto the merged dictionary) — is gathered without
+        materializing a single row.  Returns ``(batch, keys, tomb)``
+        aligned with each other; see the kernel for tombstone semantics.
+        """
+        from ..kernels import columnar_ops as K
+        keys, take, tomb = K.sorted_merge_take(
+            key_arrays, tombs, drop_tombstones=drop_tombstones)
+        merged = cls.concat(list(batches)).take(take)
+        return merged, keys, tomb
+
+    def row_at(self, i: int) -> Dict[str, Any]:
+        """Reassemble one record without decoding the whole batch (the
+        LSM point-lookup path over columnar components)."""
+        r: Dict[str, Any] = {}
+        for k, c in self.columns.items():
+            if not c.valid[i]:
+                continue
+            if c.kind == "obj":
+                r[k] = c.data[i]
+            elif c.kind == "str":
+                r[k] = (c.values or [])[int(c.data[i])]
+            else:
+                r[k] = decode_scalar(c.data[i], c.kind)
+        return r
 
     # -- record reassembly --------------------------------------------------
     def to_rows(self) -> List[Dict[str, Any]]:

@@ -55,6 +55,20 @@ class Unsupported(Exception):
     """This subplan stays on the row engine."""
 
 
+def _columnar_dataset(ex: Any, name: str, index: bool = False) -> Any:
+    """The one capability probe for columnar dataset access: the named
+    dataset must expose the columnar scan surface (plus the candidate-PK
+    index surface when ``index``), else the subplan stays on the row
+    engine."""
+    ds = ex.datasets.get(name)
+    if ds is None or not hasattr(ds, "scan_partition_batch"):
+        raise Unsupported("dataset has no columnar scan")
+    if index and not (hasattr(ds, "partition_pk_array")
+                      and hasattr(ds, "secondary_candidate_pks")):
+        raise Unsupported("dataset has no columnar index access")
+    return ds
+
+
 _VECTOR_COMPUTE = {
     "STREAM_SELECT", "LOCAL_AGG", "GLOBAL_AGG", "LOCAL_PREAGG",
     "HASH_GROUP", "GLOBAL_GROUP", "LOCAL_SORT", "SORT_MERGE_GATHER",
@@ -154,9 +168,7 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
     attrs = op.attrs
 
     if k == "DATASET_SCAN":
-        ds = ex.datasets.get(attrs["dataset"])
-        if ds is None or not hasattr(ds, "scan_partition_batch"):
-            raise Unsupported("dataset has no columnar scan")
+        ds = _columnar_dataset(ex, attrs["dataset"])
         cols = None if needed is None else sorted(needed)
 
         def run_scan():
@@ -406,11 +418,7 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
     if search is None or search.kind not in _INDEX_SEARCHES \
             or sort.connectors[0].name != "OneToOne":
         raise Unsupported("SORT_PK without an index search below")
-    ds = ex.datasets.get(lookup.attrs["dataset"])
-    if ds is None or not hasattr(ds, "scan_partition_batch") \
-            or not hasattr(ds, "partition_pk_array") \
-            or not hasattr(ds, "secondary_candidate_pks"):
-        raise Unsupported("dataset has no columnar index access")
+    ds = _columnar_dataset(ex, lookup.attrs["dataset"], index=True)
     if search.attrs["dataset"] != lookup.attrs["dataset"]:
         raise Unsupported("index search against a different dataset")
 

@@ -72,8 +72,10 @@ def make_range_preds(batch: ColumnBatch,
                 hi = None if hi is None else encode_scalar(hi, col.kind)
         except (TypeError, ValueError, OverflowError):
             return None
-        data = col.data.astype(np.int64) if col.kind == "bool" else col.data
-        preds.append((data, col.valid, lo, hi))
+        data, valid = col.padded()      # cached pow2 view: stable shapes
+        if col.kind == "bool":
+            data = data.astype(np.int64)
+        preds.append((data, valid, lo, hi))
     return preds
 
 
@@ -185,8 +187,10 @@ def _kernel_agg_cols(batch: ColumnBatch,
             continue
         if fn in ("sum", "avg") and col.kind not in ("i64", "f64", "bool"):
             continue
-        data = col.data.astype(np.int64) if col.kind == "bool" else col.data
-        arrays.append((data, col.valid))
+        data, valid = col.padded()      # cached pow2 view: stable shapes
+        if col.kind == "bool":
+            data = data.astype(np.int64)
+        arrays.append((data, valid))
         meta.append((name, fn, col.kind, col))
     return arrays, meta
 
@@ -608,14 +612,12 @@ def partition_ids(batch: ColumnBatch, keys: Sequence[str], p: int
     """Target partition per row; bit-for-bit identical to
     ``storage.dataset.hash_partition`` so columnar and row pipelines
     shuffle rows to the same places."""
-    from ..storage.dataset import hash_partition
+    from ..storage.dataset import hash_partition, hash_partition_array
     if len(keys) == 1:
         col = batch.columns.get(keys[0])
         if col is not None and col.kind in ("i64", "bool") \
                 and col.valid.all():
-            k = col.data.astype(np.uint64)
-            h = (k * np.uint64(11400714819323198485)) >> np.uint64(40)
-            return (h % np.uint64(p)).astype(np.int64)
+            return hash_partition_array(col.data, p)
         if col is not None and col.kind == "str" and col.valid.all():
             lut = np.asarray([hash_partition(v, p)
                               for v in (col.values or [])],

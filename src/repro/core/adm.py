@@ -42,20 +42,13 @@ class ADMType:
     tag: int  # 1-byte wire tag
 
     def validate(self, v: Any) -> Any:
-        ok = {
-            "int32": lambda x: isinstance(x, int) and -(2**31) <= x < 2**31,
-            "int64": lambda x: isinstance(x, int),
-            "float": lambda x: isinstance(x, (int, float)),
-            "double": lambda x: isinstance(x, (int, float)),
-            "string": lambda x: isinstance(x, str),
-            "boolean": lambda x: isinstance(x, bool),
-            "datetime": lambda x: isinstance(x, (_dt.datetime, str)),
-            "date": lambda x: isinstance(x, (_dt.date, str)),
-            "point": lambda x: (isinstance(x, (tuple, list)) and len(x) == 2),
-        }[self.name]
-        if not ok(v):
+        if not _PRIM_OK[self.name](v):
             raise ValidationError(f"value {v!r} is not a valid {self.name}")
-        return v
+        if isinstance(v, int) and self.name in ("float", "double") \
+                and not isinstance(v, bool):
+            return float(v)     # ADM casts ints into float fields at
+        return v                # ingest, so the stored value does not
+        #                         depend on memtable-vs-component state
 
     def encode(self, v: Any, out: bytearray) -> None:
         if self.name == "int32":
@@ -141,6 +134,29 @@ def _get_varint(buf: memoryview, pos: int) -> Tuple[int, int]:
 # ---------------------------------------------------------------------------
 # Composite types
 # ---------------------------------------------------------------------------
+
+# per-primitive validity predicates, hoisted out of ADMType.validate (the
+# ingestion hot path calls it once per field per record)
+_PRIM_OK = {
+    "int32": lambda x: isinstance(x, int) and -(2**31) <= x < 2**31,
+    # int64 range-checks at validation like int32 does: encode() packs
+    # "<q" and would reject later anyway, but batch ingestion stores
+    # columns without encoding, so both DML paths must gate here
+    "int64": lambda x: isinstance(x, int) and -(2**63) <= x < 2**63,
+    "float": lambda x: isinstance(x, (int, float)),
+    "double": lambda x: isinstance(x, (int, float)),
+    "string": lambda x: isinstance(x, str),
+    "boolean": lambda x: isinstance(x, bool),
+    "datetime": lambda x: isinstance(x, (_dt.datetime, str)),
+    "date": lambda x: isinstance(x, (_dt.date, str)),
+    # coords must be numeric here, not just at encode time: batch
+    # ingestion stores columns without encoding, so validation is the
+    # only gate both DML paths share
+    "point": lambda x: (isinstance(x, (tuple, list)) and len(x) == 2
+                        and all(isinstance(c, (int, float))
+                                and not isinstance(c, bool) for c in x)),
+}
+
 
 @dataclass(frozen=True)
 class OrderedListType:
@@ -264,10 +280,14 @@ class RecordType:
         names = [f.name for f in self.fields]
         if len(set(names)) != len(names):
             raise ValidationError(f"duplicate field names in {self.name}")
+        # frozen dataclass: sneak the cache in (fields are immutable, so
+        # the map is too); validate/encode hit it once per record
+        object.__setattr__(self, "_field_map",
+                           {f.name: f for f in self.fields})
 
     @property
     def field_map(self) -> Dict[str, Field]:
-        return {f.name: f for f in self.fields}
+        return self._field_map
 
     def validate(self, v: Any) -> Dict[str, Any]:
         if not isinstance(v, dict):

@@ -1,4 +1,4 @@
-"""Generic LSM index framework (paper §4.3–4.4).
+"""Generic LSM index framework (paper §4.3–4.4), columnar-native.
 
 AsterixDB "wholly embraced" LSM trees: every index is a mutable *in-memory
 component* plus immutable *disk components*; flush on memory threshold, merge
@@ -13,11 +13,20 @@ partitioned storage engine (storage/) and the same component/validity/merge
 calculus is reused device-side by the LSM-tiered KV cache (kvcache/) and by
 the checkpoint manager (checkpoint/).
 
-Because components are immutable, each one carries a lazily-filled
-``col_cache`` of shredded columns (columnar/batch.Column keyed by field
-name): the columnar engine (columnar/, used by storage/dataset
-``scan_partition_batch``) shreds a component's records at most once per
-column, and flush/merge naturally invalidate by creating new components.
+Storage is **columnar-first** (cf. the columnar-LSM paper in PAPERS.md):
+``flush()`` shreds the memtable of a record (dict-valued) index straight
+into a sorted-by-key ``columnar.batch.ColumnBatch`` + tombstone bitmap,
+which *is* the component's primary on-disk representation; ``merge()`` is
+a column-wise k-way merge whose take-indices come from the vectorized
+``kernels.columnar_ops.sorted_merge_take`` kernel (newest-wins dedup +
+tombstone collapse), so no row dict is ever materialized on the merge
+path; ``recover()`` keeps surviving columnar components as-is and replays
+the WAL tail into the memtable, which re-shreds at its next flush.  Row
+dicts are a *derived, lazy* view (``Component.rows``) built only for
+legacy row-at-a-time callers.  Indexes whose values are not records —
+secondary indexes store bare primary keys — keep the classic row-array
+storage (``columnar=False`` forces it, e.g. for benchmarking the old
+row path).
 """
 
 from __future__ import annotations
@@ -29,8 +38,11 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 
 import numpy as np
 
+from ..columnar.batch import ColumnBatch
+from ..columnar.schema import ColumnSchema
+
 __all__ = ["Component", "LSMIndex", "TieredMergePolicy", "WALRecord",
-           "TOMBSTONE", "recover"]
+           "TOMBSTONE", "key_array", "recover"]
 
 
 class _Tombstone:
@@ -52,18 +64,87 @@ def _obj_array(items: Sequence[Any]) -> np.ndarray:
     return arr
 
 
+def key_array(ks: Sequence[Any]) -> np.ndarray:
+    """Sorted-run key-array conversion, shared by flush sorting and the
+    dataset's live-row selection: a numeric ndarray when the key domain
+    converts losslessly, else a 1-D object array of python scalars.
+    Numpy scalar inputs normalize to python first — their cross-dtype
+    comparisons promote lossily — and the tolist round-trip rejects lossy
+    unification (e.g. an int beyond 2**53 coerced to float64 by a mixed
+    int/float domain)."""
+    ks = [k.item() if isinstance(k, np.generic) else k for k in ks]
+    try:
+        arr = np.asarray(ks)
+        if arr.dtype == object or arr.dtype.kind not in "biuf" \
+                or arr.tolist() != ks:
+            raise TypeError("non-numeric keys")
+        return arr
+    except (TypeError, ValueError, OverflowError):
+        return _obj_array(ks)
+
+
+def _sorted_kv(mem: Dict[Any, Any]) -> Tuple[np.ndarray, List[Any]]:
+    """(sorted key array, aligned values).  Numeric key domains sort via
+    numpy argsort and stay numeric arrays (so downstream kernels — merge
+    take-indices, candidate bitmaps — run vectorized); anything else
+    falls back to python sort over an object array."""
+    arr = key_array(list(mem))
+    vals = list(mem.values())           # aligned with list(mem)
+    if arr.dtype != object:
+        order = np.argsort(arr, kind="stable")
+        return arr[order], [vals[j] for j in order.tolist()]
+    order = sorted(range(arr.shape[0]), key=arr.__getitem__)
+    idx = np.asarray(order, dtype=np.int64) if order \
+        else np.zeros(0, dtype=np.int64)
+    return arr[idx], [vals[j] for j in order]
+
+
 @dataclass
 class Component:
     """An immutable sorted run.  ``valid`` is the paper's validity bit: set
-    atomically as the final action of the flush/merge that created it."""
+    atomically as the final action of the flush/merge that created it.
 
-    keys: np.ndarray                 # sorted
-    rows: np.ndarray                 # object array of dict | TOMBSTONE
+    Record components store a ``batch`` (ColumnBatch, shredded at flush/
+    merge) plus a ``tomb`` bitmap as primary data; the row-dict view is
+    derived lazily.  Row-mode components (non-record values, or a forced
+    row path) store the object array directly and can derive a batch view
+    on demand (``as_batch``)."""
+
+    keys: np.ndarray                      # sorted; numeric or object dtype
+    batch: Optional[ColumnBatch] = None   # columnar primary data
+    tomb: Optional[np.ndarray] = None     # bool bitmap: entry is a delete
     valid: bool = False
     comp_id: int = field(default_factory=lambda: next(_component_ids))
-    # columnar engine's per-component shredded columns (name -> Column);
-    # immutability makes this cache trivially coherent
-    col_cache: Dict[str, Any] = field(default_factory=dict, repr=False)
+    _rows: Optional[np.ndarray] = field(default=None, repr=False)
+
+    @classmethod
+    def build(cls, keys: np.ndarray, vals: Sequence[Any],
+              schema: Optional[Any] = None,
+              columnar: Optional[bool] = None) -> "Component":
+        """Shred sorted (key, value) pairs into a component.  Values that
+        are all records (dicts) or tombstones shred columnar (unless
+        ``columnar=False``); anything else keeps row storage."""
+        tomb = np.fromiter((v is TOMBSTONE for v in vals), dtype=bool,
+                           count=len(vals))
+        shred = columnar is not False and all(
+            v is TOMBSTONE or isinstance(v, dict) for v in vals)
+        if not shred:
+            c = cls(keys=keys, tomb=tomb)
+            c._rows = _obj_array(vals)
+            return c
+        rows = [{} if t else v for t, v in zip(tomb.tolist(), vals)]
+        sch = schema() if callable(schema) else schema
+        if sch is not None:
+            extra: Optional[ColumnSchema] = None
+            for r in rows:          # never drop fields the schema missed
+                for k, v in r.items():
+                    if k not in sch:
+                        extra = extra or ColumnSchema()
+                        extra.observe_value(k, v)
+            if extra is not None:
+                sch = sch.union(extra)
+        return cls(keys=keys, batch=ColumnBatch.from_rows(rows, sch),
+                   tomb=tomb)
 
     @property
     def size(self) -> int:
@@ -73,11 +154,46 @@ class Component:
     def key_range(self) -> Tuple[Any, Any]:
         return (self.keys[0], self.keys[-1]) if self.size else (None, None)
 
+    @property
+    def is_columnar(self) -> bool:
+        return self.batch is not None
+
+    @property
+    def rows(self) -> np.ndarray:
+        """Derived row-dict view (lazy, cached): TOMBSTONE sentinels where
+        ``tomb`` is set, reassembled records elsewhere.  Only legacy
+        row-at-a-time callers force this; flush/merge/scan never do."""
+        if self._rows is None:
+            decoded = self.batch.to_rows()
+            out = np.empty(len(decoded), dtype=object)
+            tomb = self.tomb
+            for i, r in enumerate(decoded):
+                out[i] = TOMBSTONE if tomb[i] else r
+            self._rows = out
+        return self._rows
+
+    def as_batch(self, schema: Optional[Any] = None) -> ColumnBatch:
+        """Columnar view: primary storage when shredded at flush/merge;
+        shredded once (and cached) for row-mode record components."""
+        if self.batch is None:
+            sch = schema() if callable(schema) else schema
+            self.batch = ColumnBatch.from_rows(
+                [r if isinstance(r, dict) else {} for r in self._rows], sch)
+        return self.batch
+
+    def row_at(self, i: int) -> Any:
+        """Value at position ``i`` without forcing the full row view."""
+        if self._rows is not None:
+            return self._rows[i]
+        if self.tomb[i]:
+            return TOMBSTONE
+        return self.batch.row_at(i)
+
     def lookup(self, key: Any) -> Optional[Any]:
         # bisect (not np.searchsorted): tuple keys must stay scalar probes
         i = bisect.bisect_left(self.keys, key)
         if i < self.size and self.keys[i] == key:
-            return self.rows[i]
+            return self.row_at(i)
         return None
 
     def range(self, lo: Any, hi: Any) -> Tuple[np.ndarray, np.ndarray]:
@@ -120,17 +236,26 @@ class TieredMergePolicy:
 
 
 class LSMIndex:
-    """LSM-ified ordered index: dict memtable + sorted-run components."""
+    """LSM-ified ordered index: dict memtable + sorted-run components.
+
+    ``schema`` (a ColumnSchema or a zero-arg callable returning one, e.g.
+    ``PartitionedDataset.columnar_schema``) steers flush-time shredding;
+    ``columnar=False`` forces classic row-array components (the
+    benchmarked legacy path)."""
 
     def __init__(self, flush_threshold: int = 1024,
                  merge_policy: Optional[TieredMergePolicy] = None,
-                 wal: Optional[List[WALRecord]] = None):
+                 wal: Optional[List[WALRecord]] = None,
+                 schema: Optional[Any] = None,
+                 columnar: Optional[bool] = None):
         self.flush_threshold = int(flush_threshold)
         self.merge_policy = merge_policy or TieredMergePolicy()
         self.memtable: Dict[Any, Any] = {}
         self.components: List[Component] = []   # newest first
         self.wal: List[WALRecord] = wal if wal is not None else []
         self._lsn = itertools.count(len(self.wal))
+        self.schema = schema
+        self.columnar = columnar
         self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
                       "merged_rows": 0}
 
@@ -150,21 +275,37 @@ class LSMIndex:
             self.flush()
 
     def insert_batch(self, keys: Sequence[Any], rows: Sequence[Any]) -> None:
-        """Paper Table 4: batching amortizes per-statement overhead."""
-        for k, r in zip(keys, rows):
-            self.insert(k, r)
+        """Paper Table 4: batching amortizes per-statement overhead — one
+        WAL/memtable pass per chunk and one flush-threshold check per
+        chunk instead of per record (flushes still fire at the same
+        thresholds, so component sizes match the per-record path)."""
+        mem, wal, lsn = self.memtable, self.wal, self._lsn
+        i, n = 0, len(keys)
+        while i < n:
+            take = max(self.flush_threshold - len(mem), 1)
+            for k, r in zip(keys[i:i + take], rows[i:i + take]):
+                wal.append(WALRecord(next(lsn), "insert", k, r))
+                mem[k] = r
+            done = min(i + take, n) - i
+            self.stats["inserts"] += done
+            i += take
+            if len(mem) >= self.flush_threshold:
+                self.flush()
+                mem = self.memtable     # flush installed a fresh dict
 
     # -- flush / merge ------------------------------------------------------
     def flush(self, *, crash_before_validity: bool = False) -> Optional[Component]:
-        """Shadow-install the memtable as a new immutable component.  With
-        ``crash_before_validity`` the validity bit is never set, simulating a
-        crash mid-flush: recovery must ignore the component (paper §4.4)."""
+        """Shadow-install the memtable as a new immutable component,
+        shredding record values straight into the component's primary
+        ColumnBatch (sorted by key) — rows are never re-materialized.
+        With ``crash_before_validity`` the validity bit is never set,
+        simulating a crash mid-flush: recovery must ignore the component
+        (paper §4.4)."""
         if not self.memtable:
             return None
-        keys = sorted(self.memtable)
-        comp = Component(
-            keys=_obj_array(keys),
-            rows=_obj_array([self.memtable[k] for k in keys]))
+        keys, vals = _sorted_kv(self.memtable)
+        comp = Component.build(keys, vals, schema=self.schema,
+                               columnar=self.columnar)
         self.components.insert(0, comp)        # shadow: present but invalid
         if crash_before_validity:
             return comp
@@ -184,20 +325,33 @@ class LSMIndex:
 
     def merge(self, comps: Sequence[Component],
               *, crash_before_validity: bool = False) -> Component:
-        """k-way merge: newest component wins per key; tombstones survive the
-        merge unless it includes the oldest component (then they collapse)."""
+        """Column-wise k-way merge: the ``sorted_merge_take`` kernel
+        computes newest-wins take-indices over the per-component sorted
+        key arrays once, then every column — merged string dictionaries
+        included — is gathered without materializing a single row dict.
+        Tombstones survive the merge unless it includes the oldest
+        component (then they collapse).  Row-mode inputs (secondary
+        indexes, forced row path) merge via the classic dict pass."""
+        comps = list(comps)                    # newest -> oldest
         includes_oldest = self.components and comps[-1] is [
             c for c in self.components if c.valid][-1]
-        merged: Dict[Any, Any] = {}
-        for c in reversed(list(comps)):        # oldest first; newer overwrite
-            for k, r in zip(c.keys, c.rows):
-                merged[k] = r
-        if includes_oldest:
-            merged = {k: r for k, r in merged.items() if r is not TOMBSTONE}
-        keys = sorted(merged)
-        out = Component(
-            keys=_obj_array(keys),
-            rows=_obj_array([merged[k] for k in keys]))
+        if self.columnar is not False \
+                and all(c.batch is not None for c in comps):
+            merged, keys, tomb = ColumnBatch.merge_sorted(
+                [c.batch for c in comps], [c.keys for c in comps],
+                [c.tomb for c in comps],
+                drop_tombstones=bool(includes_oldest))
+            out = Component(keys=keys, batch=merged, tomb=tomb)
+        else:
+            seen: Dict[Any, Any] = {}
+            for c in reversed(comps):          # oldest first; newer overwrite
+                for k, r in zip(c.keys, c.rows):
+                    seen[k] = r
+            if includes_oldest:
+                seen = {k: r for k, r in seen.items() if r is not TOMBSTONE}
+            keys, vals = _sorted_kv(seen)
+            out = Component.build(keys, vals, schema=self.schema,
+                                  columnar=self.columnar)
         ids = {c.comp_id for c in comps}
         pos = min(i for i, c in enumerate(self.components) if c.comp_id in ids)
         self.components.insert(pos + 0, out)   # shadow next to its inputs
@@ -263,10 +417,16 @@ class LSMIndex:
 
 
 def recover(components: Sequence[Component], wal: Sequence[WALRecord],
-            *, replay_from_lsn: int = 0, flush_threshold: int = 1024) -> LSMIndex:
+            *, replay_from_lsn: int = 0, flush_threshold: int = 1024,
+            schema: Optional[Any] = None,
+            columnar: Optional[bool] = None) -> LSMIndex:
     """Crash recovery (paper §4.4): drop components without the validity bit,
-    then replay the committed WAL tail into a fresh memtable."""
-    idx = LSMIndex(flush_threshold=flush_threshold)
+    then replay the committed WAL tail into a fresh memtable.  Surviving
+    columnar components are adopted as-is (their batches *are* the data);
+    the replayed memtable re-shreds into the same form at its next
+    flush."""
+    idx = LSMIndex(flush_threshold=flush_threshold, schema=schema,
+                   columnar=columnar)
     idx.components = [c for c in components if c.valid]
     idx.wal = list(wal)
     idx._lsn = itertools.count(len(idx.wal))

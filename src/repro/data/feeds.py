@@ -8,8 +8,12 @@ upstream.  Adapted to the training substrate:
              token stream); primary feeds own an adaptor, secondary feeds
              subscribe to a joint of another feed.
   compute  — per-record UDFs (tokenize/pack/augment), applied in order.
-  store    — terminal sink: a PartitionedDataset (the BDMS path) or a
-             device-batch assembler for the trainer (the LM path).
+  store    — terminal sink: a ``DatasetSink`` accumulating per-dataset
+             micro-batches delivered via ``PartitionedDataset
+             .insert_batch`` (the BDMS path: batches flow into memory
+             components and flush columnar, never touching a per-record
+             code path) or a device-batch assembler for the trainer
+             (the LM path).
 
 Fault tolerance (paper [15]): every joint keeps a monotone *cursor* (records
 emitted) and a bounded replay buffer; a cursor is checkpointed with the model
@@ -28,7 +32,8 @@ from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequ
 import numpy as np
 
 __all__ = ["Adaptor", "SyntheticTokenAdaptor", "FileAdaptor", "SocketAdaptor",
-           "FeedJoint", "Feed", "RedundantIntake", "BatchAssembler"]
+           "FeedJoint", "Feed", "RedundantIntake", "BatchAssembler",
+           "DatasetSink"]
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +241,46 @@ class Feed:
         if self.adaptor is not None:
             self.adaptor.seek(self.cursor)
         self.joint.subscribers.update(state.get("subscribers", {}))
+
+
+class DatasetSink:
+    """Store-stage sink for a PartitionedDataset: accumulates records into
+    micro-batches and delivers them via ``insert_batch``, so the feed ->
+    memory component -> flush pipeline ingests batch-wise end to end
+    (paper [15]'s fault-tolerant feeds meet the columnar-native storage:
+    a full micro-batch becomes one WAL+memtable pass per partition and
+    flushes shred straight into component ColumnBatches).
+
+    ``flush()`` pushes a partial tail batch (call it at end-of-stream or
+    before a checkpoint); ``(feed cursor, len(backlog))`` is the
+    deterministic ingestion checkpoint, mirroring ``BatchAssembler``.
+    """
+
+    def __init__(self, dataset: Any, batch_size: int = 256):
+        self.dataset = dataset
+        self.batch_size = int(batch_size)
+        self.backlog: List[Any] = []
+        self.stats = {"batches": 0, "records": 0}
+
+    def __call__(self, records: Sequence[Any]) -> None:
+        self.backlog.extend(records)
+        while len(self.backlog) >= self.batch_size:
+            chunk = self.backlog[:self.batch_size]
+            self.backlog = self.backlog[self.batch_size:]
+            self.dataset.insert_batch(chunk)
+            self.stats["batches"] += 1
+            self.stats["records"] += len(chunk)
+
+    def flush(self) -> int:
+        """Deliver any buffered tail; returns the number of records
+        pushed."""
+        n = len(self.backlog)
+        if n:
+            self.dataset.insert_batch(self.backlog)
+            self.backlog = []
+            self.stats["batches"] += 1
+            self.stats["records"] += n
+        return n
 
 
 class BatchAssembler:

@@ -1,7 +1,7 @@
 """Fused columnar predicate + reduction kernels (the columnar engine's
 hot path).
 
-Three entry points, numpy in / python out, mirroring the ``ops.py``
+Four entry points, numpy in / python out, mirroring the ``ops.py``
 backend-dispatch idiom:
 
   range_mask(preds)              conjunctive [lo, hi] range predicate over
@@ -13,17 +13,29 @@ backend-dispatch idiom:
                                  sorted live-pk array -> position bitmap
                                  (the columnar index access path: bitmaps
                                  intersect before any record is gathered)
+  sorted_merge_take(...)         k-way sorted-PK merge/dedup/tombstone-drop
+                                 -> take indices into the concatenated
+                                 inputs (the LSM merge path: every column
+                                 of the merged component is one gather)
 
-On TPU both run as compiled Pallas kernels: predicate columns are stacked
+On TPU these run as compiled Pallas kernels: predicate columns are stacked
 into one [K, N] f32 operand, reductions accumulate across the row-block
 grid in VMEM (f32 — documented precision caveat for int64-domain columns).
 Elsewhere the pure-jnp oracle runs under ``jax.experimental.enable_x64``
 so int64 epoch-microsecond and dictionary-code columns evaluate exactly.
+
+All jnp-oracle entry points pad their operands to the next power of two
+(invalid rows, so results are unchanged) before hitting the jitted cores:
+repeated scans/merges over growing or gathered batches land on a bounded
+set of traced shapes instead of retracing per length.  ``trace_count()``
+exposes the cumulative number of traces so callers (ExecStats) can assert
+zero retraces on repeated queries.
 """
 
 from __future__ import annotations
 
 import functools
+import heapq
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -33,8 +45,24 @@ from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 
 from .ops import use_pallas
+# the canonical pow2 helper lives with the padded-column storage it
+# shapes (no cycle: columnar/__init__ pulls batch+schema only, and
+# batch.py imports this module lazily)
+from ..columnar.batch import pow2_len as _pow2_len
+from ..columnar.batch import promotes_lossless as _promotes_lossless
 
-__all__ = ["range_mask", "fused_filter_aggregate", "sorted_intersect_mask"]
+__all__ = ["range_mask", "fused_filter_aggregate", "sorted_intersect_mask",
+           "sorted_merge_take", "trace_count"]
+
+# Cumulative number of jit traces of the columnar cores.  The increments
+# below run at *trace* time only (python side effects inside jitted
+# functions), so ``trace_count()`` deltas expose retraces: a repeated
+# query over pow2-padded operands must not move this counter.
+_TRACES = {"n": 0}
+
+
+def trace_count() -> int:
+    return _TRACES["n"]
 
 # (data [N], valid [N] bool, lo, hi) — already in the column's physical
 # (numeric) domain; None bound means unbounded on that side.
@@ -66,6 +94,7 @@ def _prep_bounds(data: np.ndarray, lo: Any, hi: Any
 
 @jax.jit
 def _mask_core(datas, valids, los, his):
+    _TRACES["n"] += 1
     m = None
     for x, v, lo, hi in zip(datas, valids, los, his):
         mm = v & (x >= lo) & (x <= hi)
@@ -82,6 +111,7 @@ def _ident(dtype, is_min: bool):
 
 @jax.jit
 def _agg_core(datas, valids, los, his, agg_datas, agg_valids):
+    _TRACES["n"] += 1
     if datas:
         mask = _mask_core(datas, valids, los, his)
     else:
@@ -107,9 +137,35 @@ def _split_preds(preds: Sequence[Pred]):
     return datas, valids, los, his
 
 
-def _mask_jnp(preds: Sequence[Pred]) -> np.ndarray:
+def _pad_pred(p: Pred, np2: int) -> Pred:
+    """Length-pad one predicate column to ``np2`` with invalid rows: the
+    row-validity conjunct keeps padding out of the mask, so results are
+    identical while the jitted cores see a bounded set of shapes."""
+    data, valid, lo, hi = p
+    pad = np2 - data.shape[0]
+    if pad <= 0:
+        return p
+    return (np.concatenate([data, np.zeros(pad, dtype=data.dtype)]),
+            np.concatenate([valid, np.zeros(pad, dtype=bool)]), lo, hi)
+
+
+def _live_pred(n: int, np2: int) -> Pred:
+    """Unbounded predicate whose validity bitmap is the row-liveness flag
+    (True for the first ``n`` rows): ANDing it in masks padding out."""
+    live = np.zeros(np2, dtype=bool)
+    live[:n] = True
+    return (np.zeros(np2, dtype=np.float64), live, None, None)
+
+
+def _mask_jnp(preds: Sequence[Pred], n: int) -> np.ndarray:
+    """Operand arrays may already carry a pow2-padded tail of invalid
+    rows (``columnar.batch.Column.padded``); anything shorter is padded
+    here so the jitted core only ever sees pow2 shapes."""
+    np2 = max(_pow2_len(n),
+              max(int(p[0].shape[0]) for p in preds))
+    preds = [_pad_pred(p, np2) for p in preds]
     with enable_x64():
-        return np.asarray(_mask_core(*_split_preds(preds)))
+        return np.asarray(_mask_core(*_split_preds(preds)))[:n]
 
 
 def _agg_jnp(preds: Sequence[Pred],
@@ -117,13 +173,29 @@ def _agg_jnp(preds: Sequence[Pred],
              n: int) -> Dict[str, Any]:
     with enable_x64():
         if not aggs:
-            mask = _mask_jnp(preds) if preds else np.ones(n, dtype=bool)
+            mask = _mask_jnp(preds, n) if preds else np.ones(n, dtype=bool)
             return {"count": int(mask.sum()), "sums": [], "mins": [],
                     "maxs": [], "cnts": []}
+        np2 = max([_pow2_len(n)] + [int(a[0].shape[0]) for a in aggs]
+                  + [int(p[0].shape[0]) for p in preds])
+        if preds:              # padded rows are invalid in every conjunct
+            preds = [_pad_pred(p, np2) for p in preds]
+        elif np2 != n:         # no predicate: mask out padding explicitly
+            preds = [_live_pred(n, np2)]
+        padded_aggs = []
+        for data, valid in aggs:
+            pad = np2 - data.shape[0]
+            if pad > 0:
+                data = np.concatenate(
+                    [data, np.zeros(pad, dtype=data.dtype)])
+                valid = np.concatenate(
+                    [valid, np.zeros(pad, dtype=bool)])
+            padded_aggs.append((data, valid))
         datas, valids, los, his = _split_preds(preds)
         total, per_col = _agg_core(
             datas, valids, los, his,
-            tuple(a[0] for a in aggs), tuple(a[1] for a in aggs))
+            tuple(a[0] for a in padded_aggs),
+            tuple(a[1] for a in padded_aggs))
         out: Dict[str, Any] = {"count": int(total), "sums": [], "mins": [],
                                "maxs": [], "cnts": []}
         for s, mn, mx, cnt in per_col:
@@ -204,8 +276,8 @@ def _stack_preds(preds: Sequence[Pred], n: int, block_n: int
     hi = np.full((k8, 128), _BIG, dtype=np.float32)
     for j, (data, valid, l, h) in enumerate(preds):
         l, h = _bounds(l, h)
-        x = data.astype(np.float32)
-        x = np.where(valid, x, _BIG)        # invalid fails the hi bound
+        x = data[:n].astype(np.float32)     # operands may be pow2-padded
+        x = np.where(valid[:n], x, _BIG)    # invalid fails the hi bound
         vals[j, :n] = x
         lo[j, :] = np.float32(max(l, -_BIG))
         hi[j, :] = np.float32(min(h, _BIG - 1))
@@ -247,8 +319,8 @@ def _agg_pallas(preds: Sequence[Pred],
     a = np.zeros((m8, np_pad), dtype=np.float32)
     av = np.zeros((m8, np_pad), dtype=np.float32)
     for j, (data, valid) in enumerate(aggs):
-        a[j, :n] = data.astype(np.float32)
-        av[j, :n] = valid.astype(np.float32)
+        a[j, :n] = data[:n].astype(np.float32)
+        av[j, :n] = valid[:n].astype(np.float32)
     out = pl.pallas_call(
         _agg_kernel,
         grid=(np_pad // block_n,),
@@ -285,6 +357,7 @@ def _agg_pallas(preds: Sequence[Pred],
 def _intersect_core(keys, cands):
     """Sorted merge via binary search: for each candidate, its insertion
     point in ``keys``; a hit scatters into the position bitmap."""
+    _TRACES["n"] += 1
     n = keys.shape[0]
     pos = jnp.searchsorted(keys, cands)
     posc = jnp.clip(pos, 0, n - 1)
@@ -311,7 +384,7 @@ def _pow2_pad(arr: np.ndarray) -> np.ndarray:
     element (stays sorted; duplicates never flip membership), bounding the
     jit retrace count to O(log n * log m) shape pairs."""
     n = arr.shape[0]
-    np2 = 1 << (n - 1).bit_length()
+    np2 = _pow2_len(n)
     if np2 == n:
         return arr
     return np.concatenate([arr, np.full(np2 - n, arr[-1],
@@ -390,7 +463,7 @@ def range_mask(preds: Sequence[Pred], n: int,
     pallas = use_pallas() if force_pallas is None else force_pallas
     if pallas:
         return _mask_pallas(preds, n, interpret=interpret)
-    return _mask_jnp(preds)
+    return _mask_jnp(preds, n)
 
 
 def fused_filter_aggregate(preds: Sequence[Pred],
@@ -436,3 +509,121 @@ def sorted_intersect_mask(keys: np.ndarray, cands: np.ndarray,
         # below the jax dispatch floor the host sorted merge wins outright
         return _sorted_merge_mask(keys, cands)
     return _intersect_jnp(keys, cands)
+
+
+# ---------------------------------------------------------------------------
+# sorted k-way merge (columnar LSM merge path)
+# ---------------------------------------------------------------------------
+
+def _py_scalar_array(a: np.ndarray) -> np.ndarray:
+    """Numeric array -> object array of python scalars, whose arbitrary-
+    precision comparisons are exact across int/float domains (numpy
+    cross-dtype scalar comparisons promote lossily)."""
+    out = np.empty(a.shape[0], dtype=object)
+    for j, v in enumerate(a.tolist()):
+        out[j] = v
+    return out
+
+
+def _merge_take_object(arrays: Sequence[np.ndarray],
+                       offs: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Host fallback for object-dtype keys (string / tuple pks): heapq
+    merge of the per-component sorted runs; ties sort by component rank,
+    so the first entry of each key group is the newest version."""
+    def entries(i: int):
+        a, off = arrays[i], offs[i]
+        return ((a[j], i, off + j) for j in range(a.shape[0]))
+
+    keys_l: List[Any] = []
+    take_l: List[int] = []
+    prev = sentinel = object()
+    for key, _rank, pos in heapq.merge(
+            *(entries(i) for i in range(len(arrays)) if arrays[i].shape[0])):
+        if prev is sentinel or key != prev:
+            keys_l.append(key)
+            take_l.append(pos)
+            prev = key
+    out = np.empty(len(keys_l), dtype=object)
+    for j, k in enumerate(keys_l):
+        out[j] = k
+    return out, np.asarray(take_l, dtype=np.int64)
+
+
+def sorted_merge_take(key_arrays: Sequence[np.ndarray],
+                      tombs: Optional[Sequence[np.ndarray]] = None,
+                      *, drop_tombstones: bool = False,
+                      force_pallas: Optional[bool] = None,
+                      interpret: bool = False
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized k-way sorted-PK merge/dedup/tombstone-drop: the LSM
+    merge kernel.
+
+    ``key_arrays`` are per-component sorted, per-component-unique key
+    arrays ordered newest -> oldest.  Returns ``(keys, take, tomb)``
+    where ``keys`` is the sorted key union with the newest component
+    winning each duplicate, ``take`` indexes the winning entries in the
+    concatenation of ``key_arrays`` (in the given order) so every column
+    of the merged output is a single gather, and ``tomb`` marks entries
+    whose winner is a tombstone (``tombs`` aligned with ``key_arrays``).
+    With ``drop_tombstones`` those entries are removed (the paper's
+    merge-includes-oldest collapse).
+
+    Numeric keys reuse the ``sorted_intersect_mask`` dispatch stack
+    (Pallas membership kernel on TPU for f32-exact ints, the jitted
+    pow2-padded x64 searchsorted oracle elsewhere, host merge below the
+    dispatch floor): each component's membership bitmap over the sorted
+    key union doubles as its position map via an exclusive cumsum —
+    because every component key appears in the union, the number of
+    union entries before position j that belong to component c *is*
+    the rank of union[j] within component c.  Take-indices therefore
+    come out of K vectorized membership passes with no per-row python
+    loop.  Object keys fall back to a host heapq merge.
+    """
+    arrays = [np.asarray(a) for a in key_arrays]
+    lens = [int(a.shape[0]) for a in arrays]
+    offs = [0] * len(arrays)
+    for i in range(1, len(arrays)):
+        offs[i] = offs[i - 1] + lens[i - 1]
+    nonempty = [i for i, l in enumerate(lens) if l]
+    if not nonempty:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z.copy(), np.zeros(0, dtype=bool)
+    # mixed dtypes promote on concat: require a lossless round-trip
+    # into the promoted dtype or fall back to the exact object merge
+    numeric = all(arrays[i].dtype != object
+                  and arrays[i].dtype.kind in "biuf" for i in nonempty) \
+        and _promotes_lossless([arrays[i] for i in nonempty])
+    if numeric:
+        union = np.unique(np.concatenate([arrays[i] for i in nonempty]))
+        pallas = use_pallas() if force_pallas is None else force_pallas
+        take = np.full(union.shape[0], -1, dtype=np.int64)
+        for i in nonempty:                  # newest first: first hit wins
+            if pallas:
+                mem = sorted_intersect_mask(union, arrays[i],
+                                            force_pallas=force_pallas,
+                                            interpret=interpret)
+            else:
+                # merges see each (union, component) shape pair once, so
+                # the jitted oracle's trace never amortizes off-TPU: the
+                # host sorted merge gets a much higher floor than the
+                # (repeatedly-hit) intersect kernel's
+                mem = _sorted_merge_mask(union, arrays[i]) \
+                    if union.shape[0] + arrays[i].shape[0] <= 1 << 20 \
+                    else _intersect_jnp(union, arrays[i])
+            pos = np.cumsum(mem) - mem      # exclusive cumsum == rank in c
+            sel = (take < 0) & mem
+            take[sel] = offs[i] + pos[sel]
+    else:
+        arrays = [a if a.dtype == object else _py_scalar_array(a)
+                  for a in arrays]
+        union, take = _merge_take_object(arrays, offs)
+    if tombs is None:
+        return union, take, np.zeros(take.shape[0], dtype=bool)
+    tomb_all = np.concatenate(
+        [np.asarray(t, dtype=bool) for t, l in zip(tombs, lens) if l]) \
+        if any(lens) else np.zeros(0, dtype=bool)
+    tomb = tomb_all[take]
+    if drop_tombstones and tomb.any():
+        keep = ~tomb
+        union, take, tomb = union[keep], take[keep], tomb[keep]
+    return union, take, tomb

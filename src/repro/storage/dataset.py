@@ -1,5 +1,5 @@
 """Hash-partitioned datasets with LSM primary + node-local secondary indexes
-(paper §2.2, §4.3-4.4).
+(paper §2.2, §4.3-4.4), columnar-native storage.
 
 Faithful structure:
   * a Dataset is hash-partitioned (sharded) on its primary key;
@@ -11,11 +11,22 @@ Faithful structure:
     size difference between Schema and KeyOnly types reproduces Table 2;
   * record-level "transactions": every insert/delete WAL-logs before apply;
     recovery = drop invalid components + replay WAL tail (paper §4.4);
-  * ``scan_partition_batch`` serves the columnar engine (columnar/): each
-    LSM component shreds into cached per-column arrays on first touch, so
-    projected scans skip full-record decode (cf. the columnar-LSM paper in
-    PAPERS.md); the dataset tracks observed open fields on insert so
-    schemaless records still get columns.
+  * storage is **columnar-first** (cf. the columnar-LSM paper in
+    PAPERS.md): every immutable primary component carries a sorted-by-PK
+    ColumnBatch + tombstone bitmap as its *primary* representation,
+    shredded once at flush/merge inside core/lsm (the dataset hands the
+    LSM layer its ``columnar_schema`` so open fields observed on insert
+    shred correctly).  ``scan_partition_batch`` therefore reads component
+    batches zero-copy — concat + newest-wins position selection + the
+    tombstone bitmaps — decoding nothing; open-type drift is handled by
+    merging per-component ColumnSchemas at read time (mixed physical
+    kinds widen to ``obj`` on concat).  Row dicts exist only as the LSM
+    components' lazy derived view for the row engine;
+  * ``insert_batch`` is the feed ingestion path: records are validated
+    and grouped per partition, then applied as one WAL+memtable pass per
+    partition chunk (skipping per-record old-version lookups when no
+    secondary index needs them), so a feed -> memory component -> flush
+    pipeline never runs a per-record code path.
 """
 
 from __future__ import annotations
@@ -30,17 +41,22 @@ from ..core import adm
 from ..core.functions import (cells_covering_circle, spatial_cell,
                               spatial_intersect_circle, word_tokens)
 from ..core.lsm import LSMIndex, TOMBSTONE, TieredMergePolicy, WALRecord, \
-    recover
-from ..columnar.batch import Column, ColumnBatch, MISSING, build_column
+    key_array, recover
+from ..columnar.batch import ColumnBatch, promotes_lossless
 from ..columnar.schema import ColumnSchema
 
-__all__ = ["PartitionedDataset", "hash_partition"]
+__all__ = ["PartitionedDataset", "hash_partition", "hash_partition_array"]
 
 
 def hash_partition(key: Any, num_partitions: int) -> int:
     """Deterministic hash partitioning (the paper's shard function).  Uses a
     Fibonacci-style integer mix for ints and FNV-1a for strings so partition
-    spread does not depend on Python's randomized hash."""
+    spread does not depend on Python's randomized hash.  Integral floats
+    canonicalize to ints first, so a double-pk record stored under 2.0
+    routes to the same partition whether a later delete/lookup probes
+    with 2 or 2.0 (ADM casts ints into float fields at validation)."""
+    if isinstance(key, (float, np.floating)) and float(key).is_integer():
+        key = int(key)
     if isinstance(key, (int, np.integer)):
         return int((int(key) * 11400714819323198485) % (2 ** 64)
                    >> 40) % num_partitions
@@ -50,6 +66,16 @@ def hash_partition(key: Any, num_partitions: int) -> int:
             h = ((h ^ b) * 1099511628211) % (2 ** 64)
         return h % num_partitions
     return hash(key) % num_partitions
+
+
+def hash_partition_array(keys: np.ndarray, num_partitions: int) -> np.ndarray:
+    """Vectorized integer branch of ``hash_partition``: bit-identical
+    placement for integer key arrays (uint64 two's-complement wrap matches
+    python's mod-2**64 arithmetic).  The one copy of the mix constant both
+    batch routing and the columnar repartition operator share."""
+    h = (keys.astype(np.uint64)
+         * np.uint64(11400714819323198485)) >> np.uint64(40)
+    return (h % np.uint64(num_partitions)).astype(np.int64)
 
 
 @dataclass
@@ -63,7 +89,8 @@ class PartitionedDataset:
 
     def __init__(self, name: str, dtype: adm.RecordType, primary_key: str,
                  num_partitions: int = 4, flush_threshold: int = 256,
-                 merge_policy: Optional[TieredMergePolicy] = None):
+                 merge_policy: Optional[TieredMergePolicy] = None,
+                 columnar: bool = True):
         self.name = name
         self.dtype = dtype
         self.primary_key = (primary_key,)
@@ -71,8 +98,11 @@ class PartitionedDataset:
         self.num_partitions = num_partitions
         self.flush_threshold = flush_threshold
         self.merge_policy = merge_policy or TieredMergePolicy()
+        self.columnar = columnar            # False: legacy row components
         self.partitions: List[_Partition] = [
-            _Partition(LSMIndex(flush_threshold, self.merge_policy))
+            _Partition(LSMIndex(flush_threshold, self.merge_policy,
+                                schema=self.columnar_schema,
+                                columnar=None if columnar else False))
             for _ in range(num_partitions)]
         self.index_fields: List[str] = []
         self.index_kinds: Dict[str, str] = {}   # btree | rtree | keyword
@@ -82,8 +112,12 @@ class PartitionedDataset:
         self._open_schema = ColumnSchema()
         self._declared = tuple(f.name for f in dtype.fields)
         # per-partition assembled-scan cache, invalidated by any mutation
-        # (keyed on component ids + mutation counters)
+        # (keyed on component ids + mutation counters + recovery epoch:
+        # recovery replaces the LSMIndex, resetting its counters, so the
+        # epoch keeps pre-crash cache entries from colliding)
         self._scan_cache: Dict[int, Dict[str, Any]] = {}
+        self._recover_epoch = 0
+        self._schema_cache: Optional[Tuple[Any, ColumnSchema]] = None
 
     # -- DDL ---------------------------------------------------------------
     def _sec_keys(self, fld: str, value: Any, pk: Any) -> List[Tuple]:
@@ -132,9 +166,57 @@ class PartitionedDataset:
 
     def insert_batch(self, records: Sequence[Dict[str, Any]]) -> None:
         """One-statement batch (paper Table 4: amortizes per-statement
-        overhead — here, validation setup + WAL grouping)."""
-        for r in records:
-            self.insert(r)
+        overhead).  Records are validated and routed once, then applied
+        to each partition as a bulk WAL+memtable pass
+        (``LSMIndex.insert_batch``); the per-record old-version lookup
+        runs only for partitions that maintain secondary indexes.  This
+        is the feed store path: micro-batches flow straight into memory
+        components and flush columnar."""
+        P = self.num_partitions
+        buckets: List[Tuple[List[Any], List[Dict[str, Any]]]] = \
+            [([], []) for _ in range(P)]
+        validate = self.dtype.validate
+        # no per-record ADM encode here: batch-ingested records land as
+        # shredded columns at flush, not as encoded row bytes, so the
+        # ``bytes_encoded`` (row-format) accounting applies only to the
+        # per-record ``insert`` path
+        recs: List[Dict[str, Any]] = []
+        keys: List[Any] = []
+        for record in records:
+            rec = validate(record)
+            self._open_schema.observe_row(rec, self._declared)
+            recs.append(rec)
+            keys.append(rec[self.pk])
+        ids: Optional[List[int]] = None
+        try:        # vectorized routing, placement-identical to the int
+            arr = np.asarray(keys)      # branch of ``hash_partition``
+            if arr.dtype.kind not in "iu":
+                raise TypeError("non-int pks")
+            ids = hash_partition_array(arr, P).tolist()
+        except (TypeError, ValueError, OverflowError):
+            ids = None
+        for j, (key, rec) in enumerate(zip(keys, recs)):
+            ks, rs = buckets[ids[j] if ids is not None
+                             else hash_partition(key, P)]
+            ks.append(key)
+            rs.append(rec)
+        for part, (ks, rs) in zip(self.partitions, buckets):
+            if not ks:
+                continue
+            if part.secondaries:
+                for k, r in zip(ks, rs):
+                    old = part.primary.lookup(k)
+                    part.primary.insert(k, r)
+                    for fld, ix in part.secondaries.items():
+                        if old is not None and fld in old:
+                            for k2 in self._sec_keys(fld, old[fld], k):
+                                ix.delete(k2)
+                        if fld in r:
+                            for k2 in self._sec_keys(fld, r[fld], k):
+                                ix.insert(k2, k)
+            else:
+                part.primary.insert_batch(ks, rs)
+        self.stats["inserts"] += len(records)
 
     def delete(self, key: Any) -> bool:
         part = self.partitions[hash_partition(key, self.num_partitions)]
@@ -168,41 +250,28 @@ class PartitionedDataset:
     # -- columnar read path --------------------------------------------------
     def columnar_schema(self) -> ColumnSchema:
         """Declared fields (from the RecordType) + open fields observed on
-        insert — the schema the columnar engine shreds against."""
-        return ColumnSchema.from_record_type(self.dtype) \
+        insert, widened at read time by the per-component batch schemas —
+        open-type drift between flushes (an int field turning string)
+        surfaces here and unifies to ``obj``.  This is both the shred
+        schema handed to the LSM layer at flush and the scan schema."""
+        ver = (tuple(self._partition_version(i)
+                     for i in range(self.num_partitions)),
+               tuple(sorted(self._open_schema.kinds.items())))
+        if self._schema_cache is not None and self._schema_cache[0] == ver:
+            return self._schema_cache[1]
+        sch = ColumnSchema.from_record_type(self.dtype) \
             .union(self._open_schema)
-
-    def _component_columns(self, comp, names: Sequence[str],
-                           schema: ColumnSchema) -> ColumnBatch:
-        """Column-at-a-time shred of one immutable component.  Each column
-        is built once and cached on the component (core/lsm Component
-        ``col_cache``), so projected scans never decode unrequested
-        fields and repeat scans reuse prior work."""
-        cache = comp.col_cache
-        cols: Dict[str, Column] = {}
-        for name in names:
-            kind = schema.kind(name)
-            col = cache.get(name)
-            if col is None or (col.kind != kind and col.kind != "obj"):
-                raw = [MISSING if r is TOMBSTONE else r.get(name, MISSING)
-                       for r in comp.rows]
-                col = build_column(raw, kind)
-                cache[name] = col
-            cols[name] = col
-        return ColumnBatch(cols, comp.size)
-
-    @staticmethod
-    def _tomb_array(comp) -> np.ndarray:
-        tomb = comp.col_cache.get("__tomb")
-        if tomb is None:
-            tomb = np.fromiter((r is TOMBSTONE for r in comp.rows),
-                               dtype=bool, count=comp.size)
-            comp.col_cache["__tomb"] = tomb
-        return tomb
+        for part in self.partitions:
+            for comp in part.primary.components:
+                if comp.valid and comp.batch is not None:
+                    sch = sch.union(comp.batch.schema())
+        self._schema_cache = (ver, sch)
+        return sch
 
     def _partition_version(self, i: int) -> Tuple:
         prim = self.partitions[i].primary
-        return (tuple(c.comp_id for c in prim.components if c.valid),
+        return (self._recover_epoch,
+                tuple(c.comp_id for c in prim.components if c.valid),
                 prim.stats["inserts"], prim.stats["deletes"])
 
     def _live_selection(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -223,7 +292,7 @@ class PartitionedDataset:
         tombs: List[np.ndarray] = []
         mem = prim.memtable            # newest version of any key it holds
         if mem:
-            key_arrays.append(np.asarray(list(mem), dtype=object))
+            key_arrays.append(key_array(list(mem)))
             tombs.append(np.fromiter((r is TOMBSTONE
                                       for r in mem.values()),
                                      dtype=bool, count=len(mem)))
@@ -231,30 +300,40 @@ class PartitionedDataset:
             if not comp.valid or comp.size == 0:
                 continue
             key_arrays.append(comp.keys)
-            tombs.append(self._tomb_array(comp))
+            tombs.append(comp.tomb)
         if not key_arrays:
             idx = np.zeros(0, dtype=np.int64)
             keys: np.ndarray = np.zeros(0, dtype=np.int64)
         else:
             all_tomb = np.concatenate(tombs)
-            flat_keys = [k for ka in key_arrays for k in ka.tolist()]
             all_keys: Optional[np.ndarray]
-            try:
-                all_keys = np.asarray(flat_keys)
-                if all_keys.dtype == object:
-                    raise TypeError("inhomogeneous keys")
-                # first occurrence in newest-first concat order == newest
+            # mixed dtypes promote on concat: require a lossless round-
+            # trip (the guard the merge kernel shares) or fall back to
+            # the exact python-scalar path below
+            numeric = all(ka.dtype != object and ka.dtype.kind in "biuf"
+                          for ka in key_arrays) \
+                and promotes_lossless(key_arrays)
+            if numeric:
+                # numeric pks: one concat, no per-key python hop — the
+                # component key arrays are already dense numeric
+                all_keys = np.concatenate(key_arrays)
                 _, idx = np.unique(all_keys, return_index=True)
-            except TypeError:
-                all_keys = None
-                seen = set()
-                first = []
-                for pos, k2 in enumerate(flat_keys):
-                    if k2 not in seen:
-                        seen.add(k2)
-                        first.append((k2, pos))
-                first.sort(key=lambda t: t[0])
-                idx = np.asarray([p for _, p in first], dtype=np.int64)
+            else:
+                flat_keys = [k for ka in key_arrays for k in ka.tolist()]
+                all_keys = key_array(flat_keys)   # lossless or object
+                if all_keys.dtype != object:
+                    # first occurrence in newest-first concat == newest
+                    _, idx = np.unique(all_keys, return_index=True)
+                else:
+                    all_keys = None
+                    seen = set()
+                    first = []
+                    for pos, k2 in enumerate(flat_keys):
+                        if k2 not in seen:
+                            seen.add(k2)
+                            first.append((k2, pos))
+                    first.sort(key=lambda t: t[0])
+                    idx = np.asarray([p for _, p in first], dtype=np.int64)
             idx = idx[~all_tomb[idx]]
             if all_keys is not None:
                 keys = all_keys[idx]
@@ -277,10 +356,14 @@ class PartitionedDataset:
     def scan_partition_batch(self, i: int,
                              columns: Optional[Sequence[str]] = None
                              ) -> ColumnBatch:
-        """Columnar scan of one partition: per-component cached column
-        projection + vectorized newest-wins dedup across components and
-        the memtable.  Row order (sorted by pk) and contents match
-        ``scan_partition`` exactly."""
+        """Columnar scan of one partition, zero-copy over component
+        storage: the immutable components' primary ColumnBatches are
+        projected and concatenated as-is (string dictionaries remap onto
+        the merged dictionary; mixed open-type kinds widen to ``obj``),
+        then the vectorized newest-wins position selection — computed
+        from key + tombstone arrays only — gathers live rows.  Nothing
+        is shredded except the (mutable) memtable tail.  Row order
+        (sorted by pk) and contents match ``scan_partition`` exactly."""
         schema = self.columnar_schema()
         names = list(schema) if columns is None \
             else [c for c in columns if c in schema]
@@ -299,7 +382,7 @@ class PartitionedDataset:
         for comp in prim.components:   # newest first, as in _live_selection
             if not comp.valid or comp.size == 0:
                 continue
-            batches.append(self._component_columns(comp, names, schema))
+            batches.append(comp.as_batch(schema).project(names))
         if not batches:
             out = ColumnBatch.from_rows([], schema, names)
         else:
@@ -438,9 +521,12 @@ class PartitionedDataset:
     def crash_and_recover(self) -> "PartitionedDataset":
         """Simulate a crash: rebuild every partition from (valid components +
         WAL), discarding unflushed memtables and invalid components."""
+        self._recover_epoch += 1     # recovered indexes restart counters
         for part in self.partitions:
             part.primary = recover(part.primary.components, part.primary.wal,
-                                   flush_threshold=self.flush_threshold)
+                                   flush_threshold=self.flush_threshold,
+                                   schema=self.columnar_schema,
+                                   columnar=None if self.columnar else False)
             for fld in list(part.secondaries):
                 sec = part.secondaries[fld]
                 part.secondaries[fld] = recover(

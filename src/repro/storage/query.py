@@ -52,6 +52,9 @@ class ExecStats:
     rows_index_vectorized: int = 0   # subset of rows_vectorized produced
     #                             by vectorized index access paths (index
     #                             search -> bitmap intersect -> gather)
+    kernel_retraces: int = 0    # jit traces of the columnar kernel cores
+    #                             this query triggered: repeated queries
+    #                             over pow2-padded batches must show 0
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -368,6 +371,9 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
                     kind=getattr(ds, "index_kinds", {}).get(fld, "btree")))
     phys = optimize(plan, catalog, config)
     ex = Executor(datasets, vectorize=vectorize)
+    from ..kernels import columnar_ops as K
+    traces0 = K.trace_count()
     parts = ex.execute_op(phys)
+    ex.stats.kernel_retraces = K.trace_count() - traces0
     rows = [r for p in parts for r in p]
     return rows, ex

@@ -147,3 +147,30 @@ def test_dataverse_catalog_metadata_as_data():
     cat = dv.catalog_records()
     assert cat[0]["dataset"] == "People"
     assert cat[0]["primary_key"] == ["id"]
+
+
+def test_float_fields_cast_ints_at_validation():
+    """ADM casts ints into declared float/double fields at ingest, so the
+    value a lookup returns does not depend on whether the record still
+    sits in the memtable or was already shredded into a component
+    (regression for the columnar-native storage)."""
+    import pytest
+    from repro.core import adm
+    rt = adm.RecordType("P", (adm.Field("id", adm.INT64),
+                              adm.Field("price", adm.DOUBLE)), open=True)
+    rec = rt.validate({"id": 1, "price": 10})
+    assert rec["price"] == 10.0 and isinstance(rec["price"], float)
+    with pytest.raises(adm.ValidationError):
+        adm.DOUBLE.validate("not a number")
+
+
+def test_point_coords_validated_not_just_encoded():
+    """POINT coordinate typing must be gated at validation (shared by
+    insert and insert_batch), not only at encode time, since batch
+    ingestion stores columns without encoding (regression)."""
+    import pytest
+    from repro.core import adm
+    assert adm.POINT.validate((1.5, -2)) == (1.5, -2)
+    for bad in (("x", "y"), (1.0,), (1.0, 2.0, 3.0), (True, 1.0)):
+        with pytest.raises(adm.ValidationError):
+            adm.POINT.validate(bad)

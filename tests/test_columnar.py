@@ -199,13 +199,16 @@ def test_scan_batch_sees_updates_deletes_and_tombstones():
     assert next(r for r in got if r["id"] == 11)["name"] == "Updated"
 
 
-def test_scan_projection_and_component_cache(tiny):
+def test_scan_projection_and_component_storage(tiny):
     msgs = tiny["MugshotMessages"]
     b = msgs.scan_partition_batch(0, ["message-id", "timestamp"])
     assert set(b.columns) == {"message-id", "timestamp"}
     comp = next(c for c in msgs.partitions[0].primary.components if c.valid)
-    assert "timestamp" in comp.col_cache      # shredded once, cached
-    assert "message" not in comp.col_cache    # projection skipped decode
+    # columnar-native storage: the flush shredded the component's batch
+    # as primary data (tombstone bitmap included) and no row-dict view
+    # was ever forced — projected scans are zero-copy dict subsets
+    assert comp.batch is not None and "timestamp" in comp.batch.columns
+    assert comp.tomb is not None and comp._rows is None
     again = msgs.scan_partition_batch(0, ["message-id", "timestamp"])
     assert again.to_rows() == b.to_rows()
 
@@ -421,3 +424,77 @@ def test_schema_inference_unifies_open_fields():
     assert s.kind("x") == "f64"
     s.observe_value("x", "oops")
     assert s.kind("x") == "obj"
+
+
+# ---------------------------------------------------------------------------
+# shape-stable kernels: pow2-padded batches never retrace on repeats
+# ---------------------------------------------------------------------------
+
+def test_repeated_queries_zero_kernel_retraces(tiny):
+    """Component batches and post-index-gather aggregate batches go
+    through the shared pow2-padding path, so a repeated query — scan or
+    index access -> aggregate — triggers zero new jit traces
+    (``ExecStats.kernel_retraces``)."""
+    scan_agg = A.aggregate(
+        A.select(A.scan("MugshotMessages"),
+                 pred=lambda r: r["timestamp"] >= MLO,
+                 fields=["timestamp"], ranges={"timestamp": (MLO, None)},
+                 ranges_exact=True, hints=["skip-index"]),
+        {"c": ("count", "*"), "av": ("avg", "author-id")})
+    index_agg = A.aggregate(
+        A.select(A.scan("MugshotMessages"),
+                 pred=lambda r: r["timestamp"] >= MLO,
+                 fields=["timestamp"], ranges={"timestamp": (MLO, None)}),
+        {"c": ("count", "*"), "mx": ("max", "message-id")})
+    for plan in (scan_agg, index_agg):
+        run_query(plan, tiny, vectorize=True)          # warm traces
+        _, ex = run_query(plan, tiny, vectorize=True)
+        assert ex.stats.kernel_retraces == 0
+        _, ex = run_query(plan, tiny, vectorize=True)
+        assert ex.stats.kernel_retraces == 0
+    assert ex.stats.rows_index_vectorized > 0          # index path ran
+
+
+def test_column_padded_view_cached_and_invalid():
+    b = ColumnBatch.from_rows([{"a": i} for i in range(13)])
+    col = b.columns["a"]
+    data, valid = col.padded()
+    assert data.shape == (16,) and valid.shape == (16,)
+    assert not valid[13:].any() and valid[:13].all()
+    assert col.padded()[0] is data               # cached, one allocation
+    # pow2 lengths pass through untouched
+    b2 = ColumnBatch.from_rows([{"a": i} for i in range(8)])
+    d2, _ = b2.columns["a"].padded()
+    assert d2 is b2.columns["a"].data
+
+
+# ---------------------------------------------------------------------------
+# ColumnBatch as LSM primary storage: sort_by / merge_sorted
+# ---------------------------------------------------------------------------
+
+def test_batch_sort_by_and_merge_sorted():
+    rows_new = [{"id": 5, "v": "n5"}, {"id": 1, "v": "n1"}]
+    rows_old = [{"id": 1, "v": "o1"}, {"id": 2, "v": "o2"},
+                {"id": 9, "v": "o9"}]
+    bn = ColumnBatch.from_rows(rows_new).sort_by(["id"])
+    bo = ColumnBatch.from_rows(rows_old).sort_by(["id"])
+    assert [r["id"] for r in bn.to_rows()] == [1, 5]
+    merged, keys, tomb = ColumnBatch.merge_sorted(
+        [bn, bo], [np.asarray([1, 5]), np.asarray([1, 2, 9])],
+        [np.zeros(2, bool), np.zeros(3, bool)])
+    assert keys.tolist() == [1, 2, 5, 9] and not tomb.any()
+    got = merged.to_rows()
+    assert [r["v"] for r in got] == ["n1", "o2", "n5", "o9"]  # newest wins
+    # tombstone drop (merge includes the oldest component)
+    merged2, keys2, tomb2 = ColumnBatch.merge_sorted(
+        [bn, bo], [np.asarray([1, 5]), np.asarray([1, 2, 9])],
+        [np.asarray([True, False]), np.zeros(3, bool)],
+        drop_tombstones=True)
+    assert keys2.tolist() == [2, 5, 9] and not tomb2.any()
+    assert [r["v"] for r in merged2.to_rows()] == ["o2", "n5", "o9"]
+
+
+def test_batch_sort_by_absent_values_sort_first():
+    bm = ColumnBatch.from_rows([{"id": 1, "a": 3}, {"id": 2}])
+    assert [r["id"] for r in bm.sort_by(["a"]).to_rows()] == [2, 1]
+    assert [r["id"] for r in bm.sort_by(["a"], desc=True).to_rows()] == [1, 2]

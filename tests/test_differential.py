@@ -4,9 +4,13 @@ Property-based generator of random datasets (open-type records, optional
 fields, updates, deletes, LSM flush/merge/recovery) + query plans
 (including every index access path), asserting that
 ``Executor(vectorize=True)`` and ``vectorize=False`` produce identical
-sorted results.  Runs 220 generated cases under a fixed seed (the
+sorted results.  Runs 260 generated cases under a fixed seed (the
 hypothesis shim seeds per test name; real hypothesis runs derandomized),
-so ``scripts/verify.sh`` is reproducible in CI.
+so ``scripts/verify.sh`` is reproducible in CI.  The lifecycle-schedule
+cases additionally interleave explicit flush/merge/crash_and_recover with
+queries and assert the columnar-native storage invariant: disk-resident
+components keep ColumnBatch + tombstone bitmap as primary data, with the
+row view derived lazily and never retained by flush or merge.
 """
 
 import random
@@ -21,7 +25,7 @@ from repro.core import adm
 from repro.core import algebra as A
 from repro.core.functions import (edit_distance_check, spatial_distance,
                                   word_tokens)
-from repro.core.lsm import TieredMergePolicy
+from repro.core.lsm import LSMIndex, TieredMergePolicy
 from repro.storage.dataset import PartitionedDataset
 from repro.storage.query import run_query
 
@@ -203,6 +207,102 @@ def test_differential_keyword(seed, n_rows, parts, threshold, token, ed):
     plan = A.select(A.scan("D"), pred=pred, fields=["txt"],
                     keyword=("txt", token, ed))
     _assert_engines_agree(ds, plan)
+
+
+def _check_columnar_primary(ds):
+    """Every disk-resident primary component keeps ColumnBatch + tombstone
+    bitmap as its *primary* data — no retained row list, no stale per-
+    column cache (the pre-refactor double representation)."""
+    for part in ds.partitions:
+        for comp in part.primary.components:
+            if comp.valid:
+                assert comp.batch is not None
+                assert comp.tomb is not None
+                assert not hasattr(comp, "col_cache")
+
+
+@given(st.integers(0, 10 ** 9), st.integers(2, 4),
+       st.sampled_from([6, 13, 31]))
+@settings(max_examples=40, deadline=None, derandomize=True)
+def test_differential_lifecycle_schedules(seed, parts, threshold):
+    """Interleaved insert / insert_batch / delete / explicit flush /
+    explicit merge / crash_and_recover schedules: row and columnar
+    engines stay in lockstep at every checkpoint, and components created
+    by any flush or merge carry columnar primary data throughout."""
+    rng = random.Random(seed)
+    ds = PartitionedDataset(
+        "D", _record_type(), "id", num_partitions=parts,
+        flush_threshold=threshold,
+        merge_policy=TieredMergePolicy(k=rng.choice([2, 3])))
+    ds.create_index("a")
+    ds.create_index("txt", kind="keyword")
+    key_space = 120
+
+    def mk_row():
+        r = {"id": rng.randrange(key_space), "g": rng.randrange(4)}
+        if rng.random() < 0.8:
+            r["a"] = rng.randrange(-50, 50)
+        if rng.random() < 0.6:
+            r["txt"] = " ".join(rng.choice(VOCAB) for _ in range(2))
+        if rng.random() < 0.4:   # open field of drifting kind
+            r["x"] = rng.choice([rng.randrange(100), rng.uniform(0.0, 9.0),
+                                 rng.choice(VOCAB)])
+        return r
+
+    for _ in range(rng.randrange(4, 9)):
+        op = rng.choice(["insert", "insert", "batch", "delete", "flush",
+                         "merge", "recover", "query"])
+        if op == "insert":
+            for _ in range(rng.randrange(1, threshold + 3)):
+                ds.insert(mk_row())
+        elif op == "batch":
+            ds.insert_batch(
+                [mk_row() for _ in range(rng.randrange(1, 2 * threshold))])
+        elif op == "delete":
+            for _ in range(rng.randrange(1, 6)):
+                ds.delete(rng.randrange(key_space))
+        elif op == "flush":
+            for part in ds.partitions:
+                part.primary.flush()
+        elif op == "merge":
+            part = ds.partitions[rng.randrange(parts)]
+            valid = [c for c in part.primary.components if c.valid]
+            if len(valid) >= 2:
+                k = rng.randrange(2, len(valid) + 1)
+                start = rng.randrange(0, len(valid) - k + 1)
+                part.primary.merge(valid[start:start + k])
+        elif op == "recover":
+            ds.crash_and_recover()
+        else:
+            _assert_engines_agree(ds, _relational_plan(
+                rng, rng.choice(["btree", "agg", "group", "topk"])))
+        _check_columnar_primary(ds)
+    _assert_engines_agree(ds, _relational_plan(rng, "multi"))
+    _check_columnar_primary(ds)
+
+
+def test_merge_gathers_columns_without_forcing_rows():
+    """The column-wise merge path materializes no row dicts: merging
+    components whose lazy row view was never forced leaves every input
+    — and the merged output — with ``_rows`` unset, while contents
+    (string dictionaries included) stay exact."""
+    ix = LSMIndex(flush_threshold=4, merge_policy=TieredMergePolicy(k=99))
+    for i in range(16):
+        ix.insert(i, {"id": i, "v": f"s{i % 5}", "w": i * 2})
+    for i in (2, 7):
+        ix.delete(i)
+    ix.flush()                                    # tombstones flush too
+    comps = [c for c in ix.components if c.valid]
+    assert len(comps) >= 2
+    assert all(c.batch is not None and c._rows is None for c in comps)
+    out = ix.merge(comps)                         # includes the oldest
+    assert out.valid and out.batch is not None
+    assert out._rows is None                      # no row materialized
+    assert all(c._rows is None for c in comps)    # inputs never forced
+    assert not out.tomb.any()                     # tombstones collapsed
+    # contents exact (this forces the lazy view — only now, on demand)
+    assert dict(ix.items()) == {i: {"id": i, "v": f"s{i % 5}", "w": i * 2}
+                                for i in range(16) if i not in (2, 7)}
 
 
 def test_index_plans_never_silently_fall_back():

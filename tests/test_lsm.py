@@ -181,3 +181,89 @@ def test_partition_pk_array_tracks_lifecycle():
     check()
     ds.insert({"id": 100, "v": 1})
     check()                        # cache invalidated by the mutation
+
+
+def test_scan_cache_not_stale_across_recovery():
+    """Recovery replaces the primary LSMIndex and resets its counters, so
+    the scan/pk-array cache version must carry the recovery epoch — a
+    post-crash state whose counters collide with a cached pre-crash
+    version must not serve the stale batch (regression)."""
+    ds = _mk_dataset(threshold=100, parts=1)
+    ds.insert({"id": 1, "v": 1})
+    assert [r["id"] for r in ds.scan_partition_batch(0).to_rows()] == [1]
+    assert ds.partition_pk_array(0).tolist() == [1]
+    ds.crash_and_recover()
+    ds.insert({"id": 2, "v": 2})
+    assert [r["id"] for r in ds.scan_partition_batch(0).to_rows()] == [1, 2]
+    assert ds.partition_pk_array(0).tolist() == [1, 2]
+
+
+def test_flush_mixed_numeric_keys_lossless():
+    """Mixed int/float key domains must not flush through a lossy float64
+    unification (an int beyond 2**53 would round and corrupt the sorted
+    run); the key sort falls back to the object path (regression)."""
+    ix = LSMIndex(flush_threshold=100)
+    big = 2 ** 53 + 1
+    ix.insert(big, {"v": 1})
+    ix.insert(0.5, {"v": 2})
+    ix.flush()
+    assert ix.lookup(big) == {"v": 1}
+    assert ix.lookup(0.5) == {"v": 2}
+    assert sorted(k for k, _ in ix.items()) == [0.5, big]
+
+
+def test_batch_and_single_insert_validate_alike():
+    """insert() used to reject out-of-int64-range pks only via encode-time
+    struct.error; batch ingestion stores columns without encoding, so the
+    validator itself must gate both DML paths identically (regression)."""
+    from repro.core import adm
+    ds = _mk_dataset()
+    with pytest.raises(adm.ValidationError):
+        ds.insert({"id": 2 ** 63, "v": 1})
+    with pytest.raises(adm.ValidationError):
+        ds.insert_batch([{"id": 2 ** 63, "v": 1}])
+    assert len(ds) == 0
+
+
+def test_merge_mixed_dtype_key_components_lossless():
+    """Components whose sorted key arrays carry different numeric dtypes
+    (int64 vs float64) must not merge through a lossy float64 union:
+    both the columnar take-index kernel and the row-mode dict fallback
+    fall back to exact python-scalar merging (regression)."""
+    big = 2 ** 53 + 1
+    near = float(2 ** 53)          # collides with big under f64 rounding
+    ix = LSMIndex(flush_threshold=100, merge_policy=TieredMergePolicy(k=99))
+    ix.insert(big, {"v": 1})
+    ix.flush()                     # int64-key component
+    ix.insert(near, {"v": 2})
+    ix.flush()                     # float64-key component
+    ix.merge([c for c in ix.components if c.valid])
+    assert dict(ix.items()) == {big: {"v": 1}, near: {"v": 2}}
+
+    ix2 = LSMIndex(flush_threshold=100,
+                   merge_policy=TieredMergePolicy(k=99))   # row-mode values
+    ix2.insert(big, "a")
+    ix2.flush()
+    ix2.insert(near, "b")
+    ix2.flush()
+    ix2.merge([c for c in ix2.components if c.valid])
+    assert dict(ix2.items()) == {big: "a", near: "b"}
+
+
+def test_double_pk_routes_int_and_float_probes_alike():
+    """ADM casts int keys into a double pk at validation (storing 7.0 for
+    an inserted 7), so hash routing must canonicalize integral floats —
+    a delete/lookup probing with the original int has to reach the same
+    partition the insert used (regression)."""
+    from repro.core import adm
+    from repro.storage.dataset import PartitionedDataset
+    rt = adm.RecordType("F", (adm.Field("id", adm.DOUBLE),
+                              adm.Field("v", adm.INT64)), open=True)
+    ds = PartitionedDataset("F", rt, "id", num_partitions=4,
+                            flush_threshold=4)
+    for i in range(12):
+        ds.insert({"id": i, "v": i})
+    assert ds.lookup(7) == {"id": 7.0, "v": 7}
+    assert ds.lookup(7.0) == {"id": 7.0, "v": 7}
+    assert ds.delete(7) is True
+    assert ds.lookup(7.0) is None and len(ds) == 11
