@@ -1,0 +1,215 @@
+"""Fuzzy query paths: ngram index + vectorized kernels vs the scalar
+python paths.
+
+Two workloads:
+
+  * fuzzy selects (edit-distance and gram-Jaccard) on an ngram(3)-indexed
+    string field: the columnar NGRAM_INDEX_SEARCH -> T_OCCURRENCE ->
+    batched-verify chain vs the row engine's full dictionary scan with a
+    per-row python predicate (``RewriteConfig(use_indexes=False)``, the
+    pre-ngram fuzzy path).  Zero result diffs, ``rows_fuzzy_vectorized >
+    0`` with ``rows_fallback == 0``, and zero kernel retraces on the
+    repeated (timed) queries are asserted; at full size the edit-distance
+    select must beat the scan by >= 5x.
+  * FuzzyJoin verification: the batched dictionary-coded Jaccard pass vs
+    the per-pair python loop on the same LSH candidate set — identical
+    pairs, >= 5x at full size.
+
+Usage: PYTHONPATH=src python -m benchmarks.fuzzy_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+import time
+
+from repro.core import adm
+from repro.core import algebra as A
+from repro.core.rewriter import RewriteConfig
+from repro.data.dedup import FuzzyJoin, minhash_signature
+from repro.fuzzy import fuzzy_predicate
+from repro.storage.dataset import PartitionedDataset
+from repro.storage.query import run_query
+
+N_ROWS, N_JOIN = 20000, 3500
+SMOKE_ROWS, SMOKE_JOIN = 2000, 400
+
+
+def _timed(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _canon(rows):
+    return sorted(repr(sorted(r.items(), key=lambda kv: kv[0]))
+                  for r in rows)
+
+
+def _word(rng):
+    return "".join(rng.choice("abcdefghij") for _ in range(rng.randrange(4, 12)))
+
+
+def _build_dataset(n_rows: int):
+    rng = random.Random(42)
+    vocab = [_word(rng) for _ in range(600)]
+    target = vocab[0]
+    # plant near-duplicates of the target so fuzzy selects hit
+    for _ in range(30):
+        j = rng.randrange(len(target))
+        vocab.append(target[:j] + rng.choice("xyz") + target[j:])
+    rt = adm.RecordType("FuzzyT", (
+        adm.Field("id", adm.INT64),
+        adm.Field("w", adm.STRING),
+    ), open=True)
+    ds = PartitionedDataset("F", rt, "id", num_partitions=4,
+                            flush_threshold=1024)
+    ds.create_index("w", kind="ngram")
+    ds.insert_batch([{"id": i, "w": rng.choice(vocab)}
+                     for i in range(n_rows)])
+    return ds, target
+
+
+def _select_rows(ds, target, repeat):
+    out = []
+    specs = {
+        "ed_select": ("w", "ed", target, 2),
+        "jaccard_select": ("w", "jaccard", target, 0.6),
+    }
+    for name, spec in specs.items():
+        # pred IS the spec's predicate, so the plan declares exactness
+        # and the columnar chain never re-runs it row-at-a-time
+        plan = A.select(A.scan("F"), pred=fuzzy_predicate(spec),
+                        fields=["w"], fuzzy=spec, ranges_exact=True)
+        # baseline: the python dictionary-scan path (no index rule)
+        (res_s, t_s) = _timed(lambda p=plan: run_query(
+            p, {"F": ds}, config=RewriteConfig(use_indexes=False)), repeat)
+        run_query(plan, {"F": ds}, vectorize=True)   # warm jit caches
+        (res_c, t_c) = _timed(lambda p=plan: run_query(
+            p, {"F": ds}, vectorize=True), repeat)
+        assert _canon(res_s[0]) == _canon(res_c[0]), \
+            f"{name}: fuzzy chain diverges from the scalar scan"
+        ex = res_c[1]
+        assert ex.stats.rows_fuzzy_vectorized > 0, \
+            f"{name}: fuzzy chain silently fell back to the row engine"
+        assert ex.stats.rows_fallback == 0, \
+            f"{name}: {ex.stats.rows_fallback} rows fell back"
+        assert ex.stats.kernel_retraces == 0, \
+            f"{name}: repeated fuzzy query retraced the kernels"
+        out.append({
+            "bench": f"fuzzy_{name}",
+            "us_per_call": t_s * 1e6,
+            "us_columnar": t_c * 1e6,
+            "derived": f"ngram chain {t_s / t_c:.1f}x vs python scan "
+                       f"({len(res_c[0])} rows out, "
+                       f"{ex.stats.rows_fuzzy_vectorized} fuzzy-vec rows)",
+            "speedup": t_s / t_c,
+        })
+    return out
+
+
+def _join_rows(n_records: int, repeat: int):
+    """Near-duplicate clusters (the dedup workload the pipeline exists
+    for): LSH banding turns every within-cluster pair into a candidate,
+    so verification dominates the join — exactly the stage the batched
+    kernel replaces."""
+    rng = random.Random(7)
+    vocab = [f"tok{i}" for i in range(800)]
+    cluster = 100
+    recs = []
+    rid = 0
+    for _c in range(max(n_records // cluster, 1)):
+        base = rng.sample(vocab, 60)
+        for _ in range(cluster):
+            s = set(base)
+            for t in rng.sample(base, 5):
+                s.discard(t)
+            s.update(rng.sample(vocab, 3))
+            recs.append((rid, s))
+            rid += 1
+    fj = FuzzyJoin(threshold=0.5)
+    # candidate generation once; time the verify stage both ways
+    sigs = {rid: minhash_signature(t, fj.num_hashes, fj.seed)
+            for rid, t in recs}
+    toks = dict(recs)
+    buckets = {}
+    for rid, sig in sigs.items():
+        for key in fj.band_keys(sig):
+            buckets.setdefault(key, []).append(rid)
+    import itertools
+    candidates = set()
+    for rids in buckets.values():
+        for a, b in itertools.combinations(sorted(rids, key=str), 2):
+            candidates.add((a, b))
+    cands = sorted(candidates, key=str)
+    # timing spans sub-100ms calls: park the cyclic GC so a collection
+    # pause does not land inside one repeat and skew the min
+    import gc
+    gc.collect()
+    gc.disable()
+    try:
+        fj.batch_verify = False
+        (pairs_p, t_p) = _timed(lambda: fj.verify(cands, toks),
+                                max(repeat, 4))
+        fj.batch_verify = True
+        fj.verify(cands, toks)                   # warm jit caches
+        (pairs_b, t_b) = _timed(lambda: fj.verify(cands, toks),
+                                max(repeat, 4))
+    finally:
+        gc.enable()
+    assert sorted(pairs_b) == sorted(pairs_p), \
+        "batched FuzzyJoin verify diverges from the per-pair loop"
+    return [{
+        "bench": "fuzzy_join_verify",
+        "us_per_call": t_p * 1e6,
+        "us_columnar": t_b * 1e6,
+        "derived": f"batched verify {t_p / t_b:.1f}x vs per-pair python "
+                   f"({len(cands)} candidates -> {len(pairs_b)} pairs)",
+        "speedup": t_p / t_b,
+    }]
+
+
+def run(smoke: bool = False) -> list:
+    n_rows, n_join = (SMOKE_ROWS, SMOKE_JOIN) if smoke \
+        else (N_ROWS, N_JOIN)
+    repeat = 2 if smoke else 3
+    ds, target = _build_dataset(n_rows)
+    rows = _select_rows(ds, target, repeat)
+    del ds              # the join timings need the memory, not the caches
+    import gc
+    gc.collect()
+    rows += _join_rows(n_join, repeat)
+    if not smoke:       # acceptance targets hold at full size only
+        ed = next(r for r in rows if r["bench"] == "fuzzy_ed_select")
+        jv = next(r for r in rows if r["bench"] == "fuzzy_join_verify")
+        assert ed["speedup"] >= 5.0, \
+            f"ed select {ed['speedup']:.1f}x < 5x target"
+        assert jv["speedup"] >= 5.0, \
+            f"join verify {jv['speedup']:.1f}x < 5x target"
+    for r in rows:
+        r.pop("speedup", None)
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small dataset, fewer repeats (CI gate)")
+    args = p.parse_args()
+    t0 = time.time()
+    out = run(smoke=args.smoke)
+    print("name,us_per_call,us_columnar,derived")
+    for r in out:
+        print(f"{r['bench']},{r['us_per_call']:.1f},"
+              f"{r['us_columnar']:.1f},{r['derived']}")
+    print(f"# fuzzy_bench done in {time.time() - t0:.1f}s "
+          f"({'smoke' if args.smoke else 'full'})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

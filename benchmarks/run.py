@@ -16,15 +16,16 @@ def main() -> None:
     p.add_argument("--only", default="")
     args = p.parse_args()
 
-    from . import (columnar_bench, feeds_bench, index_bench, ingest_bench,
-                   step_bench, table2_storage, table3_queries,
-                   table4_inserts)
+    from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
+                   ingest_bench, step_bench, table2_storage,
+                   table3_queries, table4_inserts)
     modules = {
         "table2": table2_storage,
         "table3": table3_queries,
         "table4": table4_inserts,
         "columnar": columnar_bench,
         "index": index_bench,
+        "fuzzy": fuzzy_bench,
         "ingest": ingest_bench,
         "feeds": feeds_bench,
         "steps": step_bench,

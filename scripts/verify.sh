@@ -22,3 +22,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # forces a component's lazy row view.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.ingest_bench --smoke
+
+# Fuzzy smoke bench: ngram T-occurrence chain + batched FuzzyJoin verify;
+# fails if a fuzzy plan silently falls back, diverges from the scalar
+# predicates, or retraces its kernels on repeated queries.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.fuzzy_bench --smoke

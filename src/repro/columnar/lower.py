@@ -24,7 +24,11 @@ Lowered operator set:
                           sorted-intersection kernel; multi-index
                           conjunctions AND bitmaps before any record
                           decode, and post-validation runs on the gathered
-                          columns
+                          columns.  The fuzzy chains (NGRAM_INDEX_SEARCH
+                          -> T_OCCURRENCE -> same tail) produce the bitmap
+                          straight from the ngram postings' T-occurrence
+                          count kernel and verify candidates with the
+                          batched similarity kernels (fuzzy/verify)
   STREAM_PROJECT          column projection
   LOCAL_AGG/GLOBAL_AGG    fused filter+aggregate kernel when the child
                           is an exact-range select
@@ -55,17 +59,20 @@ class Unsupported(Exception):
     """This subplan stays on the row engine."""
 
 
-def _columnar_dataset(ex: Any, name: str, index: bool = False) -> Any:
+def _columnar_dataset(ex: Any, name: str, index: bool = False,
+                      fuzzy: bool = False) -> Any:
     """The one capability probe for columnar dataset access: the named
     dataset must expose the columnar scan surface (plus the candidate-PK
-    index surface when ``index``), else the subplan stays on the row
-    engine."""
+    index surface when ``index``, plus the ngram candidate-bitmap surface
+    when ``fuzzy``), else the subplan stays on the row engine."""
     ds = ex.datasets.get(name)
     if ds is None or not hasattr(ds, "scan_partition_batch"):
         raise Unsupported("dataset has no columnar scan")
     if index and not (hasattr(ds, "partition_pk_array")
                       and hasattr(ds, "secondary_candidate_pks")):
         raise Unsupported("dataset has no columnar index access")
+    if fuzzy and not hasattr(ds, "ngram_candidate_mask"):
+        raise Unsupported("dataset has no ngram candidate access")
     return ds
 
 
@@ -77,7 +84,7 @@ _VECTOR_COMPUTE = {
 }
 
 _INDEX_SEARCHES = {"SECONDARY_INDEX_SEARCH", "SPATIAL_INDEX_SEARCH",
-                   "KEYWORD_INDEX_SEARCH"}
+                   "KEYWORD_INDEX_SEARCH", "NGRAM_INDEX_SEARCH"}
 
 
 def try_lower(op: PhysicalOp, ex: Any) -> Optional[Callable[[], list]]:
@@ -407,7 +414,16 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
     partition's live-pk array (every additional btree-indexed range field
     contributes another bitmap, ANDed in before any gather), and the
     surviving positions gather the cached columns for post-validation —
-    no row dict is ever materialized for a non-matching candidate."""
+    no row dict is ever materialized for a non-matching candidate.
+
+    The fuzzy variant (SORT_PK <- T_OCCURRENCE <- NGRAM_INDEX_SEARCH)
+    joins the same pipeline one step earlier: the ngram T-occurrence
+    kernel produces the position bitmap *directly* (postings store row
+    positions, so no PK intersection is needed), conjunctions AND in
+    exactly as above, and the VERIFY stage replaces the row-at-a-time
+    predicate with the batched similarity kernels over the gathered
+    column's dictionary (``fuzzy.verify.verify_mask``).  Chain rows count
+    into ``ExecStats.rows_fuzzy_vectorized``."""
     if op.kind == "POST_VALIDATE_SELECT":
         validate: Optional[PhysicalOp] = op
         lookup = _chain_child(op, "PRIMARY_INDEX_LOOKUP")
@@ -415,10 +431,14 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
         validate, lookup = None, op
     sort = _chain_child(lookup, "SORT_PK")
     search = sort.children[0] if len(sort.children) == 1 else None
+    if search is not None and search.kind == "T_OCCURRENCE":
+        search = _chain_child(search, "NGRAM_INDEX_SEARCH")
     if search is None or search.kind not in _INDEX_SEARCHES \
             or sort.connectors[0].name != "OneToOne":
         raise Unsupported("SORT_PK without an index search below")
-    ds = _columnar_dataset(ex, lookup.attrs["dataset"], index=True)
+    is_fuzzy = search.kind == "NGRAM_INDEX_SEARCH"
+    ds = _columnar_dataset(ex, lookup.attrs["dataset"], index=True,
+                           fuzzy=is_fuzzy)
     if search.attrs["dataset"] != lookup.attrs["dataset"]:
         raise Unsupported("index search against a different dataset")
 
@@ -427,10 +447,22 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
     fields = tuple(validate.attrs.get("fields", ())) if validate else ()
     residual = not (validate.attrs.get("ranges_exact", False)
                     if validate else True)
+    fuzzy_spec = search.attrs.get("spec") if is_fuzzy else None
+    if is_fuzzy:
+        # verification uses the *spec's* gram length (the predicate's
+        # semantics); the index's gram_length only shapes the candidate
+        # postings.  Like every other access path, the full pred
+        # re-checks the gathered survivors unless the plan declared
+        # ``ranges_exact`` (pred may carry conjuncts beyond the spec).
+        from ..fuzzy.ngram import spec_gram_length
+        gram_k = spec_gram_length(fuzzy_spec)
+    else:
+        gram_k = 3
     # fields names exactly what pred reads, so projected gathers stay safe
     # even when a range column degrades to a row-at-a-time re-check
+    fz_cols = {fuzzy_spec[0]} if fuzzy_spec is not None else set()
     cols = None if needed is None \
-        else sorted(set(needed) | set(ranges) | set(fields))
+        else sorted(set(needed) | set(ranges) | set(fields) | fz_cols)
     # multi-index conjunction: every other btree-indexed range field adds
     # a candidate bitmap of its own
     search_field = search.attrs.get("field")
@@ -451,31 +483,50 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
         validate_ranges.pop(search_field)
 
     def run_index_path():
+        from ..fuzzy.verify import verify_mask
+        stat = ex.stats.fuzzy_vectorized if is_fuzzy \
+            else ex.stats.index_vectorized
         out: List[ColumnBatch] = []
         n_cand = n_found = n_valid = 0
         for i in range(ds.num_partitions):
-            cands = _search_candidates(ds, i, search)
-            n_cand += len(cands)
-            if not len(cands):
-                out.append(ColumnBatch({}, 0))   # short-circuit: no scan
-                continue
-            keys = ds.partition_pk_array(i)
-            if not len(keys):
-                out.append(ColumnBatch({}, 0))   # all-deleted partition
-                continue
-            mask = O.candidate_position_mask(keys, cands)
+            if is_fuzzy:
+                # T-occurrence candidate bitmap, already position-aligned
+                # with the partition's scan batch — no PK intersection
+                mask = ds.ngram_candidate_mask(i, search.attrs["field"],
+                                               fuzzy_spec)
+                n_cand += int(mask.sum())
+                if not mask.any():
+                    out.append(ColumnBatch({}, 0))   # no candidates
+                    continue
+            else:
+                cands = _search_candidates(ds, i, search)
+                n_cand += len(cands)
+                if not len(cands):
+                    out.append(ColumnBatch({}, 0))   # short-circuit: no scan
+                    continue
+                keys = ds.partition_pk_array(i)
+                if not len(keys):
+                    out.append(ColumnBatch({}, 0))   # all-deleted partition
+                    continue
+                mask = O.candidate_position_mask(keys, cands)
             for f in extra_fields:
                 if not mask.any():
                     break
                 lo, hi = ranges[f]
                 mask = mask & O.candidate_position_mask(
-                    keys, ds.secondary_candidate_pks(i, f, lo, hi))
+                    ds.partition_pk_array(i),
+                    ds.secondary_candidate_pks(i, f, lo, hi))
             if not mask.any():
                 out.append(ColumnBatch({}, 0))   # empty intersection
                 continue
             n_found += int(mask.sum())           # live candidates gathered
             batch = ds.scan_partition_batch(i, cols)
-            if validate is not None:
+            if fuzzy_spec is not None and validate is not None:
+                # VERIFY: batched similarity kernels over the candidate
+                # positions' dictionary-coded column (per distinct value)
+                mask = verify_mask(batch, mask, fuzzy_spec, gram_k)
+            if validate is not None and (validate_ranges
+                                         or (residual and pred is not None)):
                 got = O.index_post_validate(batch, mask, validate_ranges,
                                             pred, residual, fields)
             else:
@@ -483,10 +534,12 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
             n_valid += len(got)
             out.append(got)
         out += _empty(p - ds.num_partitions)
-        ex.stats.index_vectorized(search.kind, n_cand)
-        ex.stats.index_vectorized("SORT_PK", n_cand)
-        ex.stats.index_vectorized("PRIMARY_INDEX_LOOKUP", n_found)
+        stat(search.kind, n_cand)
+        if is_fuzzy:
+            stat("T_OCCURRENCE", n_cand)
+        stat("SORT_PK", n_cand)
+        stat("PRIMARY_INDEX_LOOKUP", n_found)
         if validate is not None:
-            ex.stats.index_vectorized("POST_VALIDATE_SELECT", n_valid)
+            stat("POST_VALIDATE_SELECT", n_valid)
         return out
     return run_index_path

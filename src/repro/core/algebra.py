@@ -135,19 +135,28 @@ def select(child: LogicalOp, pred: Callable, *, fields: Sequence[str],
            ranges: Optional[Dict[str, Tuple[Any, Any]]] = None,
            spatial: Optional[Tuple[str, Tuple[float, float], float]] = None,
            keyword: Optional[Tuple[str, str, int]] = None,
+           fuzzy: Optional[Tuple[str, str, str, Any]] = None,
            hints: Sequence[str] = (),
            ranges_exact: bool = False) -> LogicalOp:
     """``pred`` evaluates a row -> bool.  ``ranges`` exposes sargable
     [lo, hi] bounds per field (btree rule); ``spatial`` = (field, center,
     radius) exposes a circle predicate (rtree rule, paper Q5); ``keyword`` =
     (field, token, edit_distance) exposes a token predicate (keyword index
-    rule, paper Q6).  ``ranges_exact=True`` asserts that ``ranges`` fully
-    captures ``pred``, letting the columnar engine skip the row-at-a-time
-    residual re-check (and fuse filter+aggregate into one kernel pass)."""
+    rule, paper Q6); ``fuzzy`` = (field, "ed"|"jaccard", target, param[,
+    gram_k]) exposes a whole-field similarity predicate (ngram index
+    rule, the paper's fuzzy selects) whose candidates the columnar engine
+    generates via T-occurrence and verifies with the batched similarity
+    kernels (``fuzzy.fuzzy_predicate(spec)`` builds the matching scalar
+    oracle).  ``ranges_exact=True`` asserts that the declared access
+    predicates — ``ranges``, plus the fuzzy spec when present — fully
+    capture ``pred``, letting the columnar engine skip the row-at-a-time
+    residual re-check (and fuse filter+aggregate into one kernel
+    pass)."""
     return LogicalOp("SELECT", (child,),
                      {"pred": pred, "fields": tuple(fields),
                       "ranges": dict(ranges or {}), "spatial": spatial,
-                      "keyword": keyword, "hints": tuple(hints),
+                      "keyword": keyword, "fuzzy": fuzzy,
+                      "hints": tuple(hints),
                       "ranges_exact": bool(ranges_exact)})
 
 

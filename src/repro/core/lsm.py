@@ -108,22 +108,32 @@ class Component:
     merge) plus a ``tomb`` bitmap as primary data; the row-dict view is
     derived lazily.  Row-mode components (non-record values, or a forced
     row path) store the object array directly and can derive a batch view
-    on demand (``as_batch``)."""
+    on demand (``as_batch``).
+
+    ``gram_postings`` holds the fuzzy subsystem's per-field ngram(k) CSR
+    postings (fuzzy/ngram.GramPostings), built at flush/merge right next
+    to the batch — from the batch's string dictionary, never from row
+    dicts — for every field the owning index registers in
+    ``ngram_fields``."""
 
     keys: np.ndarray                      # sorted; numeric or object dtype
     batch: Optional[ColumnBatch] = None   # columnar primary data
     tomb: Optional[np.ndarray] = None     # bool bitmap: entry is a delete
     valid: bool = False
     comp_id: int = field(default_factory=lambda: next(_component_ids))
+    gram_postings: Dict[str, Any] = field(default_factory=dict, repr=False)
     _rows: Optional[np.ndarray] = field(default=None, repr=False)
 
     @classmethod
     def build(cls, keys: np.ndarray, vals: Sequence[Any],
               schema: Optional[Any] = None,
-              columnar: Optional[bool] = None) -> "Component":
+              columnar: Optional[bool] = None,
+              ngram_fields: Optional[Dict[str, int]] = None) -> "Component":
         """Shred sorted (key, value) pairs into a component.  Values that
         are all records (dicts) or tombstones shred columnar (unless
-        ``columnar=False``); anything else keeps row storage."""
+        ``columnar=False``); anything else keeps row storage.
+        ``ngram_fields`` (field -> gram length) names fields that get
+        ngram postings built alongside the batch."""
         tomb = np.fromiter((v is TOMBSTONE for v in vals), dtype=bool,
                            count=len(vals))
         shred = columnar is not False and all(
@@ -131,6 +141,7 @@ class Component:
         if not shred:
             c = cls(keys=keys, tomb=tomb)
             c._rows = _obj_array(vals)
+            c._build_ngrams(ngram_fields)
             return c
         rows = [{} if t else v for t, v in zip(tomb.tolist(), vals)]
         sch = schema() if callable(schema) else schema
@@ -143,8 +154,32 @@ class Component:
                         extra.observe_value(k, v)
             if extra is not None:
                 sch = sch.union(extra)
-        return cls(keys=keys, batch=ColumnBatch.from_rows(rows, sch),
-                   tomb=tomb)
+        c = cls(keys=keys, batch=ColumnBatch.from_rows(rows, sch),
+                tomb=tomb)
+        c._build_ngrams(ngram_fields)
+        return c
+
+    def _build_ngrams(self, ngram_fields: Optional[Dict[str, int]]) -> None:
+        for fld, k in (ngram_fields or {}).items():
+            self.ensure_gram_postings(fld, k)
+
+    def ensure_gram_postings(self, fld: str, k: int) -> Any:
+        """The field's ngram(k) postings, built once per component (it is
+        immutable).  Columnar components shred from the batch column
+        (gram hashing per dictionary value); row-mode components fall
+        back to the value list."""
+        p = self.gram_postings.get(fld)
+        if p is not None and p.k == k:
+            return p
+        from ..fuzzy.ngram import GramPostings
+        if self.batch is not None:
+            p = GramPostings.from_batch(self.batch, fld, k, self.size)
+        else:
+            vals = [r.get(fld) if isinstance(r, dict) else None
+                    for r in (self._rows if self._rows is not None else ())]
+            p = GramPostings.from_values(vals, k)
+        self.gram_postings[fld] = p
+        return p
 
     @property
     def size(self) -> int:
@@ -240,14 +275,17 @@ class LSMIndex:
 
     ``schema`` (a ColumnSchema or a zero-arg callable returning one, e.g.
     ``PartitionedDataset.columnar_schema``) steers flush-time shredding;
-    ``columnar=False`` forces classic row-array components (the
+    ``ngram_fields`` (a dict field -> gram length, or a zero-arg callable
+    returning one) names fields whose flush/merge output carries ngram
+    postings; ``columnar=False`` forces classic row-array components (the
     benchmarked legacy path)."""
 
     def __init__(self, flush_threshold: int = 1024,
                  merge_policy: Optional[TieredMergePolicy] = None,
                  wal: Optional[List[WALRecord]] = None,
                  schema: Optional[Any] = None,
-                 columnar: Optional[bool] = None):
+                 columnar: Optional[bool] = None,
+                 ngram_fields: Optional[Any] = None):
         self.flush_threshold = int(flush_threshold)
         self.merge_policy = merge_policy or TieredMergePolicy()
         self.memtable: Dict[Any, Any] = {}
@@ -256,6 +294,7 @@ class LSMIndex:
         self._lsn = itertools.count(len(self.wal))
         self.schema = schema
         self.columnar = columnar
+        self.ngram_fields = ngram_fields
         self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
                       "merged_rows": 0}
 
@@ -294,6 +333,10 @@ class LSMIndex:
                 mem = self.memtable     # flush installed a fresh dict
 
     # -- flush / merge ------------------------------------------------------
+    def _ngram(self) -> Dict[str, int]:
+        nf = self.ngram_fields
+        return nf() if callable(nf) else (nf or {})
+
     def flush(self, *, crash_before_validity: bool = False) -> Optional[Component]:
         """Shadow-install the memtable as a new immutable component,
         shredding record values straight into the component's primary
@@ -305,7 +348,8 @@ class LSMIndex:
             return None
         keys, vals = _sorted_kv(self.memtable)
         comp = Component.build(keys, vals, schema=self.schema,
-                               columnar=self.columnar)
+                               columnar=self.columnar,
+                               ngram_fields=self._ngram())
         self.components.insert(0, comp)        # shadow: present but invalid
         if crash_before_validity:
             return comp
@@ -342,6 +386,7 @@ class LSMIndex:
                 [c.tomb for c in comps],
                 drop_tombstones=bool(includes_oldest))
             out = Component(keys=keys, batch=merged, tomb=tomb)
+            out._build_ngrams(self._ngram())   # postings ride the merge too
         else:
             seen: Dict[Any, Any] = {}
             for c in reversed(comps):          # oldest first; newer overwrite
@@ -351,7 +396,8 @@ class LSMIndex:
                 seen = {k: r for k, r in seen.items() if r is not TOMBSTONE}
             keys, vals = _sorted_kv(seen)
             out = Component.build(keys, vals, schema=self.schema,
-                                  columnar=self.columnar)
+                                  columnar=self.columnar,
+                                  ngram_fields=self._ngram())
         ids = {c.comp_id for c in comps}
         pos = min(i for i, c in enumerate(self.components) if c.comp_id in ids)
         self.components.insert(pos + 0, out)   # shadow next to its inputs
@@ -419,14 +465,15 @@ class LSMIndex:
 def recover(components: Sequence[Component], wal: Sequence[WALRecord],
             *, replay_from_lsn: int = 0, flush_threshold: int = 1024,
             schema: Optional[Any] = None,
-            columnar: Optional[bool] = None) -> LSMIndex:
+            columnar: Optional[bool] = None,
+            ngram_fields: Optional[Any] = None) -> LSMIndex:
     """Crash recovery (paper §4.4): drop components without the validity bit,
     then replay the committed WAL tail into a fresh memtable.  Surviving
-    columnar components are adopted as-is (their batches *are* the data);
-    the replayed memtable re-shreds into the same form at its next
-    flush."""
+    columnar components are adopted as-is (their batches *are* the data,
+    ngram postings included); the replayed memtable re-shreds into the
+    same form at its next flush."""
     idx = LSMIndex(flush_threshold=flush_threshold, schema=schema,
-                   columnar=columnar)
+                   columnar=columnar, ngram_fields=ngram_fields)
     idx.components = [c for c in components if c.valid]
     idx.wal = list(wal)
     idx._lsn = itertools.count(len(idx.wal))

@@ -14,7 +14,10 @@ by construction like Algebricks' rule collections):
   R2 index-access-path      SELECT(sargable) over SCAN -> secondary-index
                             search + SORT(pk) + primary lookup + POST-VALIDATE
                             (Figure 6's plan, incl. the post-validation select
-                            required by LSM secondary-index consistency §4.4)
+                            required by LSM secondary-index consistency §4.4).
+                            Fuzzy selects (edit-distance / Jaccard specs) take
+                            the ngram variant: NGRAM_INDEX_SEARCH ->
+                            T_OCCURRENCE -> the same SORT/LOOKUP/VALIDATE tail
   R3 join-method            equijoin -> HYBRID_HASH_JOIN with hash-partition
                             connectors; hint "indexnl" -> INDEX_NL_JOIN
   R4 agg-split              AGG -> LOCAL_AGG ->ReplicateToOne-> GLOBAL_AGG
@@ -48,6 +51,7 @@ class IndexInfo:
     dataset: str
     field: str
     kind: str = "btree"   # btree | rtree | keyword | ngram
+    gram_length: int = 3  # ngram(k) only: the k the postings were built with
 
 
 @dataclass
@@ -127,6 +131,40 @@ def _to_physical(op: LogicalOp, cat: Catalog, cfg: RewriteConfig) -> PhysicalOp:
                 and child_l.kind == "SCAN"):
             ds = child_l.attrs["dataset"]
             pk = cat.primary_keys.get(ds, ())
+            # fuzzy (ngram rule): whole-field similarity predicates lower
+            # to the Figure-6 skeleton with a T-occurrence filter between
+            # the gram search and the PK sort:
+            #   NGRAM_INDEX_SEARCH -> T_OCCURRENCE -> SORT_PK ->
+            #   PRIMARY_INDEX_LOOKUP -> POST_VALIDATE_SELECT (verify)
+            fz = op.attrs.get("fuzzy")
+            if fz is not None:
+                ix = cat.index_on(ds, fz[0])
+                if ix is not None and ix.kind == "ngram":
+                    sec = PhysicalOp(
+                        "NGRAM_INDEX_SEARCH", (), (),
+                        {"index": ix.name, "dataset": ds, "field": fz[0],
+                         "spec": fz, "gram_length": ix.gram_length},
+                        hash_partitioned(*pk))
+                    tocc = PhysicalOp(
+                        "T_OCCURRENCE", (sec,), (ONE_TO_ONE,),
+                        {"spec": fz, "gram_length": ix.gram_length},
+                        sec.delivered)
+                    sort = PhysicalOp("SORT_PK", (tocc,), (ONE_TO_ONE,),
+                                      {"keys": pk},
+                                      hash_partitioned(*pk, local_order=pk))
+                    lookup = PhysicalOp(
+                        "PRIMARY_INDEX_LOOKUP", (sort,), (ONE_TO_ONE,),
+                        {"dataset": ds},
+                        hash_partitioned(*pk, local_order=pk))
+                    return PhysicalOp(
+                        "POST_VALIDATE_SELECT", (lookup,), (ONE_TO_ONE,),
+                        {"pred": op.attrs["pred"],
+                         "fields": op.attrs["fields"],
+                         "ranges": op.attrs.get("ranges", {}),
+                         "ranges_exact": bool(op.attrs.get("ranges_exact",
+                                                           False)),
+                         "fuzzy": fz, "gram_length": ix.gram_length},
+                        lookup.delivered)
             # rtree (paper Q5) and keyword (paper Q6) access paths share the
             # Figure-6 skeleton: index search -> SORT_PK -> primary lookup
             # -> post-validate.

@@ -1,0 +1,553 @@
+"""Vectorized similarity kernels for the fuzzy query subsystem.
+
+Four entry points, numpy in / python out, following the
+``columnar_ops.py`` dispatch idiom (Pallas kernels on TPU, pow2-padded
+jitted-jnp cores under ``enable_x64`` elsewhere, host paths below the
+jax dispatch floor):
+
+  fnv1a_hash(tokens)             vectorized FNV-1a-64 over a padded byte
+                                 matrix — the one token/gram hash the
+                                 ngram postings and MinHash share
+  t_occurrence_mask(pos, n, T)   fused segmented-count: gram-hit positions
+                                 -> bool bitmap of rows with >= T hits
+                                 (the ngram index candidate generator)
+  edit_distances(strs, q, d)     batched banded (saturating) Levenshtein
+                                 DP over padded char-code matrices ->
+                                 min(ed, d+1) per candidate string
+  set_intersect_counts(a, b)     per-pair sorted-set intersection sizes
+                                 over dictionary-coded token sets (the
+                                 batched Jaccard verifier; ``jaccard_sims``
+                                 derives float64 similarities)
+
+All jnp cores pad operands to powers of two so repeated fuzzy queries
+land on a bounded set of traced shapes; trace-time increments share
+``columnar_ops._TRACES`` so ``ExecStats.kernel_retraces`` covers the
+fuzzy cores too (repeated queries must show 0).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+
+from .ops import use_pallas
+from .columnar_ops import _TRACES
+from ..columnar.batch import pow2_len as _pow2_len
+
+__all__ = ["fnv1a_hash", "t_occurrence_mask", "edit_distances",
+           "set_intersect_counts", "set_intersect_counts_padded",
+           "encode_bitsets", "bitset_intersect_counts",
+           "jaccard_from_counts", "jaccard_sims"]
+
+_FNV_OFFSET = np.uint64(14695981039346656037)
+_FNV_PRIME = np.uint64(1099511628211)
+_BIG = 3.0e38      # f32-safe infinity stand-in (Pallas operand padding)
+
+
+# ---------------------------------------------------------------------------
+# FNV-1a token hashing (vectorized over a padded byte matrix)
+# ---------------------------------------------------------------------------
+
+def fnv1a_hash(tokens: Sequence[str]) -> np.ndarray:
+    """64-bit FNV-1a of each token, bit-identical to the classic per-byte
+    python loop (``data.dedup._token_hash`` before the mod): tokens are
+    laid out as one [T, Lmax] byte matrix and the hash state advances one
+    *column* (not one token) at a time, so the python-level work is
+    O(max token length), not O(total bytes)."""
+    n = len(tokens)
+    if n == 0:
+        return np.zeros(0, dtype=np.uint64)
+    bs = [t.encode() for t in tokens]
+    lens = np.fromiter((len(b) for b in bs), dtype=np.int64, count=n)
+    lmax = int(lens.max()) if n else 0
+    mat = np.zeros((n, max(lmax, 1)), dtype=np.uint64)
+    for i, b in enumerate(bs):
+        if b:
+            mat[i, :len(b)] = np.frombuffer(b, dtype=np.uint8)
+    h = np.full(n, _FNV_OFFSET, dtype=np.uint64)
+    for j in range(lmax):
+        live = j < lens
+        hj = (h ^ mat[:, j]) * _FNV_PRIME          # uint64 wrap == mod 2**64
+        h = np.where(live, hj, h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# T-occurrence segmented count (ngram candidate generation)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _tocc_core(pos, thr, np2):
+    """Scatter-count gram hits per row position; padding positions point
+    at the extra slot ``np2`` so they never count."""
+    _TRACES["n"] += 1
+    cnt = jnp.zeros(np2 + 1, dtype=jnp.int32).at[pos].add(1)
+    return cnt[:np2] >= thr
+
+
+def _tocc_jnp(positions: np.ndarray, n: int, threshold: int) -> np.ndarray:
+    np2 = _pow2_len(n)
+    m = int(positions.shape[0])
+    mp = _pow2_len(m)
+    pos = np.concatenate([positions.astype(np.int64),
+                          np.full(mp - m, np2, dtype=np.int64)])
+    with enable_x64():
+        mask = np.asarray(_tocc_core(jnp.asarray(pos),
+                                     jnp.asarray(threshold, jnp.int32), np2))
+    return mask[:n]
+
+
+def _tocc_kernel(r_ref, p_ref, t_ref, o_ref, *, m):
+    """Rolled-loop count: one posting scalar per step, a full vector
+    compare-accumulate per row block (the ``_intersect_kernel`` idiom
+    with a sum instead of a max)."""
+    r = r_ref[...]                               # [8, bn]
+    rowid = r[0:1, :]
+    live = r[1:2, :]
+
+    def body(j, acc):
+        c = p_ref[0, j]
+        return acc + (rowid == c).astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros_like(rowid))
+    thr = t_ref[0, 0]
+    o_ref[...] = jnp.broadcast_to((acc >= thr).astype(jnp.float32) * live,
+                                  o_ref.shape)
+
+
+def _tocc_pallas(positions: np.ndarray, n: int, threshold: int,
+                 *, block_n: int = 512, interpret: bool = False
+                 ) -> np.ndarray:
+    # pow2-padded operand widths AND loop bound: the kernel recompiles
+    # per padded shape only, not per exact posting count / row count
+    # (padding positions are -1, which matches no row id)
+    m = int(positions.shape[0])
+    np_pad = max(block_n, _pow2_len(n))
+    vals = np.zeros((8, np_pad), dtype=np.float32)
+    vals[0, :n] = np.arange(n, dtype=np.float32)
+    vals[1, :n] = 1.0                            # row-validity flag
+    mp = max(128, _pow2_len(m))
+    pv = np.full((8, mp), -1.0, dtype=np.float32)    # -1 matches no row
+    pv[0, :m] = positions.astype(np.float32)
+    tv = np.full((8, 128), np.float32(threshold), dtype=np.float32)
+    out = pl.pallas_call(
+        functools.partial(_tocc_kernel, m=mp),
+        grid=(np_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((8, block_n), lambda i: (0, i)),
+            pl.BlockSpec((8, mp), lambda i: (0, 0)),
+            pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
+        interpret=interpret,
+    )(vals, pv, tv)
+    return np.asarray(out)[0, :n] > 0.5
+
+
+def t_occurrence_mask(positions: np.ndarray, n: int, threshold: int,
+                      *, force_pallas: Optional[bool] = None,
+                      interpret: bool = False) -> np.ndarray:
+    """Bool [n]: rows whose gram-hit count reaches ``threshold``.
+
+    ``positions`` is the concatenation of the query grams' posting
+    segments (one entry per (gram, row) hit, rows deduped per gram), so
+    one fused count pass replaces the per-gram python candidate lists.
+    On TPU the Pallas compare-accumulate kernel runs (row ids are f32-
+    exact below 2**24); elsewhere the jitted scatter-add core counts
+    under x64, with a host bincount below the jax dispatch floor.
+    """
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    if threshold <= 0:
+        return np.ones(n, dtype=bool)
+    positions = np.asarray(positions, dtype=np.int64)
+    m = int(positions.shape[0])
+    if m == 0:
+        return np.zeros(n, dtype=bool)
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas and (force_pallas or n < 2 ** 24):
+        return _tocc_pallas(positions, n, threshold, interpret=interpret)
+    if n + m <= 4096:
+        return np.bincount(positions, minlength=n) >= threshold
+    return _tocc_jnp(positions, n, threshold)
+
+
+# ---------------------------------------------------------------------------
+# batched banded edit distance (candidate verification)
+# ---------------------------------------------------------------------------
+
+def _cummin_last(t, big):
+    """Cumulative min along the last axis via log-step shifts (works in
+    both the jnp core and the Pallas kernel body; shapes stay static)."""
+    n = t.shape[-1]
+    s = 1
+    while s < n:
+        shifted = jnp.concatenate(
+            [jnp.full(t.shape[:-1] + (s,), big, t.dtype), t[..., :-s]],
+            axis=-1)
+        t = jnp.minimum(t, shifted)
+        s *= 2
+    return t
+
+
+@jax.jit
+def _ed_core(cand, lens, q, qlen, d):
+    """Saturating Levenshtein DP, vectorized over the candidate batch.
+
+    One DP row per query char; the within-row min-plus recurrence
+    ``new[j] = min(m[j], new[j-1]+1)`` collapses to a cumulative min of
+    ``m[j]-j`` (the +1-per-step factors out), so every step is dense
+    [B, L+1] arithmetic.  Values saturate at ``d+1`` (the band): cells
+    beyond the band can only produce answers > d, so clamping them keeps
+    the <= d decision exact and the final value equal to min(ed, d+1).
+    """
+    _TRACES["n"] += 1
+    B, L = cand.shape
+    M = q.shape[0]
+    cap = (d + 1).astype(jnp.int64)
+    j = jnp.arange(L + 1, dtype=jnp.int64)
+    dp = jnp.minimum(j, cap) * jnp.ones((B, 1), dtype=jnp.int64)
+    big = jnp.asarray(1 << 30, jnp.int64)
+
+    def body(i, dp):
+        qc = q[jnp.minimum(i, M - 1)]
+        sub = (cand != qc).astype(jnp.int64)                     # [B, L]
+        m_ = jnp.concatenate(
+            [jnp.full((B, 1), 1, jnp.int64) + i,
+             jnp.minimum(dp[:, 1:] + 1, dp[:, :-1] + sub)], axis=1)
+        t = _cummin_last(m_ - j[None, :], big)
+        new = jnp.minimum(t + j[None, :], cap)
+        return jnp.where(i < qlen, new, dp)
+
+    dp = jax.lax.fori_loop(0, M, body, dp)
+    pick = jnp.minimum(lens, L)
+    onehot = j[None, :] == pick[:, None]
+    return jnp.sum(jnp.where(onehot, dp, 0), axis=1)
+
+
+def _char_matrix(strings: Sequence[str], width: int, rows: int
+                 ) -> np.ndarray:
+    mat = np.zeros((rows, width), dtype=np.int32)
+    for i, s in enumerate(strings):
+        if s:
+            mat[i, :len(s)] = np.fromiter(map(ord, s), dtype=np.int32,
+                                          count=len(s))
+    return mat
+
+
+def _ed_jnp(strings: Sequence[str], query: str, d: int) -> np.ndarray:
+    B = len(strings)
+    lens = np.fromiter((len(s) for s in strings), np.int64, count=B)
+    bp = _pow2_len(B)
+    lp = _pow2_len(max(int(lens.max()) if B else 0, 1))
+    mp = _pow2_len(max(len(query), 1))
+    cand = _char_matrix(strings, lp, bp)
+    lpad = np.concatenate([lens, np.zeros(bp - B, dtype=np.int64)])
+    q = np.zeros(mp, dtype=np.int32)
+    if query:
+        q[:len(query)] = np.fromiter(map(ord, query), dtype=np.int32,
+                                     count=len(query))
+    with enable_x64():
+        out = np.asarray(_ed_core(
+            jnp.asarray(cand), jnp.asarray(lpad), jnp.asarray(q),
+            jnp.asarray(len(query), jnp.int64), jnp.asarray(d, jnp.int64)))
+    return out[:B]
+
+
+def _ed_kernel(c_ref, l_ref, q_ref, o_ref, *, m, cap):
+    cand = c_ref[...]                            # [bb, Lp]
+    lens = l_ref[...][:, 0:1]                    # [bb, 1]
+    bb, L = cand.shape
+    jrow = jax.lax.broadcasted_iota(jnp.float32, (bb, L + 1), 1)
+    dp = jnp.minimum(jrow, cap)
+    qlen = q_ref[1, 0]
+
+    def body(i, dp):
+        qc = q_ref[0, i]
+        sub = (cand != qc).astype(jnp.float32)
+        left = jnp.zeros((bb, 1), jnp.float32) + (i + 1).astype(jnp.float32)
+        m_ = jnp.concatenate(
+            [left, jnp.minimum(dp[:, 1:] + 1.0, dp[:, :-1] + sub)], axis=1)
+        t = _cummin_last(m_ - jrow, _BIG)
+        new = jnp.minimum(t + jrow, cap)
+        return jnp.where(i.astype(jnp.float32) < qlen, new, dp)
+
+    dp = jax.lax.fori_loop(0, m, body, dp)
+    onehot = (jrow == jnp.minimum(lens, float(L))).astype(jnp.float32)
+    dist = jnp.sum(dp * onehot, axis=1)          # [bb]
+    o_ref[...] = jnp.broadcast_to(dist[None, :], o_ref.shape)
+
+
+def _ed_pallas(strings: Sequence[str], query: str, d: int,
+               *, block_b: int = 8, interpret: bool = False) -> np.ndarray:
+    # pow2-padded batch AND query-loop bound (the kernel's ``i < qlen``
+    # guard skips padded query rows), so distinct queries of similar
+    # length share one compilation instead of one per exact length
+    B = len(strings)
+    lens = np.fromiter((len(s) for s in strings), np.int64, count=B)
+    bp = max(block_b, _pow2_len(B))
+    lp = _pow2_len(max(int(lens.max()) if B else 0, 1))
+    mp = max(128, _pow2_len(max(len(query), 1)))
+    cand = _char_matrix(strings, lp, bp).astype(np.float32)
+    lv = np.zeros((bp, 128), dtype=np.float32)
+    lv[:B, 0] = lens.astype(np.float32)
+    qv = np.zeros((8, mp), dtype=np.float32)
+    if query:
+        qv[0, :len(query)] = np.fromiter(map(ord, query), dtype=np.float32,
+                                         count=len(query))
+    qv[1, :] = np.float32(len(query))
+    out = pl.pallas_call(
+        functools.partial(_ed_kernel, m=mp, cap=float(d + 1)),
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, lp), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 128), lambda i: (i, 0)),
+            pl.BlockSpec((8, mp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, bp), jnp.float32),
+        interpret=interpret,
+    )(cand, lv, qv)
+    return np.asarray(out)[0, :B].astype(np.int64)
+
+
+def edit_distances(strings: Sequence[str], query: str, d: int,
+                   *, force_pallas: Optional[bool] = None,
+                   interpret: bool = False) -> np.ndarray:
+    """``min(edit_distance(s, query), d+1)`` per candidate: saturated
+    (banded) distances whose ``<= d`` decision is exact.  Char codes are
+    f32-exact on the Pallas path (max code point 0x10FFFF < 2**24);
+    a tiny batch runs the host DP outright (one jax dispatch costs more).
+    """
+    B = len(strings)
+    if B == 0:
+        return np.zeros(0, dtype=np.int64)
+    d = max(int(d), 0)
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas:
+        return _ed_pallas(strings, query, d, interpret=interpret)
+    if B <= 32:
+        from ..core.functions import edit_distance
+        return np.asarray([min(edit_distance(s, query), d + 1)
+                           for s in strings], dtype=np.int64)
+    return _ed_jnp(strings, query, d)
+
+
+# ---------------------------------------------------------------------------
+# batched sorted-set intersection (Jaccard verification)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _inter_core(a, alens, b):
+    """Per-pair |A ∩ B| via a vmapped binary search of each A element in
+    the (sorted, sentinel-padded) B row."""
+    _TRACES["n"] += 1
+    s1 = a.shape[1]
+
+    def row(ar, al, br):
+        pos = jnp.searchsorted(br, ar)
+        posc = jnp.clip(pos, 0, br.shape[0] - 1)
+        hit = (br[posc] == ar) & (jnp.arange(s1) < al)
+        return jnp.sum(hit)
+
+    return jax.vmap(row)(a, alens, b)
+
+
+def _inter_jnp(a_mat, alens, b_mat) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_inter_core(jnp.asarray(a_mat),
+                                      jnp.asarray(alens),
+                                      jnp.asarray(b_mat)))
+
+
+def _inter_kernel(a_ref, l_ref, b_ref, o_ref, *, s1):
+    a = a_ref[...]                               # [bp, S1]
+    b = b_ref[...]                               # [bp, S2]
+    al = l_ref[...][:, 0]                        # [bp]
+    bp = a.shape[0]
+    acc = jnp.zeros((bp,), jnp.float32)
+    for j in range(s1):                          # static unroll over S1
+        hit = jnp.any(b == a[:, j:j + 1], axis=1) & (j < al)
+        acc = acc + hit.astype(jnp.float32)
+    o_ref[...] = jnp.broadcast_to(acc[None, :], o_ref.shape)
+
+
+def _inter_pallas(a_mat, alens, b_mat, *, block_p: int = 8,
+                  interpret: bool = False) -> np.ndarray:
+    P, s1 = a_mat.shape
+    s2 = b_mat.shape[1]
+    pp = max(block_p, _pow2_len(P))     # callers pow2-pad; keep it stable
+    av = np.zeros((pp, s1), dtype=np.float32)
+    av[:P] = a_mat.astype(np.float32)
+    bv = np.full((pp, s2), _BIG, dtype=np.float32)
+    bv[:P] = np.where(b_mat >= (1 << 24), _BIG, b_mat).astype(np.float32)
+    lv = np.zeros((pp, 128), dtype=np.float32)
+    lv[:P, 0] = alens.astype(np.float32)
+    out = pl.pallas_call(
+        functools.partial(_inter_kernel, s1=s1),
+        grid=(pp // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p, s1), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_p, s2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((8, pp), jnp.float32),
+        interpret=interpret,
+    )(av, lv, bv)
+    return np.asarray(out)[0, :P].astype(np.int64)
+
+
+_SENTINEL = np.int64(np.iinfo(np.int64).max)
+
+
+def _pad_sets(sets: Sequence[np.ndarray], fill: np.int64
+              ) -> tuple:
+    P = len(sets)
+    lens = np.zeros(_pow2_len(max(P, 1)), dtype=np.int64)
+    lens[:P] = np.fromiter((len(s) for s in sets), np.int64, count=P)
+    width = _pow2_len(max(int(lens.max()) if P else 0, 1))
+    mat = np.full((lens.shape[0], width), fill, dtype=np.int64)
+    for i, s in enumerate(sets):
+        if len(s):
+            mat[i, :len(s)] = s
+    return mat, lens, lens.shape[0]
+
+
+def set_intersect_counts_padded(a_mat: np.ndarray, alens: np.ndarray,
+                                b_mat: np.ndarray, blens: np.ndarray,
+                                *, force_pallas: Optional[bool] = None,
+                                interpret: bool = False) -> np.ndarray:
+    """Pre-padded variant of ``set_intersect_counts`` for callers that
+    gather pair rows out of one shared record matrix (FuzzyJoin verify:
+    pad each record once, then every candidate pair is a fancy-index —
+    no per-pair python assembly).  ``b_mat`` rows must be sorted with the
+    int64 sentinel as padding; ``a_mat`` rows are masked by ``alens``."""
+    P = int(a_mat.shape[0])
+    if P == 0:
+        return np.zeros(0, dtype=np.int64)
+    pp = _pow2_len(P)
+    if pp != P:             # pow2 row padding keeps the jit shapes stable
+        a2 = np.zeros((pp, a_mat.shape[1]), dtype=np.int64)
+        a2[:P] = a_mat
+        b2 = np.full((pp, b_mat.shape[1]), _SENTINEL, dtype=np.int64)
+        b2[:P] = b_mat
+        l2 = np.zeros(pp, dtype=np.int64)
+        l2[:P] = alens
+        a_mat, b_mat, alens = a2, b2, l2
+    pallas = use_pallas() if force_pallas is None else force_pallas
+    if pallas and (force_pallas
+                   or (int(np.max(alens)) == 0
+                       or (a_mat[a_mat != _SENTINEL].max(initial=0)
+                           < 2 ** 24))):
+        return _inter_pallas(a_mat, alens, b_mat, interpret=interpret)[:P]
+    if P <= 16:
+        return np.asarray(
+            [len(np.intersect1d(a_mat[i][:alens[i]],
+                                b_mat[i][:blens[i]], assume_unique=True))
+             for i in range(P)], dtype=np.int64)
+    return _inter_jnp(a_mat, alens, b_mat)[:P]
+
+
+def set_intersect_counts(a_sets: Sequence[np.ndarray],
+                         b_sets: Sequence[np.ndarray],
+                         **kw: Any) -> np.ndarray:
+    """``|a_sets[i] & b_sets[i]|`` per pair.  Each set is a sorted array
+    of distinct dictionary codes; the b side pads with an int64 sentinel
+    (stays sorted) and the a side is masked by its true length, so pads
+    never match.  Codes must be < 2**24 for the Pallas path (dictionary
+    sizes are), exact int64 on the jnp path."""
+    P = len(a_sets)
+    if P == 0:
+        return np.zeros(0, dtype=np.int64)
+    a_mat, alens, _ = _pad_sets(a_sets, np.int64(0))
+    b_mat, blens, _ = _pad_sets(b_sets, _SENTINEL)
+    return set_intersect_counts_padded(a_mat[:P], alens[:P], b_mat[:P],
+                                       blens[:P], **kw)
+
+
+@jax.jit
+def _popcount_inter_core(bits, ai, bi):
+    """Per-pair |A ∩ B| over vocabulary bitsets, gather fused in: both
+    pair rows are gathered from the one shared record matrix on-device,
+    then AND + popcount row-reduce (XLA ``population_count`` vectorizes
+    on every backend, TPU included, so this core needs no separate
+    Pallas variant)."""
+    _TRACES["n"] += 1
+    return jnp.sum(jax.lax.population_count(bits[ai] & bits[bi]), axis=1)
+
+
+def encode_bitsets(codes: np.ndarray, seg: np.ndarray, n_rows: int,
+                   vocab_size: int) -> np.ndarray:
+    """[n_rows, W] uint32 vocabulary bitsets from (row segment, code)
+    pairs — the dense-dictionary fast path for pairwise set intersection
+    when the vocabulary is small enough that a record is a few machine
+    words.  Build is pure numpy: one argsort + one ``bitwise_or.reduceat``
+    over the (row, word) groups, no per-token python loop."""
+    W = _pow2_len(max((vocab_size + 31) // 32, 1))
+    bits = np.zeros(n_rows * W, dtype=np.uint32)
+    if codes.shape[0]:
+        keys = seg.astype(np.int64) * W + (codes >> 5)
+        vals = np.left_shift(np.uint32(1),
+                             (codes & 31).astype(np.uint32))
+        order = np.argsort(keys, kind="stable")
+        keys, vals = keys[order], vals[order]
+        # keys are sorted: group starts come from one diff, not a resort
+        starts = np.flatnonzero(np.concatenate(
+            [np.ones(1, dtype=bool), keys[1:] != keys[:-1]]))
+        bits[keys[starts]] = np.bitwise_or.reduceat(vals, starts)
+    return bits.reshape(n_rows, W)
+
+
+def bitset_intersect_counts(bits: np.ndarray, ai: np.ndarray,
+                            bi: np.ndarray) -> np.ndarray:
+    """``popcount(bits[ai[p]] & bits[bi[p]])`` per pair (int64): the
+    record matrix crosses to the device once; pair gathers happen inside
+    the jitted core.  Index arrays pad to pow2 with row 0 (sliced off),
+    keeping the traced shapes stable as the candidate count varies."""
+    P = int(ai.shape[0])
+    if P == 0:
+        return np.zeros(0, dtype=np.int64)
+    pp = _pow2_len(P)
+    if pp != P:
+        ai = np.concatenate([ai, np.zeros(pp - P, dtype=np.int64)])
+        bi = np.concatenate([bi, np.zeros(pp - P, dtype=np.int64)])
+    rp = _pow2_len(max(int(bits.shape[0]), 1))
+    if rp != bits.shape[0]:
+        bits = np.concatenate(
+            [bits, np.zeros((rp - bits.shape[0], bits.shape[1]),
+                            dtype=np.uint32)])
+    return np.asarray(_popcount_inter_core(
+        jnp.asarray(bits), jnp.asarray(ai),
+        jnp.asarray(bi)))[:P].astype(np.int64)
+
+
+def jaccard_from_counts(inter: np.ndarray, a_sizes: np.ndarray,
+                        b_sizes: np.ndarray) -> np.ndarray:
+    """Finish Jaccard from intersection counts in float64 — the one
+    place the division and the two-empty-sets -> 1.0 convention live, so
+    every batched path matches the scalar ``similarity_jaccard`` oracle
+    bit-for-bit."""
+    inter = inter.astype(np.float64)
+    union = a_sizes + b_sizes - inter
+    return np.where(union > 0, inter / np.maximum(union, 1.0), 1.0)
+
+
+def jaccard_sims(a_sets: Sequence[np.ndarray], b_sets: Sequence[np.ndarray],
+                 **kw: Any) -> np.ndarray:
+    """Exact float64 Jaccard similarity per pair of dictionary-coded
+    sets (intersection counted by the kernel, the division done host-
+    side so decisions match the python ``len(&)/len(|)`` oracle)."""
+    inter = set_intersect_counts(a_sets, b_sets, **kw)
+    al = np.fromiter((len(s) for s in a_sets), np.float64,
+                     count=len(a_sets))
+    bl = np.fromiter((len(s) for s in b_sets), np.float64,
+                     count=len(b_sets))
+    return jaccard_from_counts(inter, al, bl)

@@ -26,7 +26,11 @@ Faithful structure:
     and grouped per partition, then applied as one WAL+memtable pass per
     partition chunk (skipping per-record old-version lookups when no
     secondary index needs them), so a feed -> memory component -> flush
-    pipeline never runs a per-record code path.
+    pipeline never runs a per-record code path;
+  * fuzzy queries ride ``"ngram"`` indexes (fuzzy/): per-component CSR
+    gram postings built at flush/merge, T-occurrence candidate bitmaps
+    aligned with the columnar scan (``ngram_candidate_mask``), batched
+    similarity verification downstream.
 """
 
 from __future__ import annotations
@@ -99,13 +103,17 @@ class PartitionedDataset:
         self.flush_threshold = flush_threshold
         self.merge_policy = merge_policy or TieredMergePolicy()
         self.columnar = columnar            # False: legacy row components
+        # ngram(k) indexes: field -> gram length; postings live on the
+        # primary components (built at flush/merge), not in a secondary
+        self._ngram_specs: Dict[str, int] = {}
         self.partitions: List[_Partition] = [
             _Partition(LSMIndex(flush_threshold, self.merge_policy,
                                 schema=self.columnar_schema,
-                                columnar=None if columnar else False))
+                                columnar=None if columnar else False,
+                                ngram_fields=self._ngram_fields))
             for _ in range(num_partitions)]
         self.index_fields: List[str] = []
-        self.index_kinds: Dict[str, str] = {}   # btree | rtree | keyword
+        self.index_kinds: Dict[str, str] = {}   # btree|rtree|keyword|ngram
         self.spatial_cell_size = 0.05
         self.stats = {"inserts": 0, "deletes": 0, "bytes_encoded": 0}
         # columnar engine: open fields seen so far (name -> column kind)
@@ -132,10 +140,31 @@ class PartitionedDataset:
             return [((tok,), pk) for tok in set(word_tokens(value))]
         raise adm.ValidationError(kind)
 
-    def create_index(self, fld: str, kind: str = "btree") -> None:
-        """Node-local secondary index; backfills from existing rows."""
+    def _ngram_fields(self) -> Dict[str, int]:
+        """Callable handed to the primary LSM indexes so components
+        flushed/merged after a late ``create_index(..., "ngram")`` still
+        get their postings built."""
+        return dict(self._ngram_specs)
+
+    def create_index(self, fld: str, kind: str = "btree",
+                     gram_length: int = 3) -> None:
+        """Node-local secondary index; backfills from existing rows.
+        ``kind="ngram"`` registers ngram(``gram_length``) postings on the
+        *primary* components instead of building a secondary LSM tree
+        (postings are derived columnar data: backfill here, flush/merge
+        keep them current, and the memtable tail is indexed at query
+        time)."""
         if fld in self.index_fields:
             raise adm.ValidationError(f"index on {fld} already exists")
+        if kind == "ngram":
+            self.index_fields.append(fld)
+            self.index_kinds[fld] = kind
+            self._ngram_specs[fld] = int(gram_length)
+            for part in self.partitions:        # backfill existing comps
+                for comp in part.primary.components:
+                    if comp.valid:
+                        comp.ensure_gram_postings(fld, int(gram_length))
+            return
         self.index_fields.append(fld)
         self.index_kinds[fld] = kind
         for part in self.partitions:
@@ -418,10 +447,12 @@ class PartitionedDataset:
 
     def keyword_search_partition(self, i: int, fld: str, token: str,
                                  fuzzy_ed: int = 0) -> List[Any]:
-        """Inverted-index lookup; fuzzy_ed>0 scans the partition's token
-        dictionary with edit-distance-check (the ngram(k) index would prune
-        this scan; the dictionary here is partition-local and small)."""
-        from ..core.functions import edit_distance_check
+        """Inverted-index lookup; fuzzy_ed>0 matches any token within the
+        edit distance by running the partition-local token dictionary
+        through one batched banded-DP call (kernels/fuzzy_ops) instead of
+        a per-token python DP.  (Whole-field fuzzy predicates use the
+        ngram(k) index instead — fuzzy/ngram — which prunes candidates
+        before any distance is computed.)"""
         ix = self.partitions[i].secondaries.get(fld)
         if ix is None or self.index_kinds.get(fld) != "keyword":
             raise adm.ValidationError(
@@ -430,15 +461,21 @@ class PartitionedDataset:
         if fuzzy_ed == 0:
             return [pk for _, pk in ix.range(((token,), _MIN),
                                              ((token,), _MAX))]
-        out = []
-        seen_tok = None
+        from ..kernels.fuzzy_ops import edit_distances
+        toks: List[str] = []
+        pks_per_tok: List[List[Any]] = []
+        cur = None
         for (tok,), pk in ((k[0], r) for k, r in ix.items()):
-            if tok != seen_tok:
-                seen_tok = tok
-                match = edit_distance_check(tok, token, fuzzy_ed)
-            if match:
-                out.append(pk)
-        return out
+            if tok != cur:
+                cur = tok
+                toks.append(tok)
+                pks_per_tok.append([])
+            pks_per_tok[-1].append(pk)
+        if not toks:
+            return []
+        ok = edit_distances(toks, token, fuzzy_ed) <= fuzzy_ed
+        return [pk for match, pks in zip(ok.tolist(), pks_per_tok)
+                if match for pk in pks]
 
     # -- candidate read paths (columnar index access) -------------------------
     @staticmethod
@@ -505,13 +542,115 @@ class PartitionedDataset:
         return self._pk_array(
             self.keyword_search_partition(i, fld, token, fuzzy_ed))
 
+    # -- ngram (fuzzy) candidate generation -----------------------------------
+    def _ngram_sources(self, i: int, fld: str) -> Tuple[List[Tuple[int, Any]],
+                                                        int]:
+        """(offset, GramPostings) per storage tier of partition ``i`` in
+        ``_live_selection`` concat order (memtable first, then components
+        newest-first) plus the concat length.  Component postings were
+        built at flush/merge (``ensure_gram_postings`` is a no-op then);
+        the mutable memtable tail is indexed here, cached per storage
+        version."""
+        from ..fuzzy.ngram import GramPostings
+        k = self._ngram_specs[fld]
+        prim = self.partitions[i].primary
+        sources: List[Tuple[int, Any]] = []
+        off = 0
+        mem = prim.memtable
+        if mem:
+            # the scan-cache entry is replaced on any mutation (storage
+            # version key), so a per-field memtable postings cache in it
+            # is automatically invalidated with the memtable
+            cache = self._scan_cache[i].setdefault("ngram", {})
+            p = cache.get(fld)
+            if p is None:
+                vals = [None if r is TOMBSTONE else r.get(fld)
+                        for r in mem.values()]
+                cache[fld] = p = GramPostings.from_values(vals, k)
+            sources.append((0, p))
+            off = len(mem)
+        for comp in prim.components:           # newest first
+            if not comp.valid or comp.size == 0:
+                continue
+            sources.append((off, comp.ensure_gram_postings(fld, k)))
+            off += comp.size
+        return sources, off
+
+    def ngram_candidate_mask(self, i: int, fld: str, spec: Tuple
+                             ) -> np.ndarray:
+        """T-occurrence candidate bitmap over partition ``i``'s scan
+        positions (aligned with ``scan_partition_batch`` /
+        ``partition_pk_array``): gram-hit posting segments from every
+        storage tier concatenate into one position array and a single
+        fused count kernel keeps positions with >= T hits.  T <= 0 means
+        the index cannot prune — every row with an indexable value is a
+        candidate."""
+        from ..fuzzy.ngram import query_grams
+        from ..kernels.fuzzy_ops import t_occurrence_mask
+        if fld not in self._ngram_specs:
+            raise adm.ValidationError(f"no ngram index on {self.name}.{fld}")
+        idx, _ = self._live_selection(i)
+        if not len(idx):
+            return np.zeros(0, dtype=bool)
+        qh, threshold = query_grams(spec, self._ngram_specs[fld])
+        sources, total = self._ngram_sources(i, fld)
+        if threshold <= 0:
+            has = np.zeros(total, dtype=bool)
+            for off, p in sources:
+                has[off:off + p.n_rows] = p.has_value
+            return has[idx]
+        parts = [off + p.hit_positions(qh) for off, p in sources]
+        all_pos = np.concatenate(parts) if parts \
+            else np.zeros(0, dtype=np.int64)
+        return t_occurrence_mask(all_pos, total, threshold)[idx]
+
+    def ngram_search_partition(self, i: int, fld: str, spec: Tuple
+                               ) -> List[Tuple[Any, int]]:
+        """Row-engine surface: (pk, gram hits) per candidate row — rows
+        with any gram hit, plus (when T <= 0, so hits cannot prune) every
+        row holding an indexable value.  The T_OCCURRENCE operator
+        filters by threshold; counts here are host bincounts, the fused
+        kernel belongs to the columnar path."""
+        from ..fuzzy.ngram import query_grams
+        if fld not in self._ngram_specs:
+            raise adm.ValidationError(f"no ngram index on {self.name}.{fld}")
+        idx, keys = self._live_selection(i)
+        if not len(idx):
+            return []
+        qh, threshold = query_grams(spec, self._ngram_specs[fld])
+        sources, total = self._ngram_sources(i, fld)
+        counts = np.zeros(total, dtype=np.int64)
+        has = np.zeros(total, dtype=bool)
+        for off, p in sources:
+            has[off:off + p.n_rows] = p.has_value
+            hp = p.hit_positions(qh)
+            if len(hp):
+                counts[off:off + p.n_rows] += np.bincount(
+                    hp, minlength=p.n_rows)
+        live_counts = counts[idx]
+        live_has = has[idx]
+        emit = (live_counts > 0) | live_has if threshold <= 0 \
+            else live_counts > 0
+        return [(pk, int(c)) for pk, c, e in
+                zip(keys.tolist(), live_counts.tolist(), emit.tolist())
+                if e]
+
     def primary_lookup_partition(self, i: int, pks: Sequence[Any]
                                  ) -> List[Dict[str, Any]]:
         """Sorted-PK batched primary lookups (Figure 6's SORT_PK step makes
-        this access pattern sequential on a real B+-tree)."""
+        this access pattern sequential on a real B+-tree).  The plan's
+        SORT_PK already ordered the candidates, so an in-order input is
+        detected with one linear pass instead of being re-sorted."""
         prim = self.partitions[i].primary
+        pks = list(pks)
+        try:
+            unsorted = any(pks[j] > pks[j + 1] for j in range(len(pks) - 1))
+        except TypeError:           # mixed-type pks: let sorted() decide
+            unsorted = True
+        if unsorted:
+            pks = sorted(pks)
         out = []
-        for pk in sorted(pks):
+        for pk in pks:
             row = prim.lookup(pk)
             if row is not None:
                 out.append(row)
@@ -526,7 +665,8 @@ class PartitionedDataset:
             part.primary = recover(part.primary.components, part.primary.wal,
                                    flush_threshold=self.flush_threshold,
                                    schema=self.columnar_schema,
-                                   columnar=None if self.columnar else False)
+                                   columnar=None if self.columnar else False,
+                                   ngram_fields=self._ngram_fields)
             for fld in list(part.secondaries):
                 sec = part.secondaries[fld]
                 part.secondaries[fld] = recover(

@@ -52,6 +52,9 @@ class ExecStats:
     rows_index_vectorized: int = 0   # subset of rows_vectorized produced
     #                             by vectorized index access paths (index
     #                             search -> bitmap intersect -> gather)
+    rows_fuzzy_vectorized: int = 0   # subset of rows_index_vectorized
+    #                             produced by the fuzzy ngram chains
+    #                             (T-occurrence bitmap -> batched verify)
     kernel_retraces: int = 0    # jit traces of the columnar kernel cores
     #                             this query triggered: repeated queries
     #                             over pow2-padded batches must show 0
@@ -70,6 +73,10 @@ class ExecStats:
         self.op_rows[op] = self.op_rows.get(op, 0) + n
         self.rows_vectorized += n
         self.rows_index_vectorized += n
+
+    def fuzzy_vectorized(self, op: str, n: int) -> None:
+        self.index_vectorized(op, n)
+        self.rows_fuzzy_vectorized += n
 
 
 class Executor:
@@ -164,6 +171,24 @@ class Executor:
                                                   token, fuzzy_ed)
                 parts.append([{"__pk": pk} for pk in sorted(set(pks))])
             parts += [[] for _ in range(P - ds.num_partitions)]
+
+        elif k == "NGRAM_INDEX_SEARCH":
+            ds = self.datasets[op.attrs["dataset"]]
+            parts = []
+            for i in range(ds.num_partitions):
+                pairs = ds.ngram_search_partition(i, op.attrs["field"],
+                                                  op.attrs["spec"])
+                parts.append([{"__pk": pk, "__hits": h} for pk, h in pairs])
+            parts += [[] for _ in range(P - ds.num_partitions)]
+
+        elif k == "T_OCCURRENCE":
+            # keep candidates with >= T gram hits (T <= 0: the ngram
+            # search already emitted exactly the indexable rows)
+            from ..fuzzy.ngram import query_grams
+            _, thr = query_grams(op.attrs["spec"], op.attrs["gram_length"])
+            parts = [[{"__pk": r["__pk"]} for r in rows
+                      if r["__hits"] >= thr]
+                     for rows in self._input(op, 0)]
 
         elif k == "SORT_PK":
             parts = [sorted(rows, key=lambda r: r["__pk"])
@@ -368,7 +393,9 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
             for fld in ds.index_fields:
                 catalog.indexes.append(IndexInfo(
                     f"{n}_{fld}_idx", n, fld,
-                    kind=getattr(ds, "index_kinds", {}).get(fld, "btree")))
+                    kind=getattr(ds, "index_kinds", {}).get(fld, "btree"),
+                    gram_length=getattr(ds, "_ngram_specs",
+                                        {}).get(fld, 3)))
     phys = optimize(plan, catalog, config)
     ex = Executor(datasets, vectorize=vectorize)
     from ..kernels import columnar_ops as K

@@ -50,10 +50,11 @@ def _record_type() -> adm.RecordType:
 
 
 def _build(rng: random.Random, n_rows: int, parts: int, threshold: int,
-           index_kinds=("a", "b", "txt", "loc")):
+           index_kinds=("a", "b", "txt", "loc"), txt_kind="keyword"):
     """Random dataset lifecycle: indexes created before AND after inserts
     (backfill), interleaved updates + deletes, optional crash recovery.
-    Leaves memtables unflushed so every LSM read tier is live."""
+    Leaves memtables unflushed so every LSM read tier is live.
+    ``txt_kind`` picks the text index flavor (keyword | ngram)."""
     ds = PartitionedDataset(
         "D", _record_type(), "id", num_partitions=parts,
         flush_threshold=threshold,
@@ -64,7 +65,7 @@ def _build(rng: random.Random, n_rows: int, parts: int, threshold: int,
             ds.create_index("a")
         else:
             late.add("a")
-    for fld, kind in (("b", "btree"), ("txt", "keyword"), ("loc", "rtree")):
+    for fld, kind in (("b", "btree"), ("txt", txt_kind), ("loc", "rtree")):
         if fld in index_kinds:
             if rng.random() < 0.5:
                 ds.create_index(fld, kind=kind)
@@ -94,7 +95,7 @@ def _build(rng: random.Random, n_rows: int, parts: int, threshold: int,
         if fld in late:
             ds.create_index(fld)
     if "txt" in late:
-        ds.create_index("txt", kind="keyword")
+        ds.create_index("txt", kind=txt_kind)
     if "loc" in late:
         ds.create_index("loc", kind="rtree")
     for _ in range(rng.randrange(n_rows // 4 + 1)):
@@ -189,6 +190,55 @@ def test_differential_spatial(seed, n_rows, parts, threshold):
         and spatial_distance(r["loc"], center) <= radius,
         fields=["loc"], spatial=("loc", center, radius))
     _assert_engines_agree(ds, plan)
+
+
+def _fuzzy_spec(rng, kind):
+    base = rng.choice(VOCAB)
+    # sometimes corrupt the target so near-misses exercise the DP/bounds
+    target = base
+    if rng.random() < 0.5 and base:
+        j = rng.randrange(len(base))
+        target = base[:j] + rng.choice("abxyz") + base[j + 1:]
+    if kind == "ed":
+        return ("txt", "ed", target, rng.choice([0, 1, 2, 3]))
+    if rng.random() < 0.4:           # multi-word target for gram jaccard
+        target = target + " " + rng.choice(VOCAB)
+    return ("txt", "jaccard", target, rng.choice([0.2, 0.4, 0.6, 0.9]))
+
+
+@given(st.integers(0, 10 ** 9), st.integers(0, 70),
+       st.integers(2, 4), st.sampled_from([5, 11, 29]),
+       st.sampled_from(["ed", "jaccard"]))
+@settings(max_examples=60, deadline=None, derandomize=True)
+def test_differential_fuzzy(seed, n_rows, parts, threshold, kind):
+    """Fuzzy selects over an ngram-indexed field: the NGRAM_INDEX_SEARCH
+    -> T_OCCURRENCE -> verify chain agrees with the row engine across
+    the same flush/merge/recover lifecycles as every other index path
+    (_build interleaves them), including memtable-resident rows, deletes,
+    open-type drift, and late index creation (component backfill).
+    Variants cover exact specs (kernel-only verify), preds carrying an
+    extra non-fuzzy conjunct (residual re-check must run), and jaccard
+    specs whose gram length differs from the index's (no pruning, shared
+    verify)."""
+    from repro.fuzzy import fuzzy_predicate
+    rng = random.Random(seed * 13 + sum(map(ord, kind)))
+    ds = _build(rng, n_rows, parts, threshold, index_kinds=("a", "txt"),
+                txt_kind="ngram")
+    spec = _fuzzy_spec(rng, kind)
+    variant = rng.choice(["plain", "exact", "conjunct", "spec_k"])
+    if variant == "spec_k" and kind == "jaccard":
+        spec = spec + (2,)        # predicate gram length != index's 3
+    oracle = fuzzy_predicate(spec)
+    if variant == "conjunct":
+        lo_g = rng.randrange(0, 3)
+        plan = A.select(A.scan("D"),
+                        pred=lambda r: oracle(r) and r["g"] >= lo_g,
+                        fields=["txt", "g"], fuzzy=spec)
+    else:
+        plan = A.select(A.scan("D"), pred=oracle, fields=["txt"],
+                        fuzzy=spec, ranges_exact=variant == "exact")
+    ex = _assert_engines_agree(ds, plan)
+    assert ex.stats.rows_fallback == 0
 
 
 @given(st.integers(0, 10 ** 9), st.integers(0, 70),
@@ -335,3 +385,15 @@ def test_index_plans_never_silently_fall_back():
         ex = _assert_engines_agree(ds, plan)
         assert ex.stats.rows_fallback == 0, name
         assert ex.stats.rows_index_vectorized > 0, name
+    # the fuzzy ngram chain gets the same guard (on a dataset whose txt
+    # index is ngram-kind), counting into rows_fuzzy_vectorized
+    from repro.fuzzy import fuzzy_predicate
+    ds2 = _build(random.Random(20260729), 120, 3, 16,
+                 index_kinds=("a", "txt"), txt_kind="ngram")
+    for spec in [("txt", "ed", "tonight", 2),
+                 ("txt", "jaccard", "coffee", 0.4)]:
+        plan = A.select(A.scan("D"), pred=fuzzy_predicate(spec),
+                        fields=["txt"], fuzzy=spec)
+        ex = _assert_engines_agree(ds2, plan)
+        assert ex.stats.rows_fallback == 0, spec
+        assert ex.stats.rows_fuzzy_vectorized > 0, spec
