@@ -19,6 +19,7 @@ from repro.core import algebra as A
 from repro.storage.query import run_query
 
 N_USERS, N_MSGS = 4000, 20000
+SMOKE_USERS, SMOKE_MSGS = 800, 4000
 
 
 def _timed(fn, repeat=5):
@@ -65,8 +66,9 @@ def _compare(name, plan, ds, rows, check=None):
     return t_r, t_c
 
 
-def run() -> list:
-    _, ds = build_dataverse(N_USERS, N_MSGS, num_partitions=4,
+def run(smoke: bool = False) -> list:
+    nu, nm = (SMOKE_USERS, SMOKE_MSGS) if smoke else (N_USERS, N_MSGS)
+    _, ds = build_dataverse(nu, nm, num_partitions=4,
                             flush_threshold=256)
     rows: list = []
     mlo = dt.datetime(2014, 2, 1)
@@ -81,9 +83,9 @@ def run() -> list:
                  ranges_exact=True, hints=["skip-index"]),
         {"cnt": ("count", "*"), "avg_author": ("avg", "author-id"),
          "mx": ("max", "author-id")})
-    t_r, t_c = _compare("filter_agg_20k", agg, ds,
+    t_r, t_c = _compare(f"filter_agg_{nm // 1000}k", agg, ds,
                         rows, check=lambda r: r[0])
-    assert t_c < t_r, "columnar must beat the row engine on 20k-row " \
+    assert t_c < t_r, f"columnar must beat the row engine on {nm}-row " \
                       "filter+aggregate"
 
     # -- columnar-native storage: components carry their ColumnBatch as

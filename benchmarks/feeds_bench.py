@@ -12,13 +12,15 @@ from repro.data.dedup import FuzzyJoin
 from repro.data.feeds import BatchAssembler, Feed, SyntheticTokenAdaptor
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
+    n_ingest = 600 if smoke else 3000
+    n_docs = 80 if smoke else 300
 
     # -- feed -> dataset ingestion pipeline ----------------------------------
     _, ds = build_dataverse(50, 0, num_partitions=4, flush_threshold=512)
     msgs_ds = ds["MugshotMessages"]
-    recs = gen_messages(3000, 50, seed=3)
+    recs = gen_messages(n_ingest, 50, seed=3)
     src = iter(recs)
 
     class ListAdaptor:
@@ -39,9 +41,9 @@ def run() -> list:
     while feed.pump(256):
         pass
     dt = time.perf_counter() - t0
-    rows.append({"bench": "feed_ingest", "us_per_call": dt / 3000 * 1e6,
+    rows.append({"bench": "feed_ingest", "us_per_call": dt / n_ingest * 1e6,
                  "derived": f"{len(msgs_ds)} stored (author 13 filtered), "
-                            f"{3000 / dt:.0f} rec/s"})
+                            f"{n_ingest / dt:.0f} rec/s"})
 
     # -- joint fan-out: train + eval subscribe to one intake ------------------
     primary = Feed("intake", adaptor=SyntheticTokenAdaptor(512, 50304))
@@ -67,7 +69,7 @@ def run() -> list:
     rng = np.random.default_rng(0)
     vocab = [f"tok{i}" for i in range(200)]
     docs = []
-    for i in range(300):
+    for i in range(n_docs):
         base = set(rng.choice(vocab, size=12, replace=False))
         docs.append((i, base))
         if i % 5 == 0:

@@ -1,19 +1,34 @@
 """Benchmark aggregator: one module per paper table + substrate benches.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only table3]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table3] [--smoke]
+
+``--smoke`` drives the five CI smoke benches (columnar / index / ingest /
+fuzzy / feeds) at reduced sizes with one combined exit code — this is
+what ``scripts/verify.sh`` and the CI workflow invoke, replacing the old
+per-bench invocations.  Each smoke bench carries its own hard
+assertions (engine equivalence, no silent index/fuzzy fallback, zero
+kernel retraces on repeated queries), so a nonzero exit means a real
+regression, not a slow machine.
+
 Prints ``name,us_per_call,derived`` CSV (plus table-specific columns).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
+
+SMOKE_MODULES = ("columnar", "index", "ingest", "fuzzy", "feeds")
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="")
+    p.add_argument("--smoke", action="store_true",
+                   help="run the five CI smoke benches (reduced sizes, "
+                        "one exit code)")
     args = p.parse_args()
 
     from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
@@ -30,14 +45,19 @@ def main() -> None:
         "feeds": feeds_bench,
         "steps": step_bench,
     }
+    if args.smoke:
+        modules = {k: modules[k] for k in SMOKE_MODULES}
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules.items():
         if args.only and args.only not in name:
             continue
         t0 = time.time()
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            rows = mod.run()
+            rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             print(f"{name},FAILED,{type(e).__name__}: {e}")
             failures += 1
@@ -50,7 +70,8 @@ def main() -> None:
                     extra += f" | {k}={v}"
             t_str = f"{main_t:.1f}" if isinstance(main_t, float) else main_t
             print(f"{r['bench']},{t_str},{extra}")
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s"
+              f"{' (smoke)' if args.smoke else ''}", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

@@ -1,9 +1,29 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the one command that must stay green (see ROADMAP.md).
-# Collection regressions (import errors, missing optional deps) show up
-# here before anything else does.
+# This is exactly what CI (.github/workflows/ci.yml) runs on every push
+# and pull request:
+#
+#   1. repo hygiene — no tracked bytecode (this regressed twice before
+#      the gate existed);
+#   2. the full pytest suite (collection regressions — import errors,
+#      missing optional deps — show up here before anything else does);
+#   3. the five smoke benches via `benchmarks/run.py --smoke`
+#      (columnar / index / ingest / fuzzy / feeds), whose hard
+#      assertions catch: a row-vs-columnar divergence, an index or
+#      fuzzy plan silently falling back to the row engine, a candidate
+#      read regressing onto a python walk (the CSR postings must beat
+#      the legacy secondary-LSM walk), a kernel retrace on repeated
+#      queries, or an ingest pipeline divergence.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Repo hygiene: committed __pycache__/bytecode has regressed twice —
+# fail fast if any tracked path matches.
+if git ls-files | grep -E '(^|/)__pycache__(/|$)|\.pyc$' >/dev/null; then
+    echo "verify: tracked bytecode files found:" >&2
+    git ls-files | grep -E '(^|/)__pycache__(/|$)|\.pyc$' >&2
+    exit 1
+fi
 
 # Fixed seed for the whole run: the row-vs-columnar differential harness
 # (tests/test_differential.py, collected below) seeds per test name via
@@ -12,19 +32,6 @@ cd "$(dirname "$0")/.."
 export PYTHONHASHSEED=0
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
-# Index-path smoke bench: fails if any index-search plan silently falls
-# back to the row engine or diverges from it.
+# Smoke-bench matrix: one invocation, one exit code (see run.py --smoke).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.index_bench --smoke
-
-# Ingest-pipeline smoke bench: feed -> flush -> merge -> scan; fails if
-# the columnar-native pipeline diverges from the legacy row path or ever
-# forces a component's lazy row view.
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.ingest_bench --smoke
-
-# Fuzzy smoke bench: ngram T-occurrence chain + batched FuzzyJoin verify;
-# fails if a fuzzy plan silently falls back, diverges from the scalar
-# predicates, or retraces its kernels on repeated queries.
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.fuzzy_bench --smoke
+    python -m benchmarks.run --smoke

@@ -18,13 +18,15 @@ Lowered operator set:
   POST_VALIDATE_SELECT /
   PRIMARY_INDEX_LOOKUP    Figure-6 index access chains (secondary btree /
                           rtree / keyword search -> SORT_PK -> primary
-                          lookup [-> post-validate]): per-partition sorted
-                          PK candidate arrays become position bitmaps over
-                          the primary's cached ColumnBatches via the fused
-                          sorted-intersection kernel; multi-index
-                          conjunctions AND bitmaps before any record
-                          decode, and post-validation runs on the gathered
-                          columns.  The fuzzy chains (NGRAM_INDEX_SEARCH
+                          lookup [-> post-validate]): each partition's
+                          per-component CSR postings probe yields a
+                          candidate position bitmap over the primary's
+                          cached ColumnBatches directly (datasets exposing
+                          only sorted candidate-PK arrays go through the
+                          fused sorted-intersection kernel instead);
+                          multi-index conjunctions AND bitmaps before any
+                          record decode, and post-validation runs on the
+                          gathered columns.  The fuzzy chains (NGRAM_INDEX_SEARCH
                           -> T_OCCURRENCE -> same tail) produce the bitmap
                           straight from the ngram postings' T-occurrence
                           count kernel and verify candidates with the
@@ -69,7 +71,8 @@ def _columnar_dataset(ex: Any, name: str, index: bool = False,
     if ds is None or not hasattr(ds, "scan_partition_batch"):
         raise Unsupported("dataset has no columnar scan")
     if index and not (hasattr(ds, "partition_pk_array")
-                      and hasattr(ds, "secondary_candidate_pks")):
+                      and (hasattr(ds, "secondary_candidate_mask")
+                           or hasattr(ds, "secondary_candidate_pks"))):
         raise Unsupported("dataset has no columnar index access")
     if fuzzy and not hasattr(ds, "ngram_candidate_mask"):
         raise Unsupported("dataset has no ngram candidate access")
@@ -392,29 +395,67 @@ def _chain_child(op: PhysicalOp, kind: str) -> PhysicalOp:
     return child
 
 
-def _search_candidates(ds: Any, i: int, search: PhysicalOp):
-    """Sorted candidate-PK array of the chain's own index search on one
-    partition."""
+def _pk_intersect_mask(ds: Any, i: int, cands) -> Optional[Any]:
+    """Legacy candidate-PK surface -> position bitmap via the fused
+    sorted-intersection kernel (datasets without the bitmap surface)."""
+    if not len(cands):
+        return None
+    keys = ds.partition_pk_array(i)
+    if not len(keys):
+        return None
+    return O.candidate_position_mask(keys, cands)
+
+
+def _search_mask(ds: Any, i: int, search: PhysicalOp):
+    """Candidate position bitmap of the chain's own index search on one
+    partition (None: provably empty).  Datasets exposing the per-
+    component postings surface produce the bitmap straight from CSR
+    probes (searchsorted range slice / segment gather + one scatter);
+    the PK-array surface falls back to sorted-intersection."""
     a = search.attrs
     if search.kind == "SECONDARY_INDEX_SEARCH":
-        return ds.secondary_candidate_pks(i, a["field"], a["lo"], a["hi"])
+        if hasattr(ds, "secondary_candidate_mask"):
+            return ds.secondary_candidate_mask(i, a["field"], a["lo"],
+                                               a["hi"])
+        return _pk_intersect_mask(
+            ds, i, ds.secondary_candidate_pks(i, a["field"], a["lo"],
+                                              a["hi"]))
     if search.kind == "SPATIAL_INDEX_SEARCH":
         center, radius = a["args"]
-        return ds.spatial_candidate_pks(i, a["field"], center, radius)
-    center_token, fuzzy_ed = a["args"]
-    return ds.keyword_candidate_pks(i, a["field"], center_token, fuzzy_ed)
+        if hasattr(ds, "spatial_candidate_mask"):
+            return ds.spatial_candidate_mask(i, a["field"], center, radius)
+        return _pk_intersect_mask(
+            ds, i, ds.spatial_candidate_pks(i, a["field"], center, radius))
+    token, fuzzy_ed = a["args"]
+    if hasattr(ds, "keyword_candidate_mask"):
+        return ds.keyword_candidate_mask(i, a["field"], token, fuzzy_ed)
+    return _pk_intersect_mask(
+        ds, i, ds.keyword_candidate_pks(i, a["field"], token, fuzzy_ed))
+
+
+def _range_mask(ds: Any, i: int, f: str, lo: Any, hi: Any):
+    """One extra btree-indexed range field's candidate bitmap (multi-
+    index conjunction)."""
+    if hasattr(ds, "secondary_candidate_mask"):
+        return ds.secondary_candidate_mask(i, f, lo, hi)
+    return O.candidate_position_mask(
+        ds.partition_pk_array(i), ds.secondary_candidate_pks(i, f, lo, hi))
 
 
 def _compile_index_path(op: PhysicalOp, ex: Any,
                         needed: Optional[Set[str]], p: int) -> Node:
     """Lower POST_VALIDATE_SELECT <- PRIMARY_INDEX_LOOKUP <- SORT_PK <-
     {SECONDARY,SPATIAL,KEYWORD}_INDEX_SEARCH onto the columnar engine:
-    each partition's search yields a sorted PK candidate array, the fused
-    sorted-intersection kernel turns it into a position bitmap over the
-    partition's live-pk array (every additional btree-indexed range field
-    contributes another bitmap, ANDed in before any gather), and the
-    surviving positions gather the cached columns for post-validation —
-    no row dict is ever materialized for a non-matching candidate.
+    each partition's search yields a candidate position bitmap straight
+    from the per-component CSR postings (searchsorted over the sorted
+    key dictionary -> gathered position segments -> one scatter pass,
+    composed with the newest-wins live selection; every additional
+    btree-indexed range field contributes another bitmap, ANDed in
+    before any gather), and the surviving positions gather the cached
+    columns for post-validation — no (key, pk) pair is ever walked and
+    no row dict is materialized for a non-matching candidate.  Datasets
+    exposing only sorted candidate-PK arrays keep the fused
+    sorted-intersection kernel path.
 
     The fuzzy variant (SORT_PK <- T_OCCURRENCE <- NGRAM_INDEX_SEARCH)
     joins the same pipeline one step earlier: the ngram T-occurrence
@@ -499,23 +540,16 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
                     out.append(ColumnBatch({}, 0))   # no candidates
                     continue
             else:
-                cands = _search_candidates(ds, i, search)
-                n_cand += len(cands)
-                if not len(cands):
+                mask = _search_mask(ds, i, search)
+                if mask is None or not mask.any():
                     out.append(ColumnBatch({}, 0))   # short-circuit: no scan
                     continue
-                keys = ds.partition_pk_array(i)
-                if not len(keys):
-                    out.append(ColumnBatch({}, 0))   # all-deleted partition
-                    continue
-                mask = O.candidate_position_mask(keys, cands)
+                n_cand += int(mask.sum())
             for f in extra_fields:
                 if not mask.any():
                     break
                 lo, hi = ranges[f]
-                mask = mask & O.candidate_position_mask(
-                    ds.partition_pk_array(i),
-                    ds.secondary_candidate_pks(i, f, lo, hi))
+                mask = mask & _range_mask(ds, i, f, lo, hi)
             if not mask.any():
                 out.append(ColumnBatch({}, 0))   # empty intersection
                 continue

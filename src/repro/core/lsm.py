@@ -23,10 +23,12 @@ tombstone collapse), so no row dict is ever materialized on the merge
 path; ``recover()`` keeps surviving columnar components as-is and replays
 the WAL tail into the memtable, which re-shreds at its next flush.  Row
 dicts are a *derived, lazy* view (``Component.rows``) built only for
-legacy row-at-a-time callers.  Indexes whose values are not records —
-secondary indexes store bare primary keys — keep the classic row-array
-storage (``columnar=False`` forces it, e.g. for benchmarking the old
-row path).
+legacy row-at-a-time callers.  Indexes whose values are not records
+keep the classic row-array storage (``columnar=False`` forces it, e.g.
+for benchmarking the old row path).  Secondary index structures are not
+separate LSM trees at all: components carry per-field columnar CSR
+postings (``gram_postings`` for ngram, ``sec_postings`` for
+btree/rtree/keyword) as derived data built beside the batch.
 """
 
 from __future__ import annotations
@@ -114,7 +116,11 @@ class Component:
     postings (fuzzy/ngram.GramPostings), built at flush/merge right next
     to the batch — from the batch's string dictionary, never from row
     dicts — for every field the owning index registers in
-    ``ngram_fields``."""
+    ``ngram_fields``.  ``sec_postings`` is the same calculus generalized
+    to the btree/rtree/keyword secondary kinds
+    (columnar/postings.FieldPostings): per-field CSR candidate structures
+    keyed by their index spec, derived from the batch exactly like ngram
+    postings and adopted as-is by recovery."""
 
     keys: np.ndarray                      # sorted; numeric or object dtype
     batch: Optional[ColumnBatch] = None   # columnar primary data
@@ -122,18 +128,22 @@ class Component:
     valid: bool = False
     comp_id: int = field(default_factory=lambda: next(_component_ids))
     gram_postings: Dict[str, Any] = field(default_factory=dict, repr=False)
+    sec_postings: Dict[str, Any] = field(default_factory=dict, repr=False)
     _rows: Optional[np.ndarray] = field(default=None, repr=False)
 
     @classmethod
     def build(cls, keys: np.ndarray, vals: Sequence[Any],
               schema: Optional[Any] = None,
               columnar: Optional[bool] = None,
-              ngram_fields: Optional[Dict[str, int]] = None) -> "Component":
+              ngram_fields: Optional[Dict[str, int]] = None,
+              sec_fields: Optional[Dict[str, Tuple[str, Any]]] = None
+              ) -> "Component":
         """Shred sorted (key, value) pairs into a component.  Values that
         are all records (dicts) or tombstones shred columnar (unless
         ``columnar=False``); anything else keeps row storage.
-        ``ngram_fields`` (field -> gram length) names fields that get
-        ngram postings built alongside the batch."""
+        ``ngram_fields`` (field -> gram length) and ``sec_fields``
+        (field -> (kind, param) secondary spec) name fields that get
+        postings built alongside the batch."""
         tomb = np.fromiter((v is TOMBSTONE for v in vals), dtype=bool,
                            count=len(vals))
         shred = columnar is not False and all(
@@ -141,7 +151,7 @@ class Component:
         if not shred:
             c = cls(keys=keys, tomb=tomb)
             c._rows = _obj_array(vals)
-            c._build_ngrams(ngram_fields)
+            c._build_postings(ngram_fields, sec_fields)
             return c
         rows = [{} if t else v for t, v in zip(tomb.tolist(), vals)]
         sch = schema() if callable(schema) else schema
@@ -156,12 +166,37 @@ class Component:
                 sch = sch.union(extra)
         c = cls(keys=keys, batch=ColumnBatch.from_rows(rows, sch),
                 tomb=tomb)
-        c._build_ngrams(ngram_fields)
+        c._build_postings(ngram_fields, sec_fields)
         return c
 
     def _build_ngrams(self, ngram_fields: Optional[Dict[str, int]]) -> None:
         for fld, k in (ngram_fields or {}).items():
             self.ensure_gram_postings(fld, k)
+
+    def _build_postings(self, ngram_fields: Optional[Dict[str, int]],
+                        sec_fields: Optional[Dict[str, Tuple[str, Any]]]
+                        ) -> None:
+        self._build_ngrams(ngram_fields)
+        for fld, spec in (sec_fields or {}).items():
+            self.ensure_sec_postings(fld, spec)
+
+    def ensure_sec_postings(self, fld: str, spec: Tuple[str, Any]) -> Any:
+        """The field's secondary (btree/rtree/keyword) CSR postings, built
+        once per component and per spec (a changed spec — e.g. a new
+        rtree cell size — rebuilds).  Columnar components shred from the
+        batch column; row-mode components fall back to the value list."""
+        p = self.sec_postings.get(fld)
+        if p is not None and p.spec == spec:
+            return p
+        from ..columnar.postings import FieldPostings
+        if self.batch is not None:
+            p = FieldPostings.from_batch(self.batch, fld, spec, self.size)
+        else:
+            vals = [r.get(fld) if isinstance(r, dict) else None
+                    for r in (self._rows if self._rows is not None else ())]
+            p = FieldPostings.from_values(vals, spec)
+        self.sec_postings[fld] = p
+        return p
 
     def ensure_gram_postings(self, fld: str, k: int) -> Any:
         """The field's ngram(k) postings, built once per component (it is
@@ -277,15 +312,18 @@ class LSMIndex:
     ``PartitionedDataset.columnar_schema``) steers flush-time shredding;
     ``ngram_fields`` (a dict field -> gram length, or a zero-arg callable
     returning one) names fields whose flush/merge output carries ngram
-    postings; ``columnar=False`` forces classic row-array components (the
-    benchmarked legacy path)."""
+    postings; ``sec_fields`` (a dict field -> (kind, param) secondary
+    spec, or a zero-arg callable) does the same for btree/rtree/keyword
+    CSR postings; ``columnar=False`` forces classic row-array components
+    (the benchmarked legacy path)."""
 
     def __init__(self, flush_threshold: int = 1024,
                  merge_policy: Optional[TieredMergePolicy] = None,
                  wal: Optional[List[WALRecord]] = None,
                  schema: Optional[Any] = None,
                  columnar: Optional[bool] = None,
-                 ngram_fields: Optional[Any] = None):
+                 ngram_fields: Optional[Any] = None,
+                 sec_fields: Optional[Any] = None):
         self.flush_threshold = int(flush_threshold)
         self.merge_policy = merge_policy or TieredMergePolicy()
         self.memtable: Dict[Any, Any] = {}
@@ -295,6 +333,7 @@ class LSMIndex:
         self.schema = schema
         self.columnar = columnar
         self.ngram_fields = ngram_fields
+        self.sec_fields = sec_fields
         self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
                       "merged_rows": 0}
 
@@ -337,6 +376,10 @@ class LSMIndex:
         nf = self.ngram_fields
         return nf() if callable(nf) else (nf or {})
 
+    def _sec(self) -> Dict[str, Tuple[str, Any]]:
+        sf = self.sec_fields
+        return sf() if callable(sf) else (sf or {})
+
     def flush(self, *, crash_before_validity: bool = False) -> Optional[Component]:
         """Shadow-install the memtable as a new immutable component,
         shredding record values straight into the component's primary
@@ -349,7 +392,8 @@ class LSMIndex:
         keys, vals = _sorted_kv(self.memtable)
         comp = Component.build(keys, vals, schema=self.schema,
                                columnar=self.columnar,
-                               ngram_fields=self._ngram())
+                               ngram_fields=self._ngram(),
+                               sec_fields=self._sec())
         self.components.insert(0, comp)        # shadow: present but invalid
         if crash_before_validity:
             return comp
@@ -386,7 +430,8 @@ class LSMIndex:
                 [c.tomb for c in comps],
                 drop_tombstones=bool(includes_oldest))
             out = Component(keys=keys, batch=merged, tomb=tomb)
-            out._build_ngrams(self._ngram())   # postings ride the merge too
+            # postings (ngram + secondary CSR) ride the merge too
+            out._build_postings(self._ngram(), self._sec())
         else:
             seen: Dict[Any, Any] = {}
             for c in reversed(comps):          # oldest first; newer overwrite
@@ -397,7 +442,8 @@ class LSMIndex:
             keys, vals = _sorted_kv(seen)
             out = Component.build(keys, vals, schema=self.schema,
                                   columnar=self.columnar,
-                                  ngram_fields=self._ngram())
+                                  ngram_fields=self._ngram(),
+                                  sec_fields=self._sec())
         ids = {c.comp_id for c in comps}
         pos = min(i for i, c in enumerate(self.components) if c.comp_id in ids)
         self.components.insert(pos + 0, out)   # shadow next to its inputs
@@ -466,14 +512,16 @@ def recover(components: Sequence[Component], wal: Sequence[WALRecord],
             *, replay_from_lsn: int = 0, flush_threshold: int = 1024,
             schema: Optional[Any] = None,
             columnar: Optional[bool] = None,
-            ngram_fields: Optional[Any] = None) -> LSMIndex:
+            ngram_fields: Optional[Any] = None,
+            sec_fields: Optional[Any] = None) -> LSMIndex:
     """Crash recovery (paper §4.4): drop components without the validity bit,
     then replay the committed WAL tail into a fresh memtable.  Surviving
     columnar components are adopted as-is (their batches *are* the data,
-    ngram postings included); the replayed memtable re-shreds into the
-    same form at its next flush."""
+    ngram and secondary postings included); the replayed memtable
+    re-shreds into the same form at its next flush."""
     idx = LSMIndex(flush_threshold=flush_threshold, schema=schema,
-                   columnar=columnar, ngram_fields=ngram_fields)
+                   columnar=columnar, ngram_fields=ngram_fields,
+                   sec_fields=sec_fields)
     idx.components = [c for c in components if c.valid]
     idx.wal = list(wal)
     idx._lsn = itertools.count(len(idx.wal))

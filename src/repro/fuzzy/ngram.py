@@ -1,11 +1,14 @@
 """ngram(k) postings: the columnar secondary-index structure behind the
 fuzzy query paths (the ``"ngram"`` index kind ``core/rewriter`` reserved).
 
-Unlike the row-backed btree/rtree/keyword secondaries, ngram postings are
-not an LSMIndex of (key, pk) pairs: each *primary* component carries a
-``GramPostings`` per indexed field, built at flush/merge alongside the
-component's ColumnBatch (and from the batch's string dictionary, not by
-re-tokenizing rows).  The structure is a columnar CSR:
+Ngram postings are not an LSMIndex of (key, pk) pairs: each *primary*
+component carries a ``GramPostings`` per indexed field, built at
+flush/merge alongside the component's ColumnBatch (and from the batch's
+string dictionary, not by re-tokenizing rows).  This per-component
+derived-columnar-data calculus now covers every secondary kind — the
+btree/rtree/keyword structures are the same pattern generalized
+(``columnar/postings.FieldPostings``, which also hosts the shared CSR
+builders this module uses).  The structure is a columnar CSR:
 
   grams      sorted distinct uint64 FNV-1a gram hashes
   offsets    int64 [G+1] segment bounds into ``positions``
@@ -37,6 +40,7 @@ from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from ..columnar.postings import csr_from_pairs, segment_gather
 from ..core.functions import (edit_distance_check, gram_tokens,
                               similarity_jaccard_check)
 from ..kernels.fuzzy_ops import fnv1a_hash
@@ -69,18 +73,10 @@ def value_gram_hashes(s: str, k: int) -> np.ndarray:
     return np.unique(fnv1a_hash(gram_tokens(s, k)))
 
 
-def _segment_gather(src: np.ndarray, starts: np.ndarray,
-                    counts: np.ndarray) -> np.ndarray:
-    """Concatenate ``src[starts[i]:starts[i]+counts[i]]`` segments in one
-    vectorized gather (the CSR expansion both the postings build and the
-    query-time segment read share)."""
-    total = int(counts.sum())
-    if total == 0:
-        return src[:0]
-    excl = np.concatenate([np.zeros(1, dtype=np.int64),
-                           np.cumsum(counts)[:-1]])
-    idx = np.repeat(starts - excl, counts) + np.arange(total)
-    return src[idx]
+# CSR segment expansion and assembly are shared with the generalized
+# secondary postings (columnar/postings.py): one copy of the pattern for
+# ngram, btree, rtree and keyword structures.
+_segment_gather = segment_gather
 
 
 @dataclass
@@ -106,12 +102,8 @@ class GramPostings:
         n = int(has_value.shape[0])
         if all_h.shape[0] == 0:
             return cls._empty(k, has_value)
-        order = np.argsort(all_h, kind="stable")
-        grams, counts = np.unique(all_h[order], return_counts=True)
-        offsets = np.zeros(grams.shape[0] + 1, dtype=np.int64)
-        np.cumsum(counts, out=offsets[1:])
-        return cls(k, grams, offsets, all_pos[order].astype(np.int64),
-                   has_value, n)
+        grams, offsets, positions = csr_from_pairs(all_h, all_pos)
+        return cls(k, grams, offsets, positions, has_value, n)
 
     @classmethod
     def from_values(cls, vals: Sequence[Any], k: int) -> "GramPostings":

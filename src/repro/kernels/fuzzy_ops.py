@@ -174,6 +174,13 @@ def t_occurrence_mask(positions: np.ndarray, n: int, threshold: int,
     pallas = use_pallas() if force_pallas is None else force_pallas
     if pallas and (force_pallas or n < 2 ** 24):
         return _tocc_pallas(positions, n, threshold, interpret=interpret)
+    if threshold == 1:
+        # membership, not counting (the secondary postings candidate
+        # bitmaps probe at T=1): a host bool scatter beats a jitted
+        # dispatch off-TPU at every size
+        mask = np.zeros(n, dtype=bool)
+        mask[positions] = True
+        return mask
     if n + m <= 4096:
         return np.bincount(positions, minlength=n) >= threshold
     return _tocc_jnp(positions, n, threshold)

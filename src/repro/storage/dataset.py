@@ -4,9 +4,20 @@
 Faithful structure:
   * a Dataset is hash-partitioned (sharded) on its primary key;
   * each partition's primary index is an LSM "B+-tree" (core/lsm.LSMIndex);
-  * secondary indexes are NODE-LOCAL: partition i's secondary index only
-    references rows stored in partition i, so secondary lookups fan out to
-    all partitions and return primary keys, never rows;
+  * secondary indexes are NODE-LOCAL: partition i's secondary structures
+    only reference rows stored in partition i, so secondary lookups fan
+    out to all partitions and return primary keys (or position bitmaps),
+    never rows.  Secondary indexes are not separate LSM trees of
+    (key, pk) rows: every primary component carries per-indexed-field
+    **columnar CSR postings** (columnar/postings.FieldPostings — sorted
+    key dictionary + offsets + row-position arrays; btree values, rtree
+    grid-cell codes, keyword tokens), built at flush/merge beside the
+    component batch exactly like the fuzzy ngram postings, adopted as-is
+    by recovery and backfilled by late ``create_index``.  The mutable
+    memtable tail is indexed at query time (cached per storage version),
+    and newest-wins/tombstone semantics come from the live-row selection
+    — a stale old-version posting is simply never selected — so inserts
+    and deletes need no secondary maintenance at all;
   * records are ADM instances (open/closed types, core/adm) — the encoded
     size difference between Schema and KeyOnly types reproduces Table 2;
   * record-level "transactions": every insert/delete WAL-logs before apply;
@@ -42,11 +53,11 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 import numpy as np
 
 from ..core import adm
-from ..core.functions import (cells_covering_circle, spatial_cell,
-                              spatial_intersect_circle, word_tokens)
+from ..core.functions import cells_covering_circle
 from ..core.lsm import LSMIndex, TOMBSTONE, TieredMergePolicy, WALRecord, \
     key_array, recover
 from ..columnar.batch import ColumnBatch, promotes_lossless
+from ..columnar.postings import FieldPostings, cell_codes_for_query
 from ..columnar.schema import ColumnSchema
 
 __all__ = ["PartitionedDataset", "hash_partition", "hash_partition_array"]
@@ -85,7 +96,6 @@ def hash_partition_array(keys: np.ndarray, num_partitions: int) -> np.ndarray:
 @dataclass
 class _Partition:
     primary: LSMIndex
-    secondaries: Dict[str, LSMIndex] = field(default_factory=dict)
 
 
 class PartitionedDataset:
@@ -103,14 +113,18 @@ class PartitionedDataset:
         self.flush_threshold = flush_threshold
         self.merge_policy = merge_policy or TieredMergePolicy()
         self.columnar = columnar            # False: legacy row components
-        # ngram(k) indexes: field -> gram length; postings live on the
-        # primary components (built at flush/merge), not in a secondary
+        # ngram(k) indexes: field -> gram length; btree/rtree/keyword
+        # indexes: field -> kind.  ALL secondary postings live on the
+        # primary components (built at flush/merge), none in a secondary
+        # LSM tree
         self._ngram_specs: Dict[str, int] = {}
+        self._sec_kinds: Dict[str, str] = {}
         self.partitions: List[_Partition] = [
             _Partition(LSMIndex(flush_threshold, self.merge_policy,
                                 schema=self.columnar_schema,
                                 columnar=None if columnar else False,
-                                ngram_fields=self._ngram_fields))
+                                ngram_fields=self._ngram_fields,
+                                sec_fields=self._sec_fields))
             for _ in range(num_partitions)]
         self.index_fields: List[str] = []
         self.index_kinds: Dict[str, str] = {}   # btree|rtree|keyword|ngram
@@ -128,78 +142,74 @@ class PartitionedDataset:
         self._schema_cache: Optional[Tuple[Any, ColumnSchema]] = None
 
     # -- DDL ---------------------------------------------------------------
-    def _sec_keys(self, fld: str, value: Any, pk: Any) -> List[Tuple]:
-        """Secondary-index entries for one field value, per index kind
-        (paper Data definition 2: btree | rtree | keyword)."""
-        kind = self.index_kinds.get(fld, "btree")
-        if kind == "btree":
-            return [(value, pk)]
-        if kind == "rtree":   # grid-bucketed spatial index
-            return [(spatial_cell(value, self.spatial_cell_size), pk)]
-        if kind == "keyword":  # inverted index: one entry per token
-            return [((tok,), pk) for tok in set(word_tokens(value))]
-        raise adm.ValidationError(kind)
-
     def _ngram_fields(self) -> Dict[str, int]:
         """Callable handed to the primary LSM indexes so components
         flushed/merged after a late ``create_index(..., "ngram")`` still
         get their postings built."""
         return dict(self._ngram_specs)
 
+    def _sec_spec(self, fld: str) -> Tuple[str, Any]:
+        """The (kind, param) postings spec for one secondary field.  The
+        rtree spec carries the *current* grid cell size, so a changed
+        ``spatial_cell_size`` rebuilds stale per-component postings on
+        their next probe instead of serving wrong cells."""
+        kind = self._sec_kinds[fld]
+        return (kind, self.spatial_cell_size if kind == "rtree" else None)
+
+    def _sec_fields(self) -> Dict[str, Tuple[str, Any]]:
+        """Callable handed to the primary LSM indexes: flush/merge build
+        btree/rtree/keyword CSR postings for these fields beside the
+        component batch (the ngram calculus, generalized)."""
+        return {fld: self._sec_spec(fld) for fld in self._sec_kinds}
+
     def create_index(self, fld: str, kind: str = "btree",
                      gram_length: int = 3) -> None:
-        """Node-local secondary index; backfills from existing rows.
-        ``kind="ngram"`` registers ngram(``gram_length``) postings on the
-        *primary* components instead of building a secondary LSM tree
-        (postings are derived columnar data: backfill here, flush/merge
-        keep them current, and the memtable tail is indexed at query
-        time)."""
+        """Node-local secondary index.  Every kind registers *derived
+        columnar postings* on the primary components (no secondary LSM
+        tree): backfill here builds them for existing components,
+        flush/merge keep them current, and the memtable tail is indexed
+        at query time."""
         if fld in self.index_fields:
             raise adm.ValidationError(f"index on {fld} already exists")
+        if kind not in ("ngram", "btree", "rtree", "keyword"):
+            raise adm.ValidationError(kind)
+        self.index_fields.append(fld)
+        self.index_kinds[fld] = kind
         if kind == "ngram":
-            self.index_fields.append(fld)
-            self.index_kinds[fld] = kind
             self._ngram_specs[fld] = int(gram_length)
             for part in self.partitions:        # backfill existing comps
                 for comp in part.primary.components:
                     if comp.valid:
                         comp.ensure_gram_postings(fld, int(gram_length))
             return
-        self.index_fields.append(fld)
-        self.index_kinds[fld] = kind
-        for part in self.partitions:
-            ix = LSMIndex(self.flush_threshold, self.merge_policy)
-            for pk, row in part.primary.items():
-                if fld in row:
-                    for key in self._sec_keys(fld, row[fld], pk):
-                        ix.insert(key, pk)
-            part.secondaries[fld] = ix
+        self._sec_kinds[fld] = kind
+        spec = self._sec_spec(fld)
+        for part in self.partitions:            # backfill existing comps
+            for comp in part.primary.components:
+                if comp.valid:
+                    comp.ensure_sec_postings(fld, spec)
 
     # -- DML (record-level transactions) ------------------------------------
     def insert(self, record: Dict[str, Any]) -> None:
+        """Secondary postings are derived data on the components, so an
+        insert is exactly one primary-index update — no old-version
+        lookup, no per-index (key, pk) maintenance."""
         rec = self.dtype.validate(record)
         self.stats["bytes_encoded"] += len(self.dtype.encode(rec))
         self._open_schema.observe_row(rec, self._declared)
         key = rec[self.pk]
         part = self.partitions[hash_partition(key, self.num_partitions)]
-        old = part.primary.lookup(key)
         part.primary.insert(key, rec)
-        for fld, ix in part.secondaries.items():
-            if old is not None and fld in old:
-                for k2 in self._sec_keys(fld, old[fld], key):
-                    ix.delete(k2)
-            if fld in rec:
-                for k2 in self._sec_keys(fld, rec[fld], key):
-                    ix.insert(k2, key)
         self.stats["inserts"] += 1
 
     def insert_batch(self, records: Sequence[Dict[str, Any]]) -> None:
         """One-statement batch (paper Table 4: amortizes per-statement
         overhead).  Records are validated and routed once, then applied
         to each partition as a bulk WAL+memtable pass
-        (``LSMIndex.insert_batch``); the per-record old-version lookup
-        runs only for partitions that maintain secondary indexes.  This
-        is the feed store path: micro-batches flow straight into memory
+        (``LSMIndex.insert_batch``).  Secondary postings being derived
+        component data, indexed datasets take the same bulk path as
+        unindexed ones — no per-record old-version lookups.  This is the
+        feed store path: micro-batches flow straight into memory
         components and flush columnar."""
         P = self.num_partitions
         buckets: List[Tuple[List[Any], List[Dict[str, Any]]]] = \
@@ -230,33 +240,15 @@ class PartitionedDataset:
             ks.append(key)
             rs.append(rec)
         for part, (ks, rs) in zip(self.partitions, buckets):
-            if not ks:
-                continue
-            if part.secondaries:
-                for k, r in zip(ks, rs):
-                    old = part.primary.lookup(k)
-                    part.primary.insert(k, r)
-                    for fld, ix in part.secondaries.items():
-                        if old is not None and fld in old:
-                            for k2 in self._sec_keys(fld, old[fld], k):
-                                ix.delete(k2)
-                        if fld in r:
-                            for k2 in self._sec_keys(fld, r[fld], k):
-                                ix.insert(k2, k)
-            else:
+            if ks:
                 part.primary.insert_batch(ks, rs)
         self.stats["inserts"] += len(records)
 
     def delete(self, key: Any) -> bool:
         part = self.partitions[hash_partition(key, self.num_partitions)]
-        old = part.primary.lookup(key)
-        if old is None:
+        if part.primary.lookup(key) is None:
             return False
         part.primary.delete(key)
-        for fld, ix in part.secondaries.items():
-            if fld in old:
-                for k2 in self._sec_keys(fld, old[fld], key):
-                    ix.delete(k2)
         self.stats["deletes"] += 1
         return True
 
@@ -419,128 +411,144 @@ class PartitionedDataset:
         cache["batches"][ckey] = out
         return out
 
-    def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any
-                                   ) -> List[Any]:
-        """Secondary range search on one partition -> primary keys (paper
-        §4.3: 'the result of a secondary key lookup is a set of primary
-        keys')."""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None:
-            raise adm.ValidationError(f"no index on {self.name}.{fld}")
-        lo_k = (_MIN if lo is None else lo, _MIN)   # None = unbounded side
-        hi_k = (_MAX if hi is None else hi, _MAX)
-        return [pk for _, pk in ix.range(lo_k, hi_k)]
-
-    def spatial_search_partition(self, i: int, fld: str,
-                                 center: Tuple[float, float],
-                                 radius: float) -> List[Any]:
-        """Grid ('rtree') candidates within the circle's covering cells —
-        post-validation (paper Figure 6) filters exact distance later."""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None or self.index_kinds.get(fld) != "rtree":
-            raise adm.ValidationError(f"no rtree index on {self.name}.{fld}")
-        out = []
-        for cell in cells_covering_circle(center, radius,
-                                          self.spatial_cell_size):
-            out.extend(pk for _, pk in ix.range((cell, _MIN), (cell, _MAX)))
-        return out
-
-    def keyword_search_partition(self, i: int, fld: str, token: str,
-                                 fuzzy_ed: int = 0) -> List[Any]:
-        """Inverted-index lookup; fuzzy_ed>0 matches any token within the
-        edit distance by running the partition-local token dictionary
-        through one batched banded-DP call (kernels/fuzzy_ops) instead of
-        a per-token python DP.  (Whole-field fuzzy predicates use the
-        ngram(k) index instead — fuzzy/ngram — which prunes candidates
-        before any distance is computed.)"""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None or self.index_kinds.get(fld) != "keyword":
+    # -- secondary postings probes (candidate reads) --------------------------
+    def _require_sec(self, fld: str, kind: str) -> Tuple[str, Any]:
+        if self._sec_kinds.get(fld) != kind:
             raise adm.ValidationError(
-                f"no keyword index on {self.name}.{fld}")
-        token = token.lower()
-        if fuzzy_ed == 0:
-            return [pk for _, pk in ix.range(((token,), _MIN),
-                                             ((token,), _MAX))]
-        from ..kernels.fuzzy_ops import edit_distances
-        toks: List[str] = []
-        pks_per_tok: List[List[Any]] = []
-        cur = None
-        for (tok,), pk in ((k[0], r) for k, r in ix.items()):
-            if tok != cur:
-                cur = tok
-                toks.append(tok)
-                pks_per_tok.append([])
-            pks_per_tok[-1].append(pk)
-        if not toks:
-            return []
-        ok = edit_distances(toks, token, fuzzy_ed) <= fuzzy_ed
-        return [pk for match, pks in zip(ok.tolist(), pks_per_tok)
-                if match for pk in pks]
+                f"no {kind} index on {self.name}.{fld}")
+        return self._sec_spec(fld)
 
-    # -- candidate read paths (columnar index access) -------------------------
+    def _sec_sources(self, i: int, fld: str) -> Tuple[List[Tuple[int, Any]],
+                                                      int]:
+        """(offset, FieldPostings) per storage tier of partition ``i`` in
+        ``_live_selection`` concat order (memtable first, then components
+        newest-first) plus the concat length — the secondary twin of
+        ``_ngram_sources``.  Component postings were built at flush/merge
+        (``ensure_sec_postings`` is a no-op then); the mutable memtable
+        tail is indexed here, cached per storage version."""
+        spec = self._sec_spec(fld)
+        prim = self.partitions[i].primary
+        sources: List[Tuple[int, Any]] = []
+        off = 0
+        mem = prim.memtable
+        if mem:
+            # the scan-cache entry is replaced on any mutation (storage
+            # version key), so the per-field memtable postings cached in
+            # it are automatically invalidated with the memtable
+            cache = self._scan_cache[i].setdefault("sec", {})
+            p = cache.get(fld)
+            if p is None or p.spec != spec:
+                vals = [None if r is TOMBSTONE else r.get(fld)
+                        for r in mem.values()]
+                cache[fld] = p = FieldPostings.from_values(vals, spec)
+            sources.append((0, p))
+            off = len(mem)
+        for comp in prim.components:           # newest first
+            if not comp.valid or comp.size == 0:
+                continue
+            sources.append((off, comp.ensure_sec_postings(fld, spec)))
+            off += comp.size
+        return sources, off
+
     @staticmethod
-    def _pk_array(pks: Sequence[Any]) -> np.ndarray:
-        """Sorted, deduplicated candidate-PK array.  Numeric when the keys
-        are homogeneous (so the Pallas/jnp sorted-intersection kernel can
-        run on them); object dtype otherwise (string/tuple pks intersect
-        via the numpy merge fallback)."""
-        pks = pks if isinstance(pks, list) else list(pks)
-        if not pks:
-            return np.zeros(0, dtype=np.int64)
-        try:
-            arr = np.asarray(pks)
-            if arr.dtype == object or arr.dtype.kind not in "biuf":
-                raise TypeError("non-numeric pks")
-            return np.unique(arr)
-        except (TypeError, ValueError):
-            uniq = sorted(set(pks))
-            out = np.empty(len(uniq), dtype=object)
-            for j, v in enumerate(uniq):
-                out[j] = v
-            return out
+    def _positions_mask(parts: List[np.ndarray], total: int,
+                        idx: np.ndarray) -> np.ndarray:
+        """Candidate bitmap over live scan positions from per-tier posting
+        segments: one scatter pass (the ngram T-occurrence kernel at
+        threshold 1) over the storage concat, then the newest-wins
+        selection — a stale old-version hit is simply never selected."""
+        from ..kernels.fuzzy_ops import t_occurrence_mask
+        parts = [p for p in parts if len(p)]
+        if not parts:
+            return np.zeros(len(idx), dtype=bool)
+        all_pos = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        return t_occurrence_mask(all_pos, total, 1)[idx]
 
+    def secondary_candidate_mask(self, i: int, fld: str, lo: Any, hi: Any
+                                 ) -> np.ndarray:
+        """Secondary B+-tree range probe -> candidate bitmap over
+        partition ``i``'s scan positions (aligned with
+        ``scan_partition_batch`` / ``partition_pk_array``).  Per tier the
+        probe is two binary searches over the sorted key dictionary and
+        one contiguous positions slice — no (key, pk) pair is ever
+        materialized and no python list is walked."""
+        self._require_sec(fld, "btree")
+        idx, _ = self._live_selection(i)
+        if not len(idx):
+            return np.zeros(0, dtype=bool)
+        sources, total = self._sec_sources(i, fld)
+        parts = [off + p.range_positions(lo, hi) for off, p in sources]
+        return self._positions_mask(parts, total, idx)
+
+    def spatial_candidate_mask(self, i: int, fld: str,
+                               center: Tuple[float, float],
+                               radius: float) -> np.ndarray:
+        """Grid ('rtree') probe -> candidate bitmap (post-validation still
+        required: covering cells over-approximate the circle).  The
+        covering cells are encoded and *deduplicated* once, then probed
+        against each tier's sorted cell-code dictionary in one
+        searchsorted + segment gather — overlapping cells are never
+        scanned twice."""
+        self._require_sec(fld, "rtree")
+        idx, _ = self._live_selection(i)
+        if not len(idx):
+            return np.zeros(0, dtype=bool)
+        codes = cell_codes_for_query(
+            cells_covering_circle(center, radius, self.spatial_cell_size))
+        sources, total = self._sec_sources(i, fld)
+        parts = [off + p.lookup_positions(codes) for off, p in sources]
+        return self._positions_mask(parts, total, idx)
+
+    def keyword_candidate_mask(self, i: int, fld: str, token: str,
+                               fuzzy_ed: int = 0) -> np.ndarray:
+        """Inverted-index probe -> candidate bitmap; ``fuzzy_ed > 0`` runs
+        each tier's (distinct) token dictionary through one batched
+        banded-DP call (kernels/fuzzy_ops) instead of a per-token python
+        DP."""
+        self._require_sec(fld, "keyword")
+        idx, _ = self._live_selection(i)
+        if not len(idx):
+            return np.zeros(0, dtype=bool)
+        token = token.lower()
+        sources, total = self._sec_sources(i, fld)
+        parts = [off + p.token_positions(token, fuzzy_ed)
+                 for off, p in sources]
+        return self._positions_mask(parts, total, idx)
+
+    # sorted-PK candidate surfaces: the bitmap gathered through the live
+    # pk array (ascending, so the result is sorted and deduplicated)
     def secondary_candidate_pks(self, i: int, fld: str, lo: Any, hi: Any
                                 ) -> np.ndarray:
-        """Secondary B+-tree range search -> sorted PK candidate array for
-        one partition.  Unlike ``secondary_search_partition`` this never
-        materializes (key, pk) pairs in key order: the LSM read returns
-        flat live values and the array sorts once, ready for position-
-        bitmap intersection against ``partition_pk_array``."""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None:
-            raise adm.ValidationError(f"no index on {self.name}.{fld}")
-        lo_k = (_MIN if lo is None else lo, _MIN)
-        hi_k = (_MAX if hi is None else hi, _MAX)
-        return self._pk_array(ix.range_values(lo_k, hi_k))
+        return self.partition_pk_array(i)[
+            self.secondary_candidate_mask(i, fld, lo, hi)]
 
     def spatial_candidate_pks(self, i: int, fld: str,
                               center: Tuple[float, float],
                               radius: float) -> np.ndarray:
-        """Grid ('rtree') candidates -> sorted PK array (post-validation
-        still required: covering cells over-approximate the circle)."""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None or self.index_kinds.get(fld) != "rtree":
-            raise adm.ValidationError(f"no rtree index on {self.name}.{fld}")
-        out: List[Any] = []
-        for cell in cells_covering_circle(center, radius,
-                                          self.spatial_cell_size):
-            out.extend(ix.range_values((cell, _MIN), (cell, _MAX)))
-        return self._pk_array(out)
+        return self.partition_pk_array(i)[
+            self.spatial_candidate_mask(i, fld, center, radius)]
 
     def keyword_candidate_pks(self, i: int, fld: str, token: str,
                               fuzzy_ed: int = 0) -> np.ndarray:
-        """Inverted-index candidates -> sorted PK array.  The fuzzy path
-        (ed > 0) reuses the dictionary edit-distance scan, then dedups."""
-        ix = self.partitions[i].secondaries.get(fld)
-        if ix is None or self.index_kinds.get(fld) != "keyword":
-            raise adm.ValidationError(
-                f"no keyword index on {self.name}.{fld}")
-        if fuzzy_ed == 0:
-            token = token.lower()
-            return self._pk_array(ix.range_values(((token,), _MIN),
-                                                  ((token,), _MAX)))
-        return self._pk_array(
-            self.keyword_search_partition(i, fld, token, fuzzy_ed))
+        return self.partition_pk_array(i)[
+            self.keyword_candidate_mask(i, fld, token, fuzzy_ed)]
+
+    # row-engine surfaces (paper §4.3: 'the result of a secondary key
+    # lookup is a set of primary keys') — same postings probes, scalar
+    # list out
+    def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any
+                                   ) -> List[Any]:
+        return self.secondary_candidate_pks(i, fld, lo, hi).tolist()
+
+    def spatial_search_partition(self, i: int, fld: str,
+                                 center: Tuple[float, float],
+                                 radius: float) -> List[Any]:
+        return self.spatial_candidate_pks(i, fld, center, radius).tolist()
+
+    def keyword_search_partition(self, i: int, fld: str, token: str,
+                                 fuzzy_ed: int = 0) -> List[Any]:
+        return self.keyword_candidate_pks(i, fld, token,
+                                          fuzzy_ed).tolist()
 
     # -- ngram (fuzzy) candidate generation -----------------------------------
     def _ngram_sources(self, i: int, fld: str) -> Tuple[List[Tuple[int, Any]],
@@ -659,44 +667,20 @@ class PartitionedDataset:
     # -- recovery -------------------------------------------------------------
     def crash_and_recover(self) -> "PartitionedDataset":
         """Simulate a crash: rebuild every partition from (valid components +
-        WAL), discarding unflushed memtables and invalid components."""
+        WAL), discarding unflushed memtables and invalid components.
+        Secondary postings are component data, so they survive (or are
+        dropped) with their components — there is no secondary recovery
+        pass, and the replayed memtable tail is re-indexed at query
+        time."""
         self._recover_epoch += 1     # recovered indexes restart counters
         for part in self.partitions:
             part.primary = recover(part.primary.components, part.primary.wal,
                                    flush_threshold=self.flush_threshold,
                                    schema=self.columnar_schema,
                                    columnar=None if self.columnar else False,
-                                   ngram_fields=self._ngram_fields)
-            for fld in list(part.secondaries):
-                sec = part.secondaries[fld]
-                part.secondaries[fld] = recover(
-                    sec.components, sec.wal,
-                    flush_threshold=self.flush_threshold)
+                                   ngram_fields=self._ngram_fields,
+                                   sec_fields=self._sec_fields)
         return self
 
     def __len__(self) -> int:
         return sum(len(p.primary) for p in self.partitions)
-
-
-class _Extreme:
-    def __init__(self, sign: int):
-        self.sign = sign
-
-    def __lt__(self, other):
-        return self.sign < 0
-
-    def __gt__(self, other):
-        return self.sign > 0
-
-    def __le__(self, other):
-        return self.sign < 0
-
-    def __ge__(self, other):
-        return self.sign > 0
-
-    def __eq__(self, other):
-        return isinstance(other, _Extreme) and other.sign == self.sign
-
-
-_MIN = _Extreme(-1)
-_MAX = _Extreme(+1)

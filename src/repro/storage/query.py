@@ -17,7 +17,8 @@ local/global aggregation split reducing "network" traffic.
 ``Executor(..., vectorize=True)`` additionally offers every operator to
 the columnar engine first (columnar/lower.try_lower): supported subplans
 — scans, sargable selects, index access paths (secondary/rtree/keyword
-search -> PK bitmap intersect -> gather + post-validate), aggregates,
+CSR-postings probe -> candidate bitmap -> gather + post-validate),
+aggregates,
 groups, sorts/top-k, equijoins — execute on ColumnBatches with
 Pallas/jnp kernels (kernels/columnar_ops) and convert back to row dicts
 only at the boundary; everything else (opaque predicates without

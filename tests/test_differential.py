@@ -4,7 +4,7 @@ Property-based generator of random datasets (open-type records, optional
 fields, updates, deletes, LSM flush/merge/recovery) + query plans
 (including every index access path), asserting that
 ``Executor(vectorize=True)`` and ``vectorize=False`` produce identical
-sorted results.  Runs 260 generated cases under a fixed seed (the
+sorted results.  Runs 320 generated cases under a fixed seed (the
 hypothesis shim seeds per test name; real hypothesis runs derandomized),
 so ``scripts/verify.sh`` is reproducible in CI.  The lifecycle-schedule
 cases additionally interleave explicit flush/merge/crash_and_recover with
@@ -271,6 +271,31 @@ def _check_columnar_primary(ds):
                 assert not hasattr(comp, "col_cache")
 
 
+def _index_probe_plan(rng, kind):
+    """A select whose access path exercises the per-component CSR
+    postings of the given index kind (the lifecycle schedules interleave
+    these with flush/merge/recover so candidates migrate across every
+    storage tier)."""
+    if kind == "spatial":
+        center = (rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0))
+        radius = rng.uniform(0.05, 0.4)
+        return A.select(
+            A.scan("D"),
+            pred=lambda r: "loc" in r
+            and spatial_distance(r["loc"], center) <= radius,
+            fields=["loc"], spatial=("loc", center, radius))
+    token = rng.choice(VOCAB)
+    ed = rng.choice([0, 0, 1, 2])
+    if ed == 0:
+        pred = lambda r: "txt" in r and token in word_tokens(r["txt"])  # noqa: E731
+    else:
+        pred = lambda r: "txt" in r and any(  # noqa: E731
+            edit_distance_check(t, token, ed)
+            for t in word_tokens(r["txt"]))
+    return A.select(A.scan("D"), pred=pred, fields=["txt"],
+                    keyword=("txt", token, ed))
+
+
 @given(st.integers(0, 10 ** 9), st.integers(2, 4),
        st.sampled_from([6, 13, 31]))
 @settings(max_examples=40, deadline=None, derandomize=True)
@@ -278,7 +303,10 @@ def test_differential_lifecycle_schedules(seed, parts, threshold):
     """Interleaved insert / insert_batch / delete / explicit flush /
     explicit merge / crash_and_recover schedules: row and columnar
     engines stay in lockstep at every checkpoint, and components created
-    by any flush or merge carry columnar primary data throughout."""
+    by any flush or merge carry columnar primary data throughout.
+    Queries cover every secondary CSR kind (btree / rtree / keyword), so
+    postings built at flush/merge, backfilled, and rebuilt from memtable
+    tails all get exercised mid-lifecycle."""
     rng = random.Random(seed)
     ds = PartitionedDataset(
         "D", _record_type(), "id", num_partitions=parts,
@@ -286,6 +314,7 @@ def test_differential_lifecycle_schedules(seed, parts, threshold):
         merge_policy=TieredMergePolicy(k=rng.choice([2, 3])))
     ds.create_index("a")
     ds.create_index("txt", kind="keyword")
+    ds.create_index("loc", kind="rtree")
     key_space = 120
 
     def mk_row():
@@ -294,6 +323,8 @@ def test_differential_lifecycle_schedules(seed, parts, threshold):
             r["a"] = rng.randrange(-50, 50)
         if rng.random() < 0.6:
             r["txt"] = " ".join(rng.choice(VOCAB) for _ in range(2))
+        if rng.random() < 0.5:
+            r["loc"] = (rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0))
         if rng.random() < 0.4:   # open field of drifting kind
             r["x"] = rng.choice([rng.randrange(100), rng.uniform(0.0, 9.0),
                                  rng.choice(VOCAB)])
@@ -324,10 +355,16 @@ def test_differential_lifecycle_schedules(seed, parts, threshold):
         elif op == "recover":
             ds.crash_and_recover()
         else:
-            _assert_engines_agree(ds, _relational_plan(
-                rng, rng.choice(["btree", "agg", "group", "topk"])))
+            kind = rng.choice(["btree", "agg", "group", "topk",
+                               "spatial", "keyword"])
+            if kind in ("spatial", "keyword"):
+                _assert_engines_agree(ds, _index_probe_plan(rng, kind))
+            else:
+                _assert_engines_agree(ds, _relational_plan(rng, kind))
         _check_columnar_primary(ds)
     _assert_engines_agree(ds, _relational_plan(rng, "multi"))
+    for kind in ("spatial", "keyword"):
+        _assert_engines_agree(ds, _index_probe_plan(rng, kind))
     _check_columnar_primary(ds)
 
 
@@ -385,6 +422,10 @@ def test_index_plans_never_silently_fall_back():
         ex = _assert_engines_agree(ds, plan)
         assert ex.stats.rows_fallback == 0, name
         assert ex.stats.rows_index_vectorized > 0, name
+        # repeated query over the (now warm) postings + padded batches:
+        # no kernel core may retrace
+        ex2 = _assert_engines_agree(ds, plan)
+        assert ex2.stats.kernel_retraces == 0, name
     # the fuzzy ngram chain gets the same guard (on a dataset whose txt
     # index is ngram-kind), counting into rows_fuzzy_vectorized
     from repro.fuzzy import fuzzy_predicate

@@ -1,0 +1,310 @@
+"""Columnar secondary postings (btree/rtree/keyword CSR on primary
+components): structural invariants, probe correctness against scan
+oracles, and consistency across the full LSM lifecycle — flush, merge,
+late-index backfill, key-moving updates, deletes, crash recovery."""
+
+import datetime as dt
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import adm
+from repro.core.functions import spatial_cell, spatial_distance, word_tokens
+from repro.core.lsm import TieredMergePolicy
+from repro.columnar.postings import (FieldPostings, cell_codes_for_query,
+                                     csr_from_pairs, segment_gather)
+from repro.storage.dataset import PartitionedDataset
+
+VOCAB = ["tpu", "jax", "lsm", "tonight", "coffee", "mesh"]
+
+
+# ---------------------------------------------------------------------------
+# CSR building blocks
+# ---------------------------------------------------------------------------
+
+def test_csr_from_pairs_groups_and_sorts():
+    keys = np.asarray([5, 2, 5, 9, 2, 2], dtype=np.int64)
+    pos = np.arange(6, dtype=np.int64)
+    ks, offs, ps = csr_from_pairs(keys, pos)
+    assert ks.tolist() == [2, 5, 9]
+    assert offs.tolist() == [0, 3, 5, 6]
+    assert sorted(ps[0:3].tolist()) == [1, 4, 5]      # key 2's rows
+    assert sorted(ps[3:5].tolist()) == [0, 2]         # key 5's rows
+    assert ps[5:6].tolist() == [3]
+
+
+def test_segment_gather_matches_python():
+    src = np.arange(100, dtype=np.int64)
+    starts = np.asarray([10, 40, 0], dtype=np.int64)
+    counts = np.asarray([3, 0, 5], dtype=np.int64)
+    want = [x for s, c in zip(starts, counts) for x in range(s, s + c)]
+    assert segment_gather(src, starts, counts).tolist() == want
+
+
+def test_field_postings_btree_numeric_probe():
+    vals = [7, None, 3, 7, -2, None, 10]
+    p = FieldPostings.from_values(vals, ("btree", None))
+    assert p.has_value.tolist() == [True, False, True, True, True, False,
+                                    True]
+    assert sorted(p.range_positions(3, 7).tolist()) == [0, 2, 3]
+    assert sorted(p.range_positions(None, None).tolist()) == [0, 2, 3, 4, 6]
+    assert p.range_positions(100, 200).tolist() == []
+    # fractional bounds on an int domain round inward
+    assert sorted(p.range_positions(2.5, 7.5).tolist()) == [0, 2, 3]
+
+
+def test_field_postings_btree_datetime_domain():
+    vals = [dt.datetime(2014, 1, 1), dt.datetime(2014, 3, 1), None,
+            dt.datetime(2014, 2, 1)]
+    p = FieldPostings.from_values(vals, ("btree", None))
+    got = sorted(p.range_positions(dt.datetime(2014, 1, 15),
+                                   dt.datetime(2014, 2, 15)).tolist())
+    assert got == [3]
+    # unencodable bound falls back to the per-key filter, matching nothing
+    assert p.range_positions(5, 10).tolist() == []
+
+
+def test_field_postings_rtree_cells_deduplicated():
+    cellsz = 0.1
+    vals = [(0.05, 0.05), (0.15, 0.05), None, (0.05, 0.06), "junk"]
+    p = FieldPostings.from_values(vals, ("rtree", cellsz))
+    assert p.has_value.tolist() == [True, True, False, True, False]
+    # overlapping covering cells: the probe array dedupes them up front
+    cells = [(0, 0), (0, 0), (1, 0)]
+    codes = cell_codes_for_query(cells)
+    assert codes.shape[0] == 2
+    assert sorted(p.lookup_positions(codes).tolist()) == [0, 1, 3]
+    lone = cell_codes_for_query([(5, 5)])
+    assert p.lookup_positions(lone).tolist() == []
+
+
+def test_field_postings_keyword_tokens_and_fuzzy():
+    vals = ["see you tonight", None, "tonight tonight coffee", "tonite"]
+    p = FieldPostings.from_values(vals, ("keyword", None))
+    # one entry per (distinct token, row): repeated tokens collapse
+    assert sorted(p.token_positions("tonight").tolist()) == [0, 2]
+    assert sorted(p.token_positions("coffee").tolist()) == [2]
+    # fuzzy: tonite is within ed 3 of tonight (paper Q6); dedup across
+    # tokens — a row matching several fuzzy tokens appears once
+    assert sorted(p.token_positions("tonight", 3).tolist()) == [0, 2, 3]
+    assert sorted(p.token_positions("tonight", 1).tolist()) == [0, 2]
+    assert p.token_positions("zzz").tolist() == []
+
+
+def test_field_postings_mixed_obj_domain_unordered():
+    vals = [3, "tpu", 1, None, "jax"]
+    p = FieldPostings.from_values(vals, ("btree", None))
+    assert not p.ordered
+    # per-key filtering: incomparable keys never match, comparable do
+    assert sorted(p.range_positions(1, 3).tolist()) == [0, 2]
+    assert sorted(p.range_positions("a", "z").tolist()) == [1, 4]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: postings vs scan oracle on a live dataset
+# ---------------------------------------------------------------------------
+
+def _mk(threshold=8, parts=3, k=2):
+    rt = adm.RecordType("T", (
+        adm.Field("id", adm.INT64),
+        adm.Field("v", adm.INT64, optional=True),
+        adm.Field("txt", adm.STRING, optional=True),
+        adm.Field("loc", adm.POINT, optional=True),
+    ), open=True)
+    return PartitionedDataset("T", rt, "id", num_partitions=parts,
+                              flush_threshold=threshold,
+                              merge_policy=TieredMergePolicy(k=k))
+
+
+def _insert_some(ds, rng, n, key_space):
+    for _ in range(n):
+        r = {"id": rng.randrange(key_space)}
+        if rng.random() < 0.85:
+            r["v"] = rng.randrange(-40, 40)
+        if rng.random() < 0.75:
+            r["txt"] = " ".join(rng.choice(VOCAB)
+                                for _ in range(rng.randrange(1, 4)))
+        if rng.random() < 0.7:
+            r["loc"] = (rng.uniform(0, 1), rng.uniform(0, 1))
+        ds.insert(r)
+
+
+def _oracles(ds):
+    rows = ds.scan()
+
+    def btree(lo, hi):
+        return sorted(r["id"] for r in rows
+                      if "v" in r and lo <= r["v"] <= hi)
+
+    def rtree(center, radius):
+        cells = set()
+        from repro.core.functions import cells_covering_circle
+        for c in cells_covering_circle(center, radius,
+                                       ds.spatial_cell_size):
+            cells.add(c)
+        return sorted(r["id"] for r in rows if "loc" in r
+                      and spatial_cell(r["loc"],
+                                       ds.spatial_cell_size) in cells)
+
+    def keyword(tok):
+        return sorted(r["id"] for r in rows
+                      if "txt" in r and tok in word_tokens(r["txt"]))
+    return btree, rtree, keyword
+
+
+def _probe_all(ds, fn, *args):
+    out = []
+    for i in range(ds.num_partitions):
+        arr = fn(i, *args)
+        as_list = arr.tolist()
+        assert as_list == sorted(set(as_list))        # sorted + unique
+        out += as_list
+    return sorted(out)
+
+
+def test_postings_lifecycle_consistency():
+    """Candidate reads match scan oracles while entries migrate across
+    memtable -> flushed components -> tiered merges, with key-moving
+    updates, deletes, late-index backfill, and crash recovery."""
+    rng = random.Random(20260729)
+    ds = _mk()
+    ds.create_index("v")                      # early index
+    _insert_some(ds, rng, 90, 150)
+    ds.create_index("loc", kind="rtree")      # late: backfill components
+    ds.create_index("txt", kind="keyword")
+    _insert_some(ds, rng, 60, 150)
+    for i in range(0, 150, 7):
+        ds.delete(i)
+    for i in range(0, 150, 13):               # update: moves keys/cells
+        ds.insert({"id": i, "v": 99, "txt": "tonight",
+                   "loc": (0.5, 0.5)})
+    assert any(p.primary.stats["merges"] > 0 for p in ds.partitions)
+
+    def check():
+        btree, rtree, keyword = _oracles(ds)
+        for lo, hi in [(0, 10), (99, 99), (-40, 40), (30, 35)]:
+            assert _probe_all(ds, ds.secondary_candidate_pks, "v",
+                              lo, hi) == btree(lo, hi)
+        for center, radius in [((0.5, 0.5), 0.2), ((0.1, 0.9), 0.05)]:
+            assert _probe_all(ds, ds.spatial_candidate_pks, "loc",
+                              center, radius) == rtree(center, radius)
+        for tok in ("tonight", "jax", "nosuchtoken"):
+            assert _probe_all(ds, ds.keyword_candidate_pks, "txt",
+                              tok) == keyword(tok)
+    check()
+    for part in ds.partitions:                # everything onto disk
+        part.primary.flush()
+    check()
+    ds.crash_and_recover()                    # memtables replayed from WAL
+    check()
+    _insert_some(ds, rng, 25, 150)            # fresh memtable tail
+    check()
+
+
+def test_postings_ride_flush_merge_and_recover():
+    """Components carry their postings from the flush/merge that created
+    them; probes never rebuild (ensure_* is a no-op), and recovery
+    adopts them as-is."""
+    ds = _mk(threshold=6, parts=2, k=99)      # high k: no auto merges
+    ds.create_index("v")
+    for i in range(30):
+        ds.insert({"id": i, "v": i % 5})
+    prim = ds.partitions[0].primary
+    comps = [c for c in prim.components if c.valid]
+    assert comps, "expected flushed components"
+    built = {c.comp_id: c.sec_postings["v"] for c in comps}
+    ds.secondary_candidate_pks(0, "v", 0, 4)  # probe
+    for c in comps:                           # same objects: no rebuild
+        assert c.sec_postings["v"] is built[c.comp_id]
+    out = prim.merge(comps)                   # explicit merge
+    assert out.sec_postings.get("v") is not None
+    ds.crash_and_recover()
+    prim = ds.partitions[0].primary
+    for c in prim.components:
+        if c.valid:
+            assert c.sec_postings.get("v") is not None
+
+
+def test_memtable_tail_postings_cached_and_invalidated():
+    ds = _mk(threshold=1000, parts=1)         # everything memtable-resident
+    ds.create_index("txt", kind="keyword")
+    ds.insert({"id": 1, "txt": "coffee tonight"})
+    ds.insert({"id": 2, "txt": "jax mesh"})
+    assert ds.keyword_candidate_pks(0, "txt", "coffee").tolist() == [1]
+    cache1 = ds._scan_cache[0]["sec"]["txt"]
+    # repeated probe reuses the cached memtable postings
+    assert ds.keyword_candidate_pks(0, "txt", "jax").tolist() == [2]
+    assert ds._scan_cache[0]["sec"]["txt"] is cache1
+    ds.insert({"id": 3, "txt": "coffee"})     # mutation invalidates
+    assert sorted(ds.keyword_candidate_pks(0, "txt",
+                                           "coffee").tolist()) == [1, 3]
+    assert ds._scan_cache[0]["sec"]["txt"] is not cache1
+
+
+def test_candidate_masks_align_with_scan_batches():
+    """The bitmap surface is position-aligned with partition_pk_array /
+    scan_partition_batch — the alignment the columnar chain relies on."""
+    ds = _mk(threshold=5, parts=2)
+    ds.create_index("v")
+    for i in range(40):
+        ds.insert({"id": i, "v": i % 10})
+    for i in (3, 9, 15):
+        ds.delete(i)
+    for i in range(ds.num_partitions):
+        mask = ds.secondary_candidate_mask(i, "v", 2, 6)
+        pks = ds.partition_pk_array(i)
+        assert mask.shape == pks.shape
+        batch = ds.scan_partition_batch(i, ["id", "v"])
+        vcol = batch.columns["v"].decode()
+        for j, m in enumerate(mask.tolist()):
+            assert m == (isinstance(vcol[j], int) and 2 <= vcol[j] <= 6)
+
+
+def test_no_index_raises():
+    ds = _mk()
+    with pytest.raises(adm.ValidationError):
+        ds.secondary_candidate_pks(0, "v", 0, 1)
+    ds.create_index("txt", kind="keyword")
+    with pytest.raises(adm.ValidationError):
+        ds.secondary_candidate_pks(0, "txt", 0, 1)   # wrong kind
+    with pytest.raises(adm.ValidationError):
+        ds.spatial_candidate_pks(0, "txt", (0, 0), 1.0)
+
+
+def test_insert_batch_takes_bulk_path_with_indexes():
+    """Secondary postings are derived data, so indexed datasets batch-
+    ingest without per-record old-version lookups — and the postings
+    still answer correctly afterwards."""
+    ds = _mk(threshold=16, parts=2)
+    ds.create_index("v")
+    recs = [{"id": i, "v": i % 7} for i in range(60)]
+    ds.insert_batch(recs)
+    want = sorted(r["id"] for r in recs if 2 <= r["v"] <= 4)
+    assert _probe_all(ds, ds.secondary_candidate_pks, "v", 2, 4) == want
+    # updates through a second batch win over the first version
+    ds.insert_batch([{"id": i, "v": 100} for i in range(0, 60, 2)])
+    want = sorted(i for i in range(60)
+                  if (i % 2 == 0 and 2 <= 100 <= 4)
+                  or (i % 2 == 1 and 2 <= i % 7 <= 4))
+    assert _probe_all(ds, ds.secondary_candidate_pks, "v", 2, 4) == want
+
+
+def test_spatial_candidates_exact_vs_distance_oracle():
+    """Covering-cell candidates always contain the true matches and the
+    per-cell dedup never drops one (the old per-cell list-extend bug
+    surface)."""
+    rng = random.Random(7)
+    ds = _mk(threshold=9, parts=2)
+    ds.create_index("loc", kind="rtree")
+    pts = {}
+    for i in range(80):
+        p = (rng.uniform(0, 1), rng.uniform(0, 1))
+        pts[i] = p
+        ds.insert({"id": i, "loc": p})
+    center, radius = (0.4, 0.6), 0.17
+    cands = set(_probe_all(ds, ds.spatial_candidate_pks, "loc",
+                           center, radius))
+    true = {i for i, p in pts.items()
+            if spatial_distance(p, center) <= radius}
+    assert true <= cands                      # no false negatives

@@ -210,9 +210,7 @@ def test_vectorized_index_paths_across_lsm_lifecycle():
     check()
     msgs.delete(401)
     for p in msgs.partitions:             # force everything onto disk
-        p.primary.flush()
-        for sec in p.secondaries.values():
-            sec.flush()
+        p.primary.flush()                 # postings ride the flush
     check()
 
 
