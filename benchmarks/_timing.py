@@ -1,0 +1,70 @@
+"""Shared benchmark timing — one best-of-N implementation for every
+benchmark module, built on the obs tracer.
+
+Every bench used to carry its own copy of the ``perf_counter`` best-of-N
+loop (and ``fuzzy_bench`` timed its wall clock with non-monotonic
+``time.time()``).  This module is the single source of truth:
+
+  timed(fn)      — best-of-N wall time for a callable; each repetition
+                   runs under a ``bench.rep`` obs span so enabling the
+                   tracer yields a Chrome-trace of the bench itself.
+  stopwatch()    — context manager for one-shot sections (ingest loops,
+                   end-to-end pipelines); monotonic by construction.
+
+All times are ``time.perf_counter()`` seconds.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Tuple
+
+from repro import obs
+
+__all__ = ["timed", "stopwatch", "Stopwatch"]
+
+
+def timed(fn: Callable[[], Any], repeat: int = 3, warmup: int = 0,
+          block: Optional[Callable[[Any], Any]] = None,
+          ) -> Tuple[Any, float]:
+    """Run ``fn`` ``warmup + repeat`` times; return (last output,
+    best seconds over the timed repetitions).
+
+    ``block`` (e.g. ``jax.block_until_ready``) is applied to the output
+    inside the timed region so async dispatch is charged to the bench.
+    """
+    out = None
+    for _ in range(warmup):
+        out = fn()
+        if block is not None:
+            block(out)
+    best = float("inf")
+    for _ in range(max(1, repeat)):
+        with obs.span("bench.rep") as sp:
+            t0 = time.perf_counter()
+            out = fn()
+            if block is not None:
+                block(out)
+            dt = time.perf_counter() - t0
+            sp.set("seconds", dt)
+        best = min(best, dt)
+    return out, best
+
+
+class Stopwatch:
+    """``with stopwatch() as sw: ...`` then read ``sw.seconds``."""
+
+    __slots__ = ("_t0", "seconds")
+
+    def __enter__(self) -> "Stopwatch":
+        self.seconds = 0.0
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        return False
+
+
+def stopwatch() -> Stopwatch:
+    return Stopwatch()

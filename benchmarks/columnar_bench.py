@@ -12,23 +12,18 @@ per-component column caches and is excluded by best-of-N timing.
 from __future__ import annotations
 
 import datetime as dt
-import time
+import functools
 
 from repro.configs.tinysocial import build_dataverse
 from repro.core import algebra as A
 from repro.storage.query import run_query
 
+from ._timing import timed
+
 N_USERS, N_MSGS = 4000, 20000
 SMOKE_USERS, SMOKE_MSGS = 800, 4000
 
-
-def _timed(fn, repeat=5):
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        out = fn()
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+_timed = functools.partial(timed, repeat=5)
 
 
 def approx_equal(a, b, rel=1e-5):

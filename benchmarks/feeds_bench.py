@@ -3,13 +3,13 @@
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.configs.tinysocial import build_dataverse, gen_messages
 from repro.data.dedup import FuzzyJoin
 from repro.data.feeds import BatchAssembler, Feed, SyntheticTokenAdaptor
+
+from ._timing import stopwatch
 
 
 def run(smoke: bool = False) -> list:
@@ -37,10 +37,10 @@ def run(smoke: bool = False) -> list:
     feed = Feed("ingest", adaptor=ListAdaptor(),
                 udfs=[lambda r: r if r["author-id"] != 13 else None],
                 store=lambda rs: [msgs_ds.insert(r) for r in rs])
-    t0 = time.perf_counter()
-    while feed.pump(256):
-        pass
-    dt = time.perf_counter() - t0
+    with stopwatch() as sw:
+        while feed.pump(256):
+            pass
+    dt = sw.seconds
     rows.append({"bench": "feed_ingest", "us_per_call": dt / n_ingest * 1e6,
                  "derived": f"{len(msgs_ds)} stored (author 13 filtered), "
                             f"{n_ingest / dt:.0f} rec/s"})
@@ -51,12 +51,12 @@ def run(smoke: bool = False) -> list:
     eval_sink = BatchAssembler(8)
     train = Feed("train", source_joint=primary.joint, store=train_sink)
     evalf = Feed("eval", source_joint=primary.joint, store=eval_sink)
-    t0 = time.perf_counter()
-    for _ in range(8):
-        primary.pump(64)
-        train.pump(64)
-        evalf.pump(64)
-    dt = time.perf_counter() - t0
+    with stopwatch() as sw:
+        for _ in range(8):
+            primary.pump(64)
+            train.pump(64)
+            evalf.pump(64)
+    dt = sw.seconds
     nb = 0
     while train_sink.take() is not None:
         nb += 1
@@ -77,9 +77,9 @@ def run(smoke: bool = False) -> list:
             near.discard(next(iter(near)))
             docs.append((1000 + i, near))
     fj = FuzzyJoin(threshold=0.5, num_hashes=64, bands=16)
-    t0 = time.perf_counter()
-    pairs, stats = fj.run(docs)
-    dt = time.perf_counter() - t0
+    with stopwatch() as sw:
+        pairs, stats = fj.run(docs)
+    dt = sw.seconds
     n = len(docs)
     rows.append({"bench": "fuzzy_join_dedup", "us_per_call": dt * 1e6,
                  "derived": f"{stats['pairs']} dup pairs; candidates "

@@ -27,7 +27,6 @@ from __future__ import annotations
 import argparse
 import datetime as dt
 import sys
-import time
 
 import numpy as np
 
@@ -41,13 +40,7 @@ N_USERS, N_MSGS = 4000, 12000
 SMOKE_USERS, SMOKE_MSGS = 400, 1200
 
 
-def _timed(fn, repeat=3):
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        out = fn()
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+from ._timing import stopwatch, timed as _timed
 
 
 def _canon(rows):
@@ -241,13 +234,13 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="small dataset, fewer repeats (CI gate)")
     args = p.parse_args()
-    t0 = time.time()
-    out = run(smoke=args.smoke)
+    with stopwatch() as sw:
+        out = run(smoke=args.smoke)
     print("name,us_per_call,us_columnar,derived")
     for r in out:
         print(f"{r['bench']},{r['us_per_call']:.1f},"
               f"{r['us_columnar']:.1f},{r['derived']}")
-    print(f"# index_bench done in {time.time() - t0:.1f}s "
+    print(f"# index_bench done in {sw.seconds:.1f}s "
           f"({'smoke' if args.smoke else 'full'})", file=sys.stderr)
 
 

@@ -27,7 +27,6 @@ from __future__ import annotations
 import argparse
 import datetime as dt
 import sys
-import time
 
 from repro.configs.tinysocial import gen_messages, message_type
 from repro.core import algebra as A
@@ -35,6 +34,8 @@ from repro.core.lsm import TieredMergePolicy
 from repro.data.feeds import DatasetSink, Feed, SocketAdaptor
 from repro.storage.dataset import PartitionedDataset
 from repro.storage.query import run_query
+
+from ._timing import stopwatch
 
 N_MSGS, N_USERS = 40000, 4000
 SMOKE_MSGS, SMOKE_USERS = 3000, 300
@@ -86,29 +87,29 @@ def run_pipeline(columnar: bool, msgs, parts: int = 4,
                 ds.insert(r)
     feed = Feed("ingest", adaptor=sock, store=store)
 
-    t0 = time.perf_counter()
-    while feed.pump(PUMP):
-        pass
-    if columnar:
-        store.flush()           # tail micro-batch
-    for part in ds.partitions:  # end-of-stream: flush memtables
-        part.primary.flush()
-    t_ingest = time.perf_counter() - t0
+    with stopwatch() as sw_ingest:
+        while feed.pump(PUMP):
+            pass
+        if columnar:
+            store.flush()       # tail micro-batch
+        for part in ds.partitions:  # end-of-stream: flush memtables
+            part.primary.flush()
+    t_ingest = sw_ingest.seconds
 
-    t1 = time.perf_counter()    # tiered backstop: collapse each partition
-    for part in ds.partitions:
-        valid = [c for c in part.primary.components if c.valid]
-        if len(valid) >= 2:
-            part.primary.merge(valid)
-    t_merge = time.perf_counter() - t1
+    with stopwatch() as sw_merge:  # tiered backstop: collapse partitions
+        for part in ds.partitions:
+            valid = [c for c in part.primary.components if c.valid]
+            if len(valid) >= 2:
+                part.primary.merge(valid)
+    t_merge = sw_merge.seconds
 
     plans = _scan_plans()
-    t2 = time.perf_counter()
-    rows = []
-    for _ in range(scan_rounds):
-        rows = [run_query(p, {"M": ds}, vectorize=columnar)[0][0]
-                for p in plans]
-    t_scan = time.perf_counter() - t2
+    with stopwatch() as sw_scan:
+        rows = []
+        for _ in range(scan_rounds):
+            rows = [run_query(p, {"M": ds}, vectorize=columnar)[0][0]
+                    for p in plans]
+    t_scan = sw_scan.seconds
     return ds, rows, {"ingest": t_ingest, "merge": t_merge, "scan": t_scan,
                       "total": t_ingest + t_merge + t_scan}
 
@@ -164,13 +165,13 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="small dataset, no speedup assertion (CI gate)")
     args = p.parse_args()
-    t0 = time.time()
-    out = run(smoke=args.smoke)
+    with stopwatch() as sw:
+        out = run(smoke=args.smoke)
     print("name,rows_per_sec,merge_ms,scan_stage_ms,total_s,derived")
     for r in out:
         print(f"{r['bench']},{r['rows_per_sec']:.0f},{r['merge_ms']:.1f},"
               f"{r['scan_stage_ms']:.1f},{r['total_s']:.2f},{r['derived']}")
-    print(f"# ingest_bench done in {time.time() - t0:.1f}s "
+    print(f"# ingest_bench done in {sw.seconds:.1f}s "
           f"({'smoke' if args.smoke else 'full'})", file=sys.stderr)
 
 

@@ -1,6 +1,7 @@
 """Benchmark aggregator: one module per paper table + substrate benches.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3] [--smoke]
+                                               [--json out.json]
 
 ``--smoke`` drives the five CI smoke benches (columnar / index / ingest /
 fuzzy / feeds) at reduced sizes with one combined exit code — this is
@@ -10,6 +11,19 @@ assertions (engine equivalence, no silent index/fuzzy fallback, zero
 kernel retraces on repeated queries), so a nonzero exit means a real
 regression, not a slow machine.
 
+``--json out.json`` additionally writes a machine-readable report:
+
+    {"schema_version": 1,
+     "smoke": true,
+     "benches": {"<bench>": {"us_per_call": ..., "module": "columnar",
+                             ...bench-specific fields...}, ...},
+    "modules": {"<module>": {"seconds": ...}},
+     "metrics": {<obs metric snapshot taken after all benches ran>},
+     "failures": ["<module>: <error>", ...]}
+
+CI archives this file per run; ``scripts/verify.sh`` asserts it parses
+and contains all five smoke benches.
+
 Prints ``name,us_per_call,derived`` CSV (plus table-specific columns).
 """
 
@@ -17,10 +31,15 @@ from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
-import time
+
+from repro import obs
+
+from ._timing import stopwatch
 
 SMOKE_MODULES = ("columnar", "index", "ingest", "fuzzy", "feeds")
+JSON_SCHEMA_VERSION = 1
 
 
 def main() -> None:
@@ -29,6 +48,9 @@ def main() -> None:
     p.add_argument("--smoke", action="store_true",
                    help="run the five CI smoke benches (reduced sizes, "
                         "one exit code)")
+    p.add_argument("--json", default="", metavar="PATH",
+                   help="write a structured JSON report (bench rows + "
+                        "obs metric snapshot) to PATH")
     args = p.parse_args()
 
     from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
@@ -48,20 +70,22 @@ def main() -> None:
     if args.smoke:
         modules = {k: modules[k] for k in SMOKE_MODULES}
     print("name,us_per_call,derived")
-    failures = 0
+    report = {"schema_version": JSON_SCHEMA_VERSION, "smoke": args.smoke,
+              "benches": {}, "modules": {}, "metrics": {}, "failures": []}
     for name, mod in modules.items():
         if args.only and args.only not in name:
             continue
-        t0 = time.time()
         kwargs = {}
         if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
             kwargs["smoke"] = True
         try:
-            rows = mod.run(**kwargs)
+            with stopwatch() as sw:
+                rows = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             print(f"{name},FAILED,{type(e).__name__}: {e}")
-            failures += 1
+            report["failures"].append(f"{name}: {type(e).__name__}: {e}")
             continue
+        report["modules"][name] = {"seconds": sw.seconds}
         for r in rows:
             main_t = r.get("us_per_call", "")
             extra = r.get("derived", "")
@@ -70,9 +94,17 @@ def main() -> None:
                     extra += f" | {k}={v}"
             t_str = f"{main_t:.1f}" if isinstance(main_t, float) else main_t
             print(f"{r['bench']},{t_str},{extra}")
-        print(f"# {name} done in {time.time() - t0:.1f}s"
+            report["benches"][r["bench"]] = dict(
+                {k: v for k, v in r.items() if k != "bench"}, module=name)
+        print(f"# {name} done in {sw.seconds:.1f}s"
               f"{' (smoke)' if args.smoke else ''}", file=sys.stderr)
-    sys.exit(1 if failures else 0)
+    if args.json:
+        report["metrics"] = obs.snapshot()
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"# json report -> {args.json}", file=sys.stderr)
+    sys.exit(1 if report["failures"] else 0)
 
 
 if __name__ == "__main__":

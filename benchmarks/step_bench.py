@@ -4,8 +4,6 @@ queries, feeds, AND the training/serving steps) + kernel interpret checks."""
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -16,18 +14,12 @@ from repro.models.layers import init_params
 from repro.optim.adamw import OptimizerConfig
 from repro.training.train_step import init_train_state, make_train_step
 
+from ._timing import timed
+
 
 def _bench(fn, *args, warmup=2, repeat=3):
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return timed(lambda: fn(*args), repeat=repeat, warmup=warmup,
+                 block=jax.block_until_ready)[1]
 
 
 def run() -> list:

@@ -14,7 +14,6 @@ cluster; on one host we reproduce the paper's *structural* claims instead:
 from __future__ import annotations
 
 import datetime as dt
-import time
 
 from repro.configs.tinysocial import build_dataverse
 from repro.core import algebra as A
@@ -24,13 +23,7 @@ from repro.storage.query import run_query
 N_USERS, N_MSGS = 4000, 12000
 
 
-def _timed(fn, repeat=3):
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        out = fn()
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+from ._timing import timed as _timed
 
 
 def run() -> list:

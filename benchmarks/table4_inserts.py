@@ -14,9 +14,9 @@ cost stays amortized (no in-place index updates).
 
 from __future__ import annotations
 
-import time
-
 from repro.configs.tinysocial import build_dataverse, gen_messages
+
+from ._timing import stopwatch
 
 
 def run() -> list:
@@ -26,14 +26,13 @@ def run() -> list:
         _, ds = build_dataverse(50, 0, num_partitions=4,
                                 flush_threshold=256)
         msgs = ds["MugshotMessages"]
-        t0 = time.perf_counter()
-        for i in range(0, 2000, batch):
-            msgs.insert_batch(recs[i:i + batch])
-        dt = time.perf_counter() - t0
+        with stopwatch() as sw:
+            for i in range(0, 2000, batch):
+                msgs.insert_batch(recs[i:i + batch])
         stats = [p.primary.stats for p in msgs.partitions]
         rows.append({
             "bench": f"table4_insert_b{batch}",
-            "us_per_call": dt / 2000 * 1e6,
+            "us_per_call": sw.seconds / 2000 * 1e6,
             "derived": f"flushes={sum(s['flushes'] for s in stats)} "
                        f"merges={sum(s['merges'] for s in stats)}",
         })

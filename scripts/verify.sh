@@ -13,7 +13,10 @@
 #      fuzzy plan silently falling back to the row engine, a candidate
 #      read regressing onto a python walk (the CSR postings must beat
 #      the legacy secondary-LSM walk), a kernel retrace on repeated
-#      queries, or an ingest pipeline divergence.
+#      queries, or an ingest pipeline divergence;
+#   4. the structured bench report (`--json bench_smoke.json`) parses,
+#      carries schema_version 1, and contains rows from all five smoke
+#      modules — CI uploads the file as a run artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,6 +35,25 @@ fi
 export PYTHONHASHSEED=0
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
-# Smoke-bench matrix: one invocation, one exit code (see run.py --smoke).
+# Smoke-bench matrix: one invocation, one exit code (see run.py --smoke),
+# plus a structured JSON report CI keeps as an artifact.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --smoke
+    python -m benchmarks.run --smoke --json bench_smoke.json
+
+# The report must parse, be schema-stable, and cover all five smoke
+# modules — a bench that crashed or was silently skipped fails here.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+
+report = json.load(open("bench_smoke.json"))
+assert report["schema_version"] == 1, report["schema_version"]
+assert report["smoke"] is True
+assert not report["failures"], report["failures"]
+from benchmarks.run import SMOKE_MODULES
+ran = {row["module"] for row in report["benches"].values()}
+missing = set(SMOKE_MODULES) - ran
+assert not missing, f"smoke benches missing from report: {sorted(missing)}"
+assert report["metrics"], "obs metric snapshot is empty"
+print(f"verify: bench_smoke.json ok "
+      f"({len(report['benches'])} benches, {len(report['metrics'])} metrics)")
+EOF

@@ -48,6 +48,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.algebra import Connector, PhysicalOp
+from .. import obs as _obs
 from . import operators as O
 from .batch import ColumnBatch
 
@@ -90,26 +91,41 @@ _INDEX_SEARCHES = {"SECONDARY_INDEX_SEARCH", "SPATIAL_INDEX_SEARCH",
                    "KEYWORD_INDEX_SEARCH", "NGRAM_INDEX_SEARCH"}
 
 
+def _decline(ex: Any, op: PhysicalOp, reason: str) -> None:
+    """Record why this subplan stays on the row engine: always into
+    ``ExecStats.fallback_reasons`` (queryable by the differential
+    harness), and per-node for ``explain_analyze`` when active."""
+    ex.stats.fell_back(op.kind, reason)
+    reasons = getattr(ex, "_fallback_reasons", None)
+    if reasons is not None:
+        reasons[id(op)] = reason
+
+
 def try_lower(op: PhysicalOp, ex: Any) -> Optional[Callable[[], list]]:
     """Compile ``op``'s subtree to a columnar pipeline, or None.  The
     returned callable yields the row engine's row Parts up to row order
     inside unordered operators (grouped/joined row order may be permuted;
-    sorts, top-k and limits are order-exact)."""
+    sorts, top-k and limits are order-exact).  A None return always
+    leaves its reason in ``ex.stats.fallback_reasons``."""
     if not _profitable(op):
+        _decline(ex, op, "not profitable (no vectorized compute)")
         return None
     if op.kind == "HYBRID_HASH_JOIN":
         # a join at the pipeline root materializes its full output as row
         # dicts at the boundary, which costs more than the row engine's
         # dict merge; joins vectorize only under a reducing operator
         # (aggregate/group/top-k), where the output never widens to rows
+        _decline(ex, op, "join at pipeline root")
         return None
     try:
         node = _compile(op, ex, None)
-    except Unsupported:
+    except Unsupported as e:
+        _decline(ex, op, str(e))
         return None
 
     def run() -> list:
-        return [b.to_rows() for b in node()]
+        with _obs.span("columnar." + op.kind):
+            return [b.to_rows() for b in node()]
     return run
 
 
@@ -192,7 +208,7 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
     if k == "STREAM_SELECT":
         ranges = attrs.get("ranges") or {}
         if not ranges:
-            raise Unsupported("no sargable ranges")
+            raise Unsupported("opaque predicate (no sargable ranges)")
         pred = attrs.get("pred")
         residual = not attrs.get("ranges_exact", False)
         child_needed = None if residual else (
@@ -258,6 +274,11 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
                     out.append(ColumnBatch.from_rows([row]))
                 ex.stats.vectorized("STREAM_SELECT", survivors)
                 ex.stats.vectorized(k, len(out))
+                analysis = getattr(ex, "analysis", None)
+                if analysis is not None:
+                    analysis[id(child_op)] = {"op": "STREAM_SELECT",
+                                              "mode": "fused",
+                                              "rows_out": survivors}
                 out = _apply_conn(conn, out, ex, p)
                 return out
             return run_fused_agg
@@ -472,7 +493,9 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
         validate, lookup = None, op
     sort = _chain_child(lookup, "SORT_PK")
     search = sort.children[0] if len(sort.children) == 1 else None
+    tocc = None
     if search is not None and search.kind == "T_OCCURRENCE":
+        tocc = search
         search = _chain_child(search, "NGRAM_INDEX_SEARCH")
     if search is None or search.kind not in _INDEX_SEARCHES \
             or sort.connectors[0].name != "OneToOne":
@@ -575,5 +598,17 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
         stat("PRIMARY_INDEX_LOOKUP", n_found)
         if validate is not None:
             stat("POST_VALIDATE_SELECT", n_valid)
+        analysis = getattr(ex, "analysis", None)
+        if analysis is not None:
+            # per-stage cardinalities for explain_analyze: the chain runs
+            # as one fused closure, so its inner ops never see execute_op
+            entries = [(search, n_cand), (sort, n_cand), (lookup, n_found)]
+            if tocc is not None:
+                entries.insert(1, (tocc, n_cand))
+            if validate is not None:
+                entries.append((validate, n_valid))
+            for chain_op, n in entries:
+                analysis[id(chain_op)] = {"op": chain_op.kind,
+                                          "mode": "fused", "rows_out": n}
         return out
     return run_index_path

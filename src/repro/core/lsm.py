@@ -35,16 +35,58 @@ from __future__ import annotations
 
 import bisect
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from ..columnar.batch import ColumnBatch
 from ..columnar.schema import ColumnSchema
 
 __all__ = ["Component", "LSMIndex", "TieredMergePolicy", "WALRecord",
-           "TOMBSTONE", "key_array", "recover"]
+           "TOMBSTONE", "key_array", "recover", "component_nbytes"]
+
+# process-wide storage metrics (see obs.__init__ for the name registry);
+# handles resolved once so flush/merge pay dict-free increments
+_FLUSH_S = _obs.histogram("lsm.flush_seconds")
+_MERGE_S = _obs.histogram("lsm.merge_seconds")
+_POSTINGS_S = _obs.histogram("lsm.postings_build_seconds")
+_COMP_ROWS = _obs.histogram("lsm.component_rows")
+_COMP_BYTES = _obs.histogram("lsm.component_bytes")
+_FLUSHES = _obs.counter("lsm.flushes")
+_MERGES = _obs.counter("lsm.merges")
+_ROWS_INGESTED = _obs.counter("lsm.rows_ingested")
+_ROWS_FLUSHED = _obs.counter("lsm.rows_flushed")
+_ROWS_MERGED = _obs.counter("lsm.rows_merged")
+_BYTES_FLUSHED = _obs.counter("lsm.bytes_flushed")
+_BYTES_MERGED = _obs.counter("lsm.bytes_merged")
+_COMPONENTS = _obs.gauge("lsm.components")
+
+
+def _arr_nbytes(a: Optional[np.ndarray]) -> int:
+    if a is None:
+        return 0
+    if a.dtype == object:
+        return 8 * int(a.shape[0])      # pointer-width estimate
+    return int(a.nbytes)
+
+
+def component_nbytes(comp: "Component") -> int:
+    """Estimated storage footprint of one component: column data arrays +
+    validity bitmaps + string dictionaries + key array + tombstone
+    bitmap (row-mode components estimate pointer width per row)."""
+    total = _arr_nbytes(comp.keys) + _arr_nbytes(comp.tomb)
+    if comp.batch is not None:
+        for col in comp.batch.columns.values():
+            total += _arr_nbytes(col.data) + _arr_nbytes(col.valid)
+            if col.values:
+                total += sum(len(v) if isinstance(v, str) else 8
+                             for v in col.values)
+    elif comp._rows is not None:
+        total += 8 * len(comp._rows)
+    return total
 
 
 class _Tombstone:
@@ -189,12 +231,17 @@ class Component:
         if p is not None and p.spec == spec:
             return p
         from ..columnar.postings import FieldPostings
-        if self.batch is not None:
-            p = FieldPostings.from_batch(self.batch, fld, spec, self.size)
-        else:
-            vals = [r.get(fld) if isinstance(r, dict) else None
-                    for r in (self._rows if self._rows is not None else ())]
-            p = FieldPostings.from_values(vals, spec)
+        t0 = time.perf_counter()
+        with _obs.span("lsm.postings_build", field=fld):
+            if self.batch is not None:
+                p = FieldPostings.from_batch(self.batch, fld, spec,
+                                             self.size)
+            else:
+                vals = [r.get(fld) if isinstance(r, dict) else None
+                        for r in (self._rows
+                                  if self._rows is not None else ())]
+                p = FieldPostings.from_values(vals, spec)
+        _POSTINGS_S.observe(time.perf_counter() - t0)
         self.sec_postings[fld] = p
         return p
 
@@ -207,12 +254,16 @@ class Component:
         if p is not None and p.k == k:
             return p
         from ..fuzzy.ngram import GramPostings
-        if self.batch is not None:
-            p = GramPostings.from_batch(self.batch, fld, k, self.size)
-        else:
-            vals = [r.get(fld) if isinstance(r, dict) else None
-                    for r in (self._rows if self._rows is not None else ())]
-            p = GramPostings.from_values(vals, k)
+        t0 = time.perf_counter()
+        with _obs.span("lsm.postings_build", field=fld):
+            if self.batch is not None:
+                p = GramPostings.from_batch(self.batch, fld, k, self.size)
+            else:
+                vals = [r.get(fld) if isinstance(r, dict) else None
+                        for r in (self._rows
+                                  if self._rows is not None else ())]
+                p = GramPostings.from_values(vals, k)
+        _POSTINGS_S.observe(time.perf_counter() - t0)
         self.gram_postings[fld] = p
         return p
 
@@ -335,7 +386,21 @@ class LSMIndex:
         self.ngram_fields = ngram_fields
         self.sec_fields = sec_fields
         self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
-                      "merged_rows": 0}
+                      "merged_rows": 0, "flushed_rows": 0,
+                      "flushed_bytes": 0, "merged_bytes": 0}
+        self._ingest_counted = 0    # inserts+deletes already counted into
+        #                             the process-wide lsm.rows_ingested
+
+    def write_amplification(self) -> float:
+        """(rows flushed + rows re-written by merges) / rows ingested.
+        1.0 means every ingested row was written once and never
+        rewritten; tiered merging pushes it up with every rewrite.  0.0
+        until the first flush."""
+        ingested = self.stats["inserts"] + self.stats["deletes"]
+        if not ingested:
+            return 0.0
+        return (self.stats["flushed_rows"]
+                + self.stats["merged_rows"]) / ingested
 
     # -- update path (record-level "transactions": WAL then apply) ---------
     def insert(self, key: Any, row: Any) -> None:
@@ -389,17 +454,36 @@ class LSMIndex:
         (paper §4.4)."""
         if not self.memtable:
             return None
-        keys, vals = _sorted_kv(self.memtable)
-        comp = Component.build(keys, vals, schema=self.schema,
-                               columnar=self.columnar,
-                               ngram_fields=self._ngram(),
-                               sec_fields=self._sec())
-        self.components.insert(0, comp)        # shadow: present but invalid
-        if crash_before_validity:
-            return comp
-        comp.valid = True                      # atomic install
-        self.memtable = {}
-        self.stats["flushes"] += 1
+        t0 = time.perf_counter()
+        with _obs.span("lsm.flush") as sp:
+            keys, vals = _sorted_kv(self.memtable)
+            comp = Component.build(keys, vals, schema=self.schema,
+                                   columnar=self.columnar,
+                                   ngram_fields=self._ngram(),
+                                   sec_fields=self._sec())
+            self.components.insert(0, comp)    # shadow: present but invalid
+            if crash_before_validity:
+                return comp
+            comp.valid = True                  # atomic install
+            self.memtable = {}
+            self.stats["flushes"] += 1
+            nbytes = component_nbytes(comp)
+            self.stats["flushed_rows"] += comp.size
+            self.stats["flushed_bytes"] += nbytes
+            sp.set("rows", comp.size)
+            sp.set("bytes", nbytes)
+        _FLUSH_S.observe(time.perf_counter() - t0)
+        _FLUSHES.inc()
+        _ROWS_FLUSHED.inc(comp.size)
+        _BYTES_FLUSHED.inc(nbytes)
+        _COMP_ROWS.observe(comp.size)
+        _COMP_BYTES.observe(nbytes)
+        # ingest accounting at flush granularity (never per-row): the
+        # delta of this index's insert+delete counters since last flush
+        ingested = self.stats["inserts"] + self.stats["deletes"]
+        _ROWS_INGESTED.inc(ingested - self._ingest_counted)
+        self._ingest_counted = ingested
+        _COMPONENTS.set(sum(1 for c in self.components if c.valid))
         self._maybe_merge()
         return comp
 
@@ -421,39 +505,54 @@ class LSMIndex:
         component (then they collapse).  Row-mode inputs (secondary
         indexes, forced row path) merge via the classic dict pass."""
         comps = list(comps)                    # newest -> oldest
-        includes_oldest = self.components and comps[-1] is [
-            c for c in self.components if c.valid][-1]
-        if self.columnar is not False \
-                and all(c.batch is not None for c in comps):
-            merged, keys, tomb = ColumnBatch.merge_sorted(
-                [c.batch for c in comps], [c.keys for c in comps],
-                [c.tomb for c in comps],
-                drop_tombstones=bool(includes_oldest))
-            out = Component(keys=keys, batch=merged, tomb=tomb)
-            # postings (ngram + secondary CSR) ride the merge too
-            out._build_postings(self._ngram(), self._sec())
-        else:
-            seen: Dict[Any, Any] = {}
-            for c in reversed(comps):          # oldest first; newer overwrite
-                for k, r in zip(c.keys, c.rows):
-                    seen[k] = r
-            if includes_oldest:
-                seen = {k: r for k, r in seen.items() if r is not TOMBSTONE}
-            keys, vals = _sorted_kv(seen)
-            out = Component.build(keys, vals, schema=self.schema,
-                                  columnar=self.columnar,
-                                  ngram_fields=self._ngram(),
-                                  sec_fields=self._sec())
-        ids = {c.comp_id for c in comps}
-        pos = min(i for i, c in enumerate(self.components) if c.comp_id in ids)
-        self.components.insert(pos + 0, out)   # shadow next to its inputs
-        if crash_before_validity:
-            return out
-        out.valid = True                       # atomic swap: install + retire
-        self.components = [c for c in self.components
-                           if c.comp_id not in ids]
-        self.stats["merges"] += 1
-        self.stats["merged_rows"] += out.size
+        t0 = time.perf_counter()
+        with _obs.span("lsm.merge", components=len(comps)) as sp:
+            includes_oldest = self.components and comps[-1] is [
+                c for c in self.components if c.valid][-1]
+            if self.columnar is not False \
+                    and all(c.batch is not None for c in comps):
+                merged, keys, tomb = ColumnBatch.merge_sorted(
+                    [c.batch for c in comps], [c.keys for c in comps],
+                    [c.tomb for c in comps],
+                    drop_tombstones=bool(includes_oldest))
+                out = Component(keys=keys, batch=merged, tomb=tomb)
+                # postings (ngram + secondary CSR) ride the merge too
+                out._build_postings(self._ngram(), self._sec())
+            else:
+                seen: Dict[Any, Any] = {}
+                for c in reversed(comps):      # oldest first; newer overwrite
+                    for k, r in zip(c.keys, c.rows):
+                        seen[k] = r
+                if includes_oldest:
+                    seen = {k: r for k, r in seen.items()
+                            if r is not TOMBSTONE}
+                keys, vals = _sorted_kv(seen)
+                out = Component.build(keys, vals, schema=self.schema,
+                                      columnar=self.columnar,
+                                      ngram_fields=self._ngram(),
+                                      sec_fields=self._sec())
+            ids = {c.comp_id for c in comps}
+            pos = min(i for i, c in enumerate(self.components)
+                      if c.comp_id in ids)
+            self.components.insert(pos + 0, out)  # shadow next to inputs
+            if crash_before_validity:
+                return out
+            out.valid = True                   # atomic swap: install + retire
+            self.components = [c for c in self.components
+                               if c.comp_id not in ids]
+            self.stats["merges"] += 1
+            self.stats["merged_rows"] += out.size
+            nbytes = component_nbytes(out)
+            self.stats["merged_bytes"] += nbytes
+            sp.set("rows", out.size)
+            sp.set("bytes", nbytes)
+        _MERGE_S.observe(time.perf_counter() - t0)
+        _MERGES.inc()
+        _ROWS_MERGED.inc(out.size)
+        _BYTES_MERGED.inc(nbytes)
+        _COMP_ROWS.observe(out.size)
+        _COMP_BYTES.observe(nbytes)
+        _COMPONENTS.set(sum(1 for c in self.components if c.valid))
         return out
 
     # -- read path ----------------------------------------------------------

@@ -26,10 +26,13 @@ from __future__ import annotations
 
 import collections
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
+
+from .. import obs as _obs
 
 __all__ = ["Adaptor", "SyntheticTokenAdaptor", "FileAdaptor", "SocketAdaptor",
            "FeedJoint", "Feed", "RedundantIntake", "BatchAssembler",
@@ -159,17 +162,36 @@ class FeedJoint:
     """A tap on a feed's dataflow: buffers records and lets any number of
     subscribers consume at their own pace (bounded replay window)."""
 
-    def __init__(self, window: int = 4096):
+    def __init__(self, window: int = 4096, name: Optional[str] = None):
         self.window = window
+        self.name = name
         self.buffer: collections.deque = collections.deque()
         self.base = 0                      # cursor of buffer[0]
         self.subscribers: Dict[str, int] = {}
+        self.published = 0
+        self._first_publish_t: Optional[float] = None
+        self._last_publish_t: Optional[float] = None
 
     @property
     def head(self) -> int:
         return self.base + len(self.buffer)
 
+    def rate(self) -> float:
+        """Ingest rate in records/sec over the joint's publish lifetime
+        (first publish to last publish); 0.0 until two publish instants."""
+        if self._first_publish_t is None or self._last_publish_t is None:
+            return 0.0
+        elapsed = self._last_publish_t - self._first_publish_t
+        return self.published / elapsed if elapsed > 0 else 0.0
+
     def publish(self, records: Sequence[Any]) -> None:
+        now = time.perf_counter()
+        if self._first_publish_t is None:
+            self._first_publish_t = now
+        self._last_publish_t = now
+        self.published += len(records)
+        _obs.counter(f"feed.joint.{self.name or 'joint'}.published").inc(
+            len(records))
         self.buffer.extend(records)
         # retire records every subscriber has consumed, bounded by window
         floor = min(self.subscribers.values(), default=self.head)
@@ -191,6 +213,8 @@ class FeedJoint:
         start = cur - self.base
         out = list(itertools.islice(self.buffer, start, start + n))
         self.subscribers[name] = cur + len(out)
+        _obs.gauge(f"feed.joint.{self.name or 'joint'}.lag.{name}").set(
+            self.head - self.subscribers[name])
         return out
 
 
@@ -213,22 +237,28 @@ class Feed:
     def __post_init__(self):
         assert (self.adaptor is None) != (self.source_joint is None), \
             "exactly one of adaptor / source_joint"
+        if self.joint.name is None:
+            self.joint.name = self.name
         if self.source_joint is not None:
             self.source_joint.subscribe(self.name)
 
     def pump(self, n: int) -> int:
         """Run one intake->compute->store cycle of up to n records."""
-        if self.adaptor is not None:
-            recs = self.adaptor.next_batch(n)
-        else:
-            recs = self.source_joint.consume(self.name, n)
-        for udf in self.udfs:
-            recs = [udf(r) for r in recs]
-            recs = [r for r in recs if r is not None]    # UDFs may filter
-        self.joint.publish(recs)
-        if self.store is not None:
-            self.store(recs)
-        self.cursor += len(recs)
+        with _obs.span("feed.pump." + self.name) as sp:
+            if self.adaptor is not None:
+                recs = self.adaptor.next_batch(n)
+            else:
+                recs = self.source_joint.consume(self.name, n)
+            for udf in self.udfs:
+                recs = [udf(r) for r in recs]
+                recs = [r for r in recs if r is not None]  # UDFs may filter
+            self.joint.publish(recs)
+            if self.store is not None:
+                self.store(recs)
+            self.cursor += len(recs)
+            sp.set("records", len(recs))
+        _obs.counter(f"feed.{self.name}.records").inc(len(recs))
+        _obs.histogram(f"feed.{self.name}.batch_records").observe(len(recs))
         return len(recs)
 
     # -- checkpointable state (exact-resume deliverable) -------------------
@@ -261,6 +291,13 @@ class DatasetSink:
         self.batch_size = int(batch_size)
         self.backlog: List[Any] = []
         self.stats = {"batches": 0, "records": 0}
+        self._ds_name = getattr(dataset, "name", "dataset")
+
+    def _record_batch(self, n: int) -> None:
+        self.stats["batches"] += 1
+        self.stats["records"] += n
+        _obs.counter(f"feed.sink.{self._ds_name}.records").inc(n)
+        _obs.histogram(f"feed.sink.{self._ds_name}.batch_records").observe(n)
 
     def __call__(self, records: Sequence[Any]) -> None:
         self.backlog.extend(records)
@@ -268,8 +305,9 @@ class DatasetSink:
             chunk = self.backlog[:self.batch_size]
             self.backlog = self.backlog[self.batch_size:]
             self.dataset.insert_batch(chunk)
-            self.stats["batches"] += 1
-            self.stats["records"] += len(chunk)
+            self._record_batch(len(chunk))
+        _obs.gauge(f"feed.sink.{self._ds_name}.backlog").set(
+            len(self.backlog))
 
     def flush(self) -> int:
         """Deliver any buffered tail; returns the number of records
@@ -278,8 +316,8 @@ class DatasetSink:
         if n:
             self.dataset.insert_batch(self.backlog)
             self.backlog = []
-            self.stats["batches"] += 1
-            self.stats["records"] += n
+            self._record_batch(n)
+        _obs.gauge(f"feed.sink.{self._ds_name}.backlog").set(0)
         return n
 
 

@@ -45,6 +45,8 @@ from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 
 from .ops import use_pallas
+from ..obs import record_dispatch as _record_dispatch
+from ..obs import record_retrace as _record_retrace
 # the canonical pow2 helper lives with the padded-column storage it
 # shapes (no cycle: columnar/__init__ pulls batch+schema only, and
 # batch.py imports this module lazily)
@@ -95,6 +97,7 @@ def _prep_bounds(data: np.ndarray, lo: Any, hi: Any
 @jax.jit
 def _mask_core(datas, valids, los, his):
     _TRACES["n"] += 1
+    _record_retrace()
     m = None
     for x, v, lo, hi in zip(datas, valids, los, his):
         mm = v & (x >= lo) & (x <= hi)
@@ -112,6 +115,7 @@ def _ident(dtype, is_min: bool):
 @jax.jit
 def _agg_core(datas, valids, los, his, agg_datas, agg_valids):
     _TRACES["n"] += 1
+    _record_retrace()
     if datas:
         mask = _mask_core(datas, valids, los, his)
     else:
@@ -165,7 +169,11 @@ def _mask_jnp(preds: Sequence[Pred], n: int) -> np.ndarray:
               max(int(p[0].shape[0]) for p in preds))
     preds = [_pad_pred(p, np2) for p in preds]
     with enable_x64():
-        return np.asarray(_mask_core(*_split_preds(preds)))[:n]
+        out = np.asarray(_mask_core(*_split_preds(preds)))
+    _record_dispatch("range_mask",
+                     h2d=[a for p in preds for a in (p[0], p[1])],
+                     d2h=[out])
+    return out[:n]
 
 
 def _agg_jnp(preds: Sequence[Pred],
@@ -196,6 +204,10 @@ def _agg_jnp(preds: Sequence[Pred],
             datas, valids, los, his,
             tuple(a[0] for a in padded_aggs),
             tuple(a[1] for a in padded_aggs))
+        _record_dispatch(
+            "fused_filter_aggregate",
+            h2d=[a for p in preds for a in (p[0], p[1])]
+                + [a for pa in padded_aggs for a in pa])
         out: Dict[str, Any] = {"count": int(total), "sums": [], "mins": [],
                                "maxs": [], "cnts": []}
         for s, mn, mx, cnt in per_col:
@@ -304,7 +316,9 @@ def _mask_pallas(preds: Sequence[Pred], n: int, *, block_n: int = 512,
         out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
         interpret=interpret,
     )(vals, lo, hi)
-    return np.asarray(out)[0, :n] > 0.5
+    out = np.asarray(out)
+    _record_dispatch("range_mask", h2d=[vals, lo, hi], d2h=[out])
+    return out[0, :n] > 0.5
 
 
 def _agg_pallas(preds: Sequence[Pred],
@@ -336,6 +350,8 @@ def _agg_pallas(preds: Sequence[Pred],
         interpret=interpret,
     )(vals, lo, hi, a, av)
     out = np.asarray(out, dtype=np.float64)
+    _record_dispatch("fused_filter_aggregate",
+                     h2d=[vals, lo, hi, a, av], d2h=[out])
     m = len(aggs)
     cnts = [int(round(c)) for c in out[3, :m]]
     return {
@@ -358,6 +374,7 @@ def _intersect_core(keys, cands):
     """Sorted merge via binary search: for each candidate, its insertion
     point in ``keys``; a hit scatters into the position bitmap."""
     _TRACES["n"] += 1
+    _record_retrace()
     n = keys.shape[0]
     pos = jnp.searchsorted(keys, cands)
     posc = jnp.clip(pos, 0, n - 1)
@@ -393,9 +410,11 @@ def _pow2_pad(arr: np.ndarray) -> np.ndarray:
 
 def _intersect_jnp(keys: np.ndarray, cands: np.ndarray) -> np.ndarray:
     n = keys.shape[0]
+    kp, cp = _pow2_pad(keys), _pow2_pad(cands)
     with enable_x64():
-        mask = np.asarray(_intersect_core(jnp.asarray(_pow2_pad(keys)),
-                                          jnp.asarray(_pow2_pad(cands))))
+        mask = np.asarray(_intersect_core(jnp.asarray(kp),
+                                          jnp.asarray(cp)))
+    _record_dispatch("sorted_intersect_mask", h2d=[kp, cp], d2h=[mask])
     return mask[:n]
 
 
@@ -438,7 +457,9 @@ def _intersect_pallas(keys: np.ndarray, cands: np.ndarray, n: int,
         out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
         interpret=interpret,
     )(vals, cv)
-    return np.asarray(out)[0, :n] > 0.5
+    out = np.asarray(out)
+    _record_dispatch("sorted_intersect_mask", h2d=[vals, cv], d2h=[out])
+    return out[0, :n] > 0.5
 
 
 def _f32_exact_ints(arr: np.ndarray) -> bool:

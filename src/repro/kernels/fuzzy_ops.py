@@ -38,6 +38,8 @@ from jax.experimental import pallas as pl
 
 from .ops import use_pallas
 from .columnar_ops import _TRACES
+from ..obs import record_dispatch as _record_dispatch
+from ..obs import record_retrace as _record_retrace
 from ..columnar.batch import pow2_len as _pow2_len
 
 __all__ = ["fnv1a_hash", "t_occurrence_mask", "edit_distances",
@@ -87,6 +89,7 @@ def _tocc_core(pos, thr, np2):
     """Scatter-count gram hits per row position; padding positions point
     at the extra slot ``np2`` so they never count."""
     _TRACES["n"] += 1
+    _record_retrace()
     cnt = jnp.zeros(np2 + 1, dtype=jnp.int32).at[pos].add(1)
     return cnt[:np2] >= thr
 
@@ -100,6 +103,7 @@ def _tocc_jnp(positions: np.ndarray, n: int, threshold: int) -> np.ndarray:
     with enable_x64():
         mask = np.asarray(_tocc_core(jnp.asarray(pos),
                                      jnp.asarray(threshold, jnp.int32), np2))
+    _record_dispatch("t_occurrence_mask", h2d=[pos], d2h=[mask])
     return mask[:n]
 
 
@@ -148,7 +152,9 @@ def _tocc_pallas(positions: np.ndarray, n: int, threshold: int,
         out_shape=jax.ShapeDtypeStruct((8, np_pad), jnp.float32),
         interpret=interpret,
     )(vals, pv, tv)
-    return np.asarray(out)[0, :n] > 0.5
+    out = np.asarray(out)
+    _record_dispatch("t_occurrence_mask", h2d=[vals, pv, tv], d2h=[out])
+    return out[0, :n] > 0.5
 
 
 def t_occurrence_mask(positions: np.ndarray, n: int, threshold: int,
@@ -216,6 +222,7 @@ def _ed_core(cand, lens, q, qlen, d):
     the <= d decision exact and the final value equal to min(ed, d+1).
     """
     _TRACES["n"] += 1
+    _record_retrace()
     B, L = cand.shape
     M = q.shape[0]
     cap = (d + 1).astype(jnp.int64)
@@ -265,6 +272,7 @@ def _ed_jnp(strings: Sequence[str], query: str, d: int) -> np.ndarray:
         out = np.asarray(_ed_core(
             jnp.asarray(cand), jnp.asarray(lpad), jnp.asarray(q),
             jnp.asarray(len(query), jnp.int64), jnp.asarray(d, jnp.int64)))
+    _record_dispatch("edit_distances", h2d=[cand, lpad, q], d2h=[out])
     return out[:B]
 
 
@@ -322,7 +330,9 @@ def _ed_pallas(strings: Sequence[str], query: str, d: int,
         out_shape=jax.ShapeDtypeStruct((8, bp), jnp.float32),
         interpret=interpret,
     )(cand, lv, qv)
-    return np.asarray(out)[0, :B].astype(np.int64)
+    out = np.asarray(out)
+    _record_dispatch("edit_distances", h2d=[cand, lv, qv], d2h=[out])
+    return out[0, :B].astype(np.int64)
 
 
 def edit_distances(strings: Sequence[str], query: str, d: int,
@@ -356,6 +366,7 @@ def _inter_core(a, alens, b):
     """Per-pair |A ∩ B| via a vmapped binary search of each A element in
     the (sorted, sentinel-padded) B row."""
     _TRACES["n"] += 1
+    _record_retrace()
     s1 = a.shape[1]
 
     def row(ar, al, br):
@@ -369,9 +380,12 @@ def _inter_core(a, alens, b):
 
 def _inter_jnp(a_mat, alens, b_mat) -> np.ndarray:
     with enable_x64():
-        return np.asarray(_inter_core(jnp.asarray(a_mat),
-                                      jnp.asarray(alens),
-                                      jnp.asarray(b_mat)))
+        out = np.asarray(_inter_core(jnp.asarray(a_mat),
+                                     jnp.asarray(alens),
+                                     jnp.asarray(b_mat)))
+    _record_dispatch("set_intersect_counts",
+                     h2d=[a_mat, alens, b_mat], d2h=[out])
+    return out
 
 
 def _inter_kernel(a_ref, l_ref, b_ref, o_ref, *, s1):
@@ -409,7 +423,9 @@ def _inter_pallas(a_mat, alens, b_mat, *, block_p: int = 8,
         out_shape=jax.ShapeDtypeStruct((8, pp), jnp.float32),
         interpret=interpret,
     )(av, lv, bv)
-    return np.asarray(out)[0, :P].astype(np.int64)
+    out = np.asarray(out)
+    _record_dispatch("set_intersect_counts", h2d=[av, lv, bv], d2h=[out])
+    return out[0, :P].astype(np.int64)
 
 
 _SENTINEL = np.int64(np.iinfo(np.int64).max)
@@ -488,6 +504,7 @@ def _popcount_inter_core(bits, ai, bi):
     on every backend, TPU included, so this core needs no separate
     Pallas variant)."""
     _TRACES["n"] += 1
+    _record_retrace()
     return jnp.sum(jax.lax.population_count(bits[ai] & bits[bi]), axis=1)
 
 
@@ -531,9 +548,11 @@ def bitset_intersect_counts(bits: np.ndarray, ai: np.ndarray,
         bits = np.concatenate(
             [bits, np.zeros((rp - bits.shape[0], bits.shape[1]),
                             dtype=np.uint32)])
-    return np.asarray(_popcount_inter_core(
-        jnp.asarray(bits), jnp.asarray(ai),
-        jnp.asarray(bi)))[:P].astype(np.int64)
+    out = np.asarray(_popcount_inter_core(
+        jnp.asarray(bits), jnp.asarray(ai), jnp.asarray(bi)))
+    _record_dispatch("bitset_intersect_counts",
+                     h2d=[bits, ai, bi], d2h=[out])
+    return out[:P].astype(np.int64)
 
 
 def jaccard_from_counts(inter: np.ndarray, a_sizes: np.ndarray,

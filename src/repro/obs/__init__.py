@@ -1,0 +1,178 @@
+"""Observability layer: span tracer + process-wide metrics registry.
+
+This package is the measurement substrate the perf roadmap asserts
+against (ROADMAP items 1–3): a nested span tracer with Chrome-trace
+export (``tracer``) and a counters/gauges/histograms registry
+(``metrics``), plus the one helper every kernel wrapper calls to account
+dispatches and host<->device transfer bytes (``record_dispatch``).
+
+Tracing is off by default and near-free when off (one module-flag check,
+zero allocations).  Metrics counters are always on — they instrument
+per-call/per-batch paths only, never per-row ones.
+
+Span naming convention (``obs.span(name, **attrs)``):
+
+  exec.<OP_KIND>          one executor operator, row/fallback engine
+                          (storage/query.Executor.execute_op)
+  columnar.<OP_KIND>      one columnar-lowered operator closure
+                          (columnar/lower; the Figure-6 index chain is
+                          one ``columnar.PRIMARY_INDEX_LOOKUP`` /
+                          ``columnar.POST_VALIDATE_SELECT`` span)
+  lsm.flush               one memtable flush (attrs: rows, bytes)
+  lsm.merge               one k-way component merge (attrs: rows, bytes,
+                          components)
+  lsm.postings_build      ngram/secondary CSR postings build for one
+                          component field (attrs: field)
+  feed.pump.<feed>        one intake -> compute -> store cycle (attrs:
+                          records)
+  bench.rep               one repetition inside benchmarks/_timing.timed
+
+Kernel spans are not opened per dispatch (too hot); instead
+``record_dispatch`` *attributes* dispatch counts and byte totals onto
+the innermost open span (``kernel_dispatches`` / ``h2d_bytes`` /
+``d2h_bytes`` span attrs), so an ``exec.*``/``columnar.*`` span carries
+the kernel traffic of exactly the operator that triggered it.
+
+Metric name registry (``metrics.snapshot()`` keys):
+
+  Counters — kernel wrappers (kernels/columnar_ops, kernels/fuzzy_ops):
+    kernel.dispatches           device-bound kernel calls (jitted jnp or
+                                Pallas; host-path fast floors don't count)
+    kernel.h2d_bytes            operand bytes shipped host -> device,
+                                post-padding (scalar bounds excluded)
+    kernel.d2h_bytes            result bytes fetched device -> host,
+                                pre-slicing (padded result shape)
+    kernel.jit_traces           cumulative jit traces of the kernel cores
+                                (mirrors columnar_ops.trace_count())
+    kernel.<name>.dispatches    per-kernel splits of the three above
+    kernel.<name>.h2d_bytes     (<name> is the public wrapper: range_mask,
+    kernel.<name>.d2h_bytes     fused_filter_aggregate,
+                                sorted_intersect_mask, t_occurrence_mask,
+                                edit_distances, set_intersect_counts,
+                                bitset_intersect_counts)
+
+  Counters — LSM storage (core/lsm):
+    lsm.flushes / lsm.merges    completed flush / merge operations
+    lsm.rows_ingested           memtable inserts+deletes accepted
+    lsm.rows_flushed            rows written by flushes
+    lsm.rows_merged             rows written by merges
+    lsm.bytes_flushed           estimated component bytes written by
+    lsm.bytes_merged            flushes / merges (column arrays + keys +
+                                tombstones + string dictionaries)
+    write amplification == (rows_flushed + rows_merged) / rows_ingested;
+    per-index, ``LSMIndex.write_amplification()`` computes it from the
+    index-local stats dict.
+
+  Histograms — LSM storage:
+    lsm.flush_seconds           wall time per flush
+    lsm.merge_seconds           wall time per merge
+    lsm.postings_build_seconds  wall time per postings (re)build
+    lsm.component_rows          rows per created component
+    lsm.component_bytes         estimated bytes per created component
+
+  Gauges — LSM storage:
+    lsm.components              valid components in the index that last
+                                flushed/merged (a freshness sample, not a
+                                cross-index aggregate)
+
+  Feeds (data/feeds):
+    feed.<feed>.records             counter: records stored by the feed
+    feed.<feed>.batch_records       histogram: records per pump cycle
+    feed.joint.<joint>.published    counter: records published to a joint
+    feed.joint.<joint>.lag.<sub>    gauge: head - subscriber cursor after
+                                    each consume (records behind)
+    feed.sink.<dataset>.records     counter: records delivered via
+                                    insert_batch
+    feed.sink.<dataset>.batch_records  histogram: insert_batch sizes
+    feed.sink.<dataset>.backlog     gauge: records buffered awaiting a
+                                    full micro-batch (sink lag)
+    per-joint ingest rate: ``FeedJoint.rate()`` (records/sec over the
+    joint's publish lifetime).
+
+Executor-level accounting stays on ``storage/query.ExecStats`` (per-query
+scope): ``kernel_dispatches`` / ``h2d_bytes`` / ``d2h_bytes`` are the
+per-query deltas of the kernel counters above, and
+``fallback_reasons`` maps "OP_KIND: reason" -> occurrences for every
+subplan the columnar engine declined.  ``explain_analyze`` (same module)
+returns the physical plan annotated per operator with wall time, rows,
+connector movement, and this kernel traffic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import numpy as np
+
+from . import metrics, tracer
+from .metrics import counter, gauge, histogram, snapshot
+from .tracer import (Span, clear, current, disable, dump_trace, enable,
+                     enabled, events, span)
+
+__all__ = ["metrics", "tracer", "span", "enable", "disable", "enabled",
+           "current", "events", "clear", "dump_trace", "counter", "gauge",
+           "histogram", "snapshot", "reset", "record_dispatch",
+           "record_retrace", "kernel_totals", "Span"]
+
+# hot-path handles: resolved once so record_dispatch costs dict-free
+# increments on the totals plus one cached lookup per kernel name
+_K_DISPATCH = counter("kernel.dispatches")
+_K_H2D = counter("kernel.h2d_bytes")
+_K_D2H = counter("kernel.d2h_bytes")
+_K_TRACES = counter("kernel.jit_traces")
+_per_kernel: Dict[str, Tuple[Any, Any, Any]] = {}
+
+
+def reset() -> None:
+    """Zero all metrics and drop all finished spans (tracer enablement is
+    untouched)."""
+    metrics.reset()
+    tracer.clear()
+
+
+def _nbytes(arrs: Sequence[Any]) -> int:
+    return sum(int(a.nbytes) for a in arrs if isinstance(a, np.ndarray))
+
+
+def record_dispatch(name: str, h2d: Sequence[Any] = (),
+                    d2h: Sequence[Any] = ()) -> None:
+    """Account one device-bound kernel call: ``h2d`` are the operand
+    arrays shipped to the jitted/Pallas core (post-padding; 0-d bound
+    scalars are excluded by convention), ``d2h`` the result arrays
+    fetched back (padded shape, before host-side slicing).  Updates the
+    process-wide kernel counters and attributes onto the innermost open
+    span when tracing is enabled."""
+    hb = _nbytes(h2d)
+    db = _nbytes(d2h)
+    _K_DISPATCH.inc(1)
+    if hb:
+        _K_H2D.inc(hb)
+    if db:
+        _K_D2H.inc(db)
+    per = _per_kernel.get(name)
+    if per is None:
+        per = _per_kernel[name] = (counter(f"kernel.{name}.dispatches"),
+                                   counter(f"kernel.{name}.h2d_bytes"),
+                                   counter(f"kernel.{name}.d2h_bytes"))
+    per[0].inc(1)
+    if hb:
+        per[1].inc(hb)
+    if db:
+        per[2].inc(db)
+    sp = tracer.current()
+    if sp is not None:
+        sp.add("kernel_dispatches", 1)
+        sp.add("h2d_bytes", hb)
+        sp.add("d2h_bytes", db)
+
+
+def record_retrace() -> None:
+    """Mirror of the kernel cores' trace-time counter (called from inside
+    jitted functions at trace time only)."""
+    _K_TRACES.inc(1)
+
+
+def kernel_totals() -> Tuple[int, int, int]:
+    """(dispatches, h2d_bytes, d2h_bytes) snapshot — the executor diffs
+    two of these around a query to fill ExecStats."""
+    return (_K_DISPATCH.value, _K_H2D.value, _K_D2H.value)

@@ -1,0 +1,202 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+One global ``Registry`` (module-level ``counter()`` / ``gauge()`` /
+``histogram()`` accessors) shared by every instrumented layer — kernel
+wrappers, the LSM, feeds, the executor.  Metric creation is
+lock-protected; updates take the per-metric lock (a dict increment plus
+one lock acquisition — microseconds-scale kernel dispatches dwarf it,
+and per-*row* paths are never instrumented, only per-call/per-batch
+ones).
+
+``snapshot()`` returns a flat JSON-safe dict (histograms expand to
+``{count, sum, min, max, p50, p95, p99}``) — this is what
+``benchmarks/run.py --json`` embeds so every CI run records the metric
+state alongside the bench numbers.  ``reset()`` zeroes everything
+(tests and per-query deltas use it or diff two snapshots).
+
+Histograms keep a bounded ring of recent observations (default 8192)
+for the quantiles; ``count``/``sum``/``min``/``max`` stay exact over
+the full stream.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Union
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry",
+           "counter", "gauge", "histogram", "snapshot", "reset"]
+
+
+class Counter:
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> Union[int, float]:
+        return self._value
+
+    def _reset(self) -> None:
+        with self._lock:
+            self._value = 0
+
+    def _snap(self) -> Union[int, float]:
+        return self._value
+
+
+class Gauge:
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value: Any = 0
+
+    def set(self, v: Any) -> None:
+        with self._lock:
+            self._value = v
+
+    def inc(self, n: Union[int, float] = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    def dec(self, n: Union[int, float] = 1) -> None:
+        with self._lock:
+            self._value -= n
+
+    @property
+    def value(self) -> Any:
+        return self._value
+
+    def _reset(self) -> None:
+        with self._lock:
+            self._value = 0
+
+    def _snap(self) -> Any:
+        return self._value
+
+
+class Histogram:
+    """Streaming distribution: exact count/sum/min/max, quantiles over a
+    bounded ring of the most recent ``window`` observations."""
+
+    __slots__ = ("name", "window", "_lock", "_ring", "_pos",
+                 "count", "sum", "min", "max")
+
+    def __init__(self, name: str, window: int = 8192):
+        self.name = name
+        self.window = int(window)
+        self._lock = threading.Lock()
+        self._ring: List[float] = []
+        self._pos = 0
+        self.count = 0
+        self.sum = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, v: Union[int, float]) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            self.min = v if self.min is None else min(self.min, v)
+            self.max = v if self.max is None else max(self.max, v)
+            if len(self._ring) < self.window:
+                self._ring.append(v)
+            else:                       # overwrite oldest (ring buffer)
+                self._ring[self._pos] = v
+                self._pos = (self._pos + 1) % self.window
+
+    def percentile(self, p: float) -> Optional[float]:
+        """p in [0, 100] over the retained window (None when empty)."""
+        with self._lock:
+            if not self._ring:
+                return None
+            xs = sorted(self._ring)
+        # nearest-rank on the sorted window
+        k = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
+        return xs[k]
+
+    def _reset(self) -> None:
+        with self._lock:
+            self._ring = []
+            self._pos = 0
+            self.count = 0
+            self.sum = 0.0
+            self.min = None
+            self.max = None
+
+    def _snap(self) -> Dict[str, Any]:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min,
+            "max": self.max,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+        }
+
+
+class Registry:
+    """Named-metric store.  A name is permanently one metric type — a
+    kind clash raises instead of silently shadowing."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, Any] = {}
+
+    def _get(self, name: str, cls, **kw):
+        m = self._metrics.get(name)       # racy read is fine: dict get
+        if m is not None:
+            if not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} is {type(m).__name__}, "
+                    f"not {cls.__name__}")
+            return m
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, **kw)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} is {type(m).__name__}, "
+                    f"not {cls.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, window: int = 8192) -> Histogram:
+        return self._get(name, Histogram, window=window)
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            items = list(self._metrics.items())
+        return {name: m._snap() for name, m in sorted(items)}
+
+    def reset(self) -> None:
+        with self._lock:
+            items = list(self._metrics.values())
+        for m in items:
+            m._reset()
+
+
+REGISTRY = Registry()
+
+counter = REGISTRY.counter
+gauge = REGISTRY.gauge
+histogram = REGISTRY.histogram
+snapshot = REGISTRY.snapshot
+reset = REGISTRY.reset

@@ -30,14 +30,16 @@ rows_fallback.
 from __future__ import annotations
 
 import heapq
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from .. import obs as _obs
 from ..core.algebra import Connector, PhysicalOp
 from ..core.rewriter import Catalog, RewriteConfig, optimize
 from .dataset import PartitionedDataset, hash_partition
 
-__all__ = ["Executor", "run_query"]
+__all__ = ["Executor", "run_query", "explain_analyze"]
 
 Rows = List[Dict[str, Any]]
 Parts = List[Rows]
@@ -59,6 +61,13 @@ class ExecStats:
     kernel_retraces: int = 0    # jit traces of the columnar kernel cores
     #                             this query triggered: repeated queries
     #                             over pow2-padded batches must show 0
+    fallback_reasons: Dict[str, int] = field(default_factory=dict)
+    #                             "OP_KIND: reason" -> occurrences, one
+    #                             entry per subplan the columnar engine
+    #                             declined (empty when nothing fell back)
+    kernel_dispatches: int = 0  # device-bound kernel calls this query made
+    h2d_bytes: int = 0          # operand bytes shipped host -> device
+    d2h_bytes: int = 0          # result bytes fetched device -> host
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -79,6 +88,10 @@ class ExecStats:
         self.index_vectorized(op, n)
         self.rows_fuzzy_vectorized += n
 
+    def fell_back(self, op: str, reason: str) -> None:
+        key = f"{op}: {reason}"
+        self.fallback_reasons[key] = self.fallback_reasons.get(key, 0) + 1
+
 
 class Executor:
     def __init__(self, datasets: Dict[str, PartitionedDataset],
@@ -88,6 +101,10 @@ class Executor:
                                   for ds in datasets.values())
         self.stats = ExecStats()
         self.vectorize = vectorize
+        # explain_analyze: id(plan node) -> per-operator measurements
+        # (None = plain execution, zero instrumentation overhead)
+        self.analysis: Optional[Dict[int, Dict[str, Any]]] = None
+        self._fallback_reasons: Optional[Dict[int, str]] = None
 
     # -- connectors ----------------------------------------------------------
     def _apply_connector(self, conn: Connector, parts: Parts) -> Parts:
@@ -130,6 +147,42 @@ class Executor:
 
     # -- operators -------------------------------------------------------------
     def execute_op(self, op: PhysicalOp) -> Parts:
+        # fast path: no explain, no tracing — one attribute check plus one
+        # module-flag check on top of the actual operator work
+        if self.analysis is None and not _obs.enabled():
+            return self._run_op(op)[0]
+        kt0 = _obs.kernel_totals()
+        moved0 = sum(self.stats.rows_moved.values())
+        t0 = time.perf_counter()
+        with _obs.span("exec." + op.kind) as sp:
+            parts, mode = self._run_op(op)
+        wall = time.perf_counter() - t0
+        kt1 = _obs.kernel_totals()
+        rows_out = sum(map(len, parts))
+        sp.set("mode", mode)
+        sp.set("rows_out", rows_out)
+        if self.analysis is not None:
+            # inclusive values (children execute inside _run_op);
+            # explain_analyze derives per-operator exclusive ones
+            entry = {
+                "op": op.kind, "mode": mode, "wall_s": wall,
+                "rows_out": rows_out,
+                "rows_moved": sum(self.stats.rows_moved.values()) - moved0,
+                "kernel_dispatches": kt1[0] - kt0[0],
+                "h2d_bytes": kt1[1] - kt0[1],
+                "d2h_bytes": kt1[2] - kt0[2],
+            }
+            reason = (self._fallback_reasons or {}).pop(id(op), None)
+            if reason is not None:
+                entry["fallback_reason"] = reason
+            self.analysis[id(op)] = entry
+        return parts
+
+    def _run_op(self, op: PhysicalOp) -> Tuple[Parts, str]:
+        """Execute one operator (children recurse through execute_op).
+        Returns (parts, mode): "columnar" when the subtree lowered,
+        "fallback" when the row engine ran under vectorize=True, "row"
+        otherwise."""
         k = op.kind
         P = self.num_partitions
 
@@ -137,7 +190,7 @@ class Executor:
             from ..columnar.lower import try_lower
             lowered = try_lower(op, self)
             if lowered is not None:
-                return lowered()
+                return lowered(), "columnar"
 
         if k == "DATASET_SCAN":
             ds = self.datasets[op.attrs["dataset"]]
@@ -316,7 +369,8 @@ class Executor:
         self.stats.produced(k, parts)
         if self.vectorize:
             self.stats.rows_fallback += sum(map(len, parts))
-        return parts
+            return parts, "fallback"
+        return parts, "row"
 
 
 def _sort_key(keys: Sequence[str]) -> Callable:
@@ -374,6 +428,35 @@ def _agg_merge(rows: Rows, aggs: Dict[str, Tuple[str, str]]
     return out
 
 
+def _default_catalog(datasets: Dict[str, PartitionedDataset]) -> Catalog:
+    """Catalog inferred from the datasets' own index declarations."""
+    catalog = Catalog(
+        primary_keys={n: ds.primary_key
+                      for n, ds in datasets.items()},
+        indexes=[],
+        num_partitions=max(ds.num_partitions
+                           for ds in datasets.values()))
+    from ..core.rewriter import IndexInfo
+    for n, ds in datasets.items():
+        for fld in ds.index_fields:
+            catalog.indexes.append(IndexInfo(
+                f"{n}_{fld}_idx", n, fld,
+                kind=getattr(ds, "index_kinds", {}).get(fld, "btree"),
+                gram_length=getattr(ds, "_ngram_specs",
+                                    {}).get(fld, 3)))
+    return catalog
+
+
+def _finish_stats(ex: "Executor", traces0: int,
+                  kt0: Tuple[int, int, int]) -> None:
+    from ..kernels import columnar_ops as K
+    kt1 = _obs.kernel_totals()
+    ex.stats.kernel_retraces = K.trace_count() - traces0
+    ex.stats.kernel_dispatches = kt1[0] - kt0[0]
+    ex.stats.h2d_bytes = kt1[1] - kt0[1]
+    ex.stats.d2h_bytes = kt1[2] - kt0[2]
+
+
 def run_query(plan, datasets: Dict[str, PartitionedDataset],
               catalog: Optional[Catalog] = None,
               config: RewriteConfig = RewriteConfig(),
@@ -383,25 +466,82 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
     — the executor carries connector/operator statistics.  With
     ``vectorize=True`` supported subplans run on the columnar engine."""
     if catalog is None:
-        catalog = Catalog(
-            primary_keys={n: ds.primary_key
-                          for n, ds in datasets.items()},
-            indexes=[],
-            num_partitions=max(ds.num_partitions
-                               for ds in datasets.values()))
-        from ..core.rewriter import IndexInfo
-        for n, ds in datasets.items():
-            for fld in ds.index_fields:
-                catalog.indexes.append(IndexInfo(
-                    f"{n}_{fld}_idx", n, fld,
-                    kind=getattr(ds, "index_kinds", {}).get(fld, "btree"),
-                    gram_length=getattr(ds, "_ngram_specs",
-                                        {}).get(fld, 3)))
+        catalog = _default_catalog(datasets)
     phys = optimize(plan, catalog, config)
     ex = Executor(datasets, vectorize=vectorize)
     from ..kernels import columnar_ops as K
     traces0 = K.trace_count()
+    kt0 = _obs.kernel_totals()
     parts = ex.execute_op(phys)
-    ex.stats.kernel_retraces = K.trace_count() - traces0
+    _finish_stats(ex, traces0, kt0)
     rows = [r for p in parts for r in p]
     return rows, ex
+
+
+def _annotate(op: PhysicalOp, analysis: Dict[int, Dict[str, Any]]
+              ) -> Dict[str, Any]:
+    """Physical plan tree -> annotated dict tree.  Measured nodes carry
+    inclusive values plus ``self_*`` exclusives (inclusive minus measured
+    direct children); nodes executed inside a fused columnar closure
+    carry whatever per-stage numbers the closure recorded."""
+    children = [_annotate(c, analysis) for c in op.children]
+    node: Dict[str, Any] = {"op": op.kind,
+                            "connectors": [c.name for c in op.connectors]}
+    e = analysis.get(id(op))
+    if e is None:
+        node["mode"] = "fused"      # ran inside an ancestor's closure
+    else:
+        node.update({kk: v for kk, v in e.items() if kk != "op"})
+        if "wall_s" in e:           # measured (not a fused-stage entry)
+            for key in ("wall_s", "rows_moved", "kernel_dispatches",
+                        "h2d_bytes", "d2h_bytes"):
+                node["self_" + key] = e[key] - sum(
+                    c.get(key, 0) for c in children)
+            node["rows_in"] = sum(c.get("rows_out", 0) for c in children)
+    node["children"] = children
+    return node
+
+
+def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
+                    catalog: Optional[Catalog] = None,
+                    config: RewriteConfig = RewriteConfig(),
+                    vectorize: bool = True) -> Dict[str, Any]:
+    """EXPLAIN ANALYZE: optimize, execute, and return the physical plan
+    annotated per operator with wall time, rows in/out, connector rows
+    moved, lowering outcome (columnar / fused / fallback+reason / row),
+    kernel dispatches, and host<->device transfer bytes.
+
+    Returns ``{"rows", "plan", "totals", "stats"}``: ``rows`` is the
+    query result, ``plan`` the annotated operator tree (``self_*`` keys
+    are per-operator exclusive values; plain keys are subtree-inclusive),
+    ``totals`` the whole-query wall time and kernel traffic, ``stats``
+    the executor's ExecStats.  Combine with ``obs.enable()`` +
+    ``obs.dump_trace(path)`` for the same run on a Chrome-trace timeline.
+    """
+    if catalog is None:
+        catalog = _default_catalog(datasets)
+    phys = optimize(plan, catalog, config)
+    ex = Executor(datasets, vectorize=vectorize)
+    ex.analysis = {}
+    ex._fallback_reasons = {}
+    from ..kernels import columnar_ops as K
+    traces0 = K.trace_count()
+    kt0 = _obs.kernel_totals()
+    t0 = time.perf_counter()
+    parts = ex.execute_op(phys)
+    wall = time.perf_counter() - t0
+    _finish_stats(ex, traces0, kt0)
+    rows = [r for p in parts for r in p]
+    return {
+        "rows": rows,
+        "plan": _annotate(phys, ex.analysis),
+        "totals": {
+            "wall_s": wall,
+            "rows": len(rows),
+            "kernel_dispatches": ex.stats.kernel_dispatches,
+            "h2d_bytes": ex.stats.h2d_bytes,
+            "d2h_bytes": ex.stats.d2h_bytes,
+            "kernel_retraces": ex.stats.kernel_retraces,
+        },
+        "stats": ex.stats,
+    }

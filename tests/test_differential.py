@@ -421,6 +421,10 @@ def test_index_plans_never_silently_fall_back():
             plan.attrs["hints"] = ()
         ex = _assert_engines_agree(ds, plan)
         assert ex.stats.rows_fallback == 0, name
+        # fallback reasons are recorded per-op: a fully lowered plan has
+        # none, and a regression here now names the op + why it fell back
+        assert ex.stats.fallback_reasons == {}, (name,
+                                                 ex.stats.fallback_reasons)
         assert ex.stats.rows_index_vectorized > 0, name
         # repeated query over the (now warm) postings + padded batches:
         # no kernel core may retrace
@@ -437,4 +441,6 @@ def test_index_plans_never_silently_fall_back():
                         fields=["txt"], fuzzy=spec)
         ex = _assert_engines_agree(ds2, plan)
         assert ex.stats.rows_fallback == 0, spec
+        assert ex.stats.fallback_reasons == {}, (spec,
+                                                 ex.stats.fallback_reasons)
         assert ex.stats.rows_fuzzy_vectorized > 0, spec
