@@ -3,13 +3,14 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3] [--smoke]
                                                [--json out.json]
 
-``--smoke`` drives the five CI smoke benches (columnar / index / ingest /
-fuzzy / feeds) at reduced sizes with one combined exit code — this is
-what ``scripts/verify.sh`` and the CI workflow invoke, replacing the old
-per-bench invocations.  Each smoke bench carries its own hard
+``--smoke`` drives the six CI smoke benches (columnar / index / ingest /
+fuzzy / feeds / serve) at reduced sizes with one combined exit code —
+this is what ``scripts/verify.sh`` and the CI workflow invoke, replacing
+the old per-bench invocations.  Each smoke bench carries its own hard
 assertions (engine equivalence, no silent index/fuzzy fallback, zero
-kernel retraces on repeated queries), so a nonzero exit means a real
-regression, not a slow machine.
+kernel retraces on repeated queries, zero torn reads / lost acks under
+concurrent serving), so a nonzero exit means a real regression, not a
+slow machine.
 
 ``--json out.json`` additionally writes a machine-readable report:
 
@@ -38,7 +39,7 @@ from repro import obs
 
 from ._timing import stopwatch
 
-SMOKE_MODULES = ("columnar", "index", "ingest", "fuzzy", "feeds")
+SMOKE_MODULES = ("columnar", "index", "ingest", "fuzzy", "feeds", "serve")
 JSON_SCHEMA_VERSION = 1
 
 
@@ -54,7 +55,7 @@ def main() -> None:
     args = p.parse_args()
 
     from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
-                   ingest_bench, step_bench, table2_storage,
+                   ingest_bench, serve_bench, step_bench, table2_storage,
                    table3_queries, table4_inserts)
     modules = {
         "table2": table2_storage,
@@ -65,6 +66,7 @@ def main() -> None:
         "fuzzy": fuzzy_bench,
         "ingest": ingest_bench,
         "feeds": feeds_bench,
+        "serve": serve_bench,
         "steps": step_bench,
     }
     if args.smoke:

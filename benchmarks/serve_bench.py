@@ -1,0 +1,96 @@
+"""Mixed ingest+query serving benchmark (paper §2.4/§4.4): N feed pump
+threads and M snapshot-isolated query workers drive one
+``PartitionedDataset`` through the admission-controlled
+``repro.serve.ServeHarness``, with a mid-run checkpoint +
+crash-and-recover to exercise at-least-once feed replay.
+
+Hard assertions (smoke and full): zero torn reads, zero lost
+acknowledged records (both live floor checks and the final scan), no
+query-worker exceptions, and nonzero sustained ingest — the numbers are
+only reported if the concurrent run was *correct*.
+
+Reported per row: sustained ingest rate (acked records/s) and p50/p99
+query latency from the ``serve.query.latency_s`` obs histogram.
+
+Usage: PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+from repro.core import adm
+from repro.core.lsm import TieredMergePolicy
+from repro.serve import ServeHarness
+from repro.storage.dataset import PartitionedDataset
+
+
+def _dataset(flush_threshold: int) -> PartitionedDataset:
+    rt = adm.RecordType("ServedType",
+                        (adm.Field("pk", adm.INT64),
+                         adm.Field("val", adm.INT64),
+                         adm.Field("text", adm.STRING)),
+                        open=True)
+    return PartitionedDataset("served", rt, "pk", num_partitions=4,
+                              flush_threshold=flush_threshold,
+                              merge_policy=TieredMergePolicy(k=3))
+
+
+def _drive(name: str, *, n_ingest: int, n_query: int, per_lane: int,
+           duration_s: float, crash: bool = False) -> dict:
+    ds = _dataset(flush_threshold=256)
+    h = ServeHarness(ds, n_ingest=n_ingest, n_query=n_query,
+                     pump_batch=64, records_per_lane=per_lane)
+    total = n_ingest * per_lane
+    rep = h.run(duration_s=duration_s,
+                checkpoint_after=total // 4 if crash else None,
+                crash_after=total // 2 if crash else None)
+    d = rep.as_dict()
+    assert d["torn_reads"] == 0, f"{name}: torn reads {d['torn_reads']}"
+    assert d["lost_acks"] == 0, f"{name}: lost-ack reads {d['lost_acks']}"
+    assert d["lost_acked_final"] == 0, \
+        f"{name}: acked records missing from final scan"
+    assert not d["query_errors"], f"{name}: {d['query_errors'][:3]}"
+    assert d["ingest_acked"] >= n_ingest * per_lane, \
+        f"{name}: only {d['ingest_acked']} acked"
+    assert d["ingest_rate"] > 0, f"{name}: zero sustained ingest"
+    assert d["queries"] > 0 and d["query_p99_ms"] is not None, \
+        f"{name}: no query latency measured"
+    return {"bench": name,
+            "us_per_call": 1e6 / d["ingest_rate"],
+            "ingest_rate": round(d["ingest_rate"], 1),
+            "ingest_acked": d["ingest_acked"],
+            "queries": d["queries"],
+            "admission_rejected": d["admission_rejected"],
+            "query_p50_ms": round(d["query_p50_ms"], 3),
+            "query_p99_ms": round(d["query_p99_ms"], 3),
+            "torn_reads": d["torn_reads"],
+            "lost_acked": d["lost_acked_final"] + d["lost_acks"],
+            "recoveries": d["recoveries"],
+            "derived": f"{d['ingest_rate']:.0f} rec/s, "
+                       f"p99 {d['query_p99_ms']:.1f}ms, "
+                       f"{d['queries']} queries"}
+
+
+def run(smoke: bool = False) -> list:
+    per_lane = 1500 if smoke else 8000
+    budget = 20.0 if smoke else 90.0
+    rows = [
+        # steady state: 2 ingest lanes + 2 query workers
+        _drive("serve_mixed_2x2", n_ingest=2, n_query=2,
+               per_lane=per_lane, duration_s=budget),
+        # fault injection: checkpoint, crash, WAL recovery + feed replay
+        _drive("serve_crash_replay", n_ingest=2, n_query=2,
+               per_lane=per_lane, duration_s=budget, crash=True),
+    ]
+    if not smoke:
+        rows.append(_drive("serve_mixed_4x4", n_ingest=4, n_query=4,
+                           per_lane=per_lane, duration_s=budget))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true")
+    args = p.parse_args()
+    for r in run(smoke=args.smoke):
+        print(r)

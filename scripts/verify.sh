@@ -7,16 +7,18 @@
 #      the gate existed);
 #   2. the full pytest suite (collection regressions — import errors,
 #      missing optional deps — show up here before anything else does);
-#   3. the five smoke benches via `benchmarks/run.py --smoke`
-#      (columnar / index / ingest / fuzzy / feeds), whose hard
+#   3. the six smoke benches via `benchmarks/run.py --smoke`
+#      (columnar / index / ingest / fuzzy / feeds / serve), whose hard
 #      assertions catch: a row-vs-columnar divergence, an index or
 #      fuzzy plan silently falling back to the row engine, a candidate
 #      read regressing onto a python walk (the CSR postings must beat
 #      the legacy secondary-LSM walk), a kernel retrace on repeated
-#      queries, or an ingest pipeline divergence;
+#      queries, an ingest pipeline divergence, or a torn read / lost
+#      acknowledged record under concurrent mixed ingest+query serving;
 #   4. the structured bench report (`--json bench_smoke.json`) parses,
-#      carries schema_version 1, and contains rows from all five smoke
-#      modules — CI uploads the file as a run artifact.
+#      carries schema_version 1, contains rows from all six smoke
+#      modules, and the serve rows report nonzero sustained ingest and
+#      a p99 query latency — CI uploads the file as a run artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -40,7 +42,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --smoke --json bench_smoke.json
 
-# The report must parse, be schema-stable, and cover all five smoke
+# The report must parse, be schema-stable, and cover all six smoke
 # modules — a bench that crashed or was silently skipped fails here.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 import json
@@ -54,6 +56,15 @@ ran = {row["module"] for row in report["benches"].values()}
 missing = set(SMOKE_MODULES) - ran
 assert not missing, f"smoke benches missing from report: {sorted(missing)}"
 assert report["metrics"], "obs metric snapshot is empty"
+# Concurrent-serving rows must carry real numbers: sustained ingest,
+# measured tail latency, and a clean consistency ledger.
+serve_rows = [r for r in report["benches"].values()
+              if r["module"] == "serve"]
+assert serve_rows, "no serve bench rows in report"
+for row in serve_rows:
+    assert row["ingest_rate"] > 0, f"zero sustained ingest: {row}"
+    assert row["query_p99_ms"] is not None, f"missing p99: {row}"
+    assert row["torn_reads"] == 0 and row["lost_acked"] == 0, row
 print(f"verify: bench_smoke.json ok "
       f"({len(report['benches'])} benches, {len(report['metrics'])} metrics)")
 EOF

@@ -29,12 +29,43 @@ for benchmarking the old row path).  Secondary index structures are not
 separate LSM trees at all: components carry per-field columnar CSR
 postings (``gram_postings`` for ngram, ``sec_postings`` for
 btree/rtree/keyword) as derived data built beside the batch.
+
+Transaction model (paper §2.4/§4.4 — "transaction support akin to that
+of a NoSQL store", serving reads while feeds ingest):
+
+  * **Writes are serialized per index** — every mutation (``insert`` /
+    ``delete`` / ``insert_batch`` / ``flush`` / ``merge``) runs under the
+    index's reentrant ``_lock``, so the WAL append, the memtable update,
+    and any flush/merge the update triggers are one atomic step with
+    respect to other writers and to snapshot pins.  Different partitions
+    of a dataset hold different LSMIndex objects, so partitioned writes
+    stay concurrent across partitions.
+  * **Reads get snapshot isolation via component-set pinning** —
+    ``pin()`` returns a refcounted :class:`LSMView`: a frozen
+    (memtable-copy, valid-component-tuple) pair stamped with the index's
+    monotone ``version``.  Components are immutable and the view's
+    memtable is a private copy, so a pinned reader sees one consistent
+    LSM state end to end with zero further coordination (no lock on the
+    read path).
+  * **Flush/merge install new component lists copy-on-write** — the
+    ``components`` list is never mutated in place; a new list is built
+    and rebound in one assignment, so any concurrently-grabbed reference
+    (a pinned view's tuple, an in-flight iteration) stays valid.
+  * **Deferred physical retirement** — a merge that replaces components
+    cannot drop them while a pinned view still references them: each
+    pin takes a per-component refcount, and replaced components with a
+    nonzero pincount park in ``_deferred`` until their last ``unpin``
+    (then ``Component.retired`` flips and the ``lsm.deferred_retires``
+    counter ticks).  ``pinned_versions()`` exposes the live pin set so
+    the dataset's scan cache can key (and GC) entries by snapshot
+    version.
 """
 
 from __future__ import annotations
 
 import bisect
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
@@ -45,8 +76,9 @@ from .. import obs as _obs
 from ..columnar.batch import ColumnBatch
 from ..columnar.schema import ColumnSchema
 
-__all__ = ["Component", "LSMIndex", "TieredMergePolicy", "WALRecord",
-           "TOMBSTONE", "key_array", "recover", "component_nbytes"]
+__all__ = ["Component", "LSMIndex", "LSMView", "TieredMergePolicy",
+           "WALRecord", "TOMBSTONE", "key_array", "recover",
+           "component_nbytes"]
 
 # process-wide storage metrics (see obs.__init__ for the name registry);
 # handles resolved once so flush/merge pay dict-free increments
@@ -63,6 +95,9 @@ _ROWS_MERGED = _obs.counter("lsm.rows_merged")
 _BYTES_FLUSHED = _obs.counter("lsm.bytes_flushed")
 _BYTES_MERGED = _obs.counter("lsm.bytes_merged")
 _COMPONENTS = _obs.gauge("lsm.components")
+_PINS = _obs.counter("lsm.pins")
+_DEFERRED = _obs.counter("lsm.deferred_retires")
+_PINNED_G = _obs.gauge("lsm.pinned_snapshots")
 
 
 def _arr_nbytes(a: Optional[np.ndarray]) -> int:
@@ -168,6 +203,8 @@ class Component:
     batch: Optional[ColumnBatch] = None   # columnar primary data
     tomb: Optional[np.ndarray] = None     # bool bitmap: entry is a delete
     valid: bool = False
+    retired: bool = False                 # physically retired (replaced by a
+    #                                       merge and no longer pinned)
     comp_id: int = field(default_factory=lambda: next(_component_ids))
     gram_postings: Dict[str, Any] = field(default_factory=dict, repr=False)
     sec_postings: Dict[str, Any] = field(default_factory=dict, repr=False)
@@ -356,6 +393,71 @@ class TieredMergePolicy:
         return None
 
 
+class LSMView:
+    """A point-in-time (memtable, component-set) view of an LSMIndex.
+
+    Two flavours share one read surface:
+
+      * ``LSMIndex.current_view()`` — *unfrozen*: references the live
+        memtable (single-threaded read paths; concurrent readers must
+        pin instead).
+      * ``LSMIndex.pin()`` — *frozen*: the memtable is a private copy,
+        the component tuple is refcount-pinned, and ``release()`` (or
+        ``LSMIndex.unpin``) must be called exactly once to let replaced
+        components physically retire.
+
+    ``version`` is the owning index's monotone mutation counter at view
+    time — the snapshot-isolation key the dataset scan cache uses.
+    """
+
+    __slots__ = ("version", "memtable", "components", "frozen",
+                 "_owner", "_released")
+
+    def __init__(self, version: int, memtable: Dict[Any, Any],
+                 components: Tuple[Component, ...], frozen: bool,
+                 owner: Optional["LSMIndex"] = None):
+        self.version = version
+        self.memtable = memtable
+        self.components = components      # valid components, newest first
+        self.frozen = frozen
+        self._owner = owner
+        self._released = False
+
+    def release(self) -> None:
+        """Drop this view's component pins (frozen views only; idempotent
+        no-op for unfrozen ones)."""
+        if self.frozen and not self._released and self._owner is not None:
+            self._owner.unpin(self)
+
+    def __enter__(self) -> "LSMView":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- read surface (never takes the index lock) --------------------------
+    def lookup(self, key: Any) -> Optional[Any]:
+        if key in self.memtable:
+            r = self.memtable[key]
+            return None if r is TOMBSTONE else r
+        for c in self.components:
+            r = c.lookup(key)
+            if r is not None:
+                return None if r is TOMBSTONE else r
+        return None
+
+    def items(self) -> Iterator[Tuple[Any, Any]]:
+        """Live (key, row) pairs, newest-wins, sorted by key."""
+        seen: Dict[Any, Any] = {}
+        for c in reversed(self.components):
+            for k, r in zip(c.keys, c.rows):
+                seen[k] = r
+        seen.update(self.memtable)
+        for k in sorted(seen):
+            if seen[k] is not TOMBSTONE:
+                yield k, seen[k]
+
+
 class LSMIndex:
     """LSM-ified ordered index: dict memtable + sorted-run components.
 
@@ -387,9 +489,16 @@ class LSMIndex:
         self.sec_fields = sec_fields
         self.stats = {"flushes": 0, "merges": 0, "inserts": 0, "deletes": 0,
                       "merged_rows": 0, "flushed_rows": 0,
-                      "flushed_bytes": 0, "merged_bytes": 0}
+                      "flushed_bytes": 0, "merged_bytes": 0,
+                      "pins": 0, "deferred_retires": 0}
         self._ingest_counted = 0    # inserts+deletes already counted into
         #                             the process-wide lsm.rows_ingested
+        # -- concurrency: per-index write serialization + snapshot pins ----
+        self._lock = threading.RLock()   # WAL + memtable + flush/merge path
+        self._version = 0                # monotone, bumped on any mutation
+        self._comp_pins: Dict[int, int] = {}       # comp_id -> pin count
+        self._deferred: Dict[int, Component] = {}  # replaced but still pinned
+        self._pin_versions: Dict[int, int] = {}    # version -> live pin count
 
     def write_amplification(self) -> float:
         """(rows flushed + rows re-written by merges) / rows ingested.
@@ -402,39 +511,124 @@ class LSMIndex:
         return (self.stats["flushed_rows"]
                 + self.stats["merged_rows"]) / ingested
 
+    # -- snapshot pinning (read-side transaction surface) -------------------
+    @property
+    def version(self) -> int:
+        """Monotone mutation counter: bumps on every insert/delete batch,
+        flush, and merge.  Equal versions imply identical visible state,
+        so snapshot readers and the dataset scan cache key on it."""
+        return self._version
+
+    def current_view(self) -> LSMView:
+        """Unfrozen point-in-time view sharing the live memtable (the
+        single-threaded read path; concurrent readers must ``pin()``)."""
+        return LSMView(self._version, self.memtable,
+                       tuple(c for c in self.components if c.valid),
+                       frozen=False, owner=self)
+
+    def pin(self) -> LSMView:
+        """Refcounted snapshot handle: a frozen (memtable-copy,
+        component-tuple) pair.  Components it references cannot be
+        physically retired until the matching ``unpin``/``release``."""
+        with self._lock:
+            comps = tuple(c for c in self.components if c.valid)
+            for c in comps:
+                self._comp_pins[c.comp_id] = \
+                    self._comp_pins.get(c.comp_id, 0) + 1
+            self._pin_versions[self._version] = \
+                self._pin_versions.get(self._version, 0) + 1
+            self.stats["pins"] += 1
+            view = LSMView(self._version, dict(self.memtable), comps,
+                           frozen=True, owner=self)
+        _PINS.inc()
+        _PINNED_G.inc()
+        return view
+
+    def unpin(self, view: LSMView) -> None:
+        """Release one pinned view: drop its component refcounts and
+        physically retire any replaced component whose pin count reached
+        zero (the deferred half of the merge's copy-on-write swap)."""
+        retire: List[Component] = []
+        with self._lock:
+            if view._released:
+                return
+            view._released = True
+            n = self._pin_versions.get(view.version, 0) - 1
+            if n > 0:
+                self._pin_versions[view.version] = n
+            else:
+                self._pin_versions.pop(view.version, None)
+            for c in view.components:
+                left = self._comp_pins.get(c.comp_id, 0) - 1
+                if left > 0:
+                    self._comp_pins[c.comp_id] = left
+                else:
+                    self._comp_pins.pop(c.comp_id, None)
+                    dead = self._deferred.pop(c.comp_id, None)
+                    if dead is not None:
+                        retire.append(dead)
+            for dead in retire:
+                dead.retired = True
+                self.stats["deferred_retires"] += 1
+        if retire:
+            _DEFERRED.inc(len(retire))
+        _PINNED_G.dec()
+
+    def pinned_versions(self) -> Tuple[int, ...]:
+        """Versions with at least one live pin (scan-cache GC keeps
+        entries for exactly these plus the current version)."""
+        return tuple(self._pin_versions)
+
+    def _retire_replaced(self, replaced: Sequence[Component]) -> None:
+        """Called under ``_lock`` by merge after the copy-on-write swap:
+        unpinned components retire immediately, pinned ones defer."""
+        for c in replaced:
+            if self._comp_pins.get(c.comp_id, 0) > 0:
+                self._deferred[c.comp_id] = c
+            else:
+                c.retired = True
+                self.stats["deferred_retires"] += 1
+                _DEFERRED.inc()
+
     # -- update path (record-level "transactions": WAL then apply) ---------
     def insert(self, key: Any, row: Any) -> None:
-        self.wal.append(WALRecord(next(self._lsn), "insert", key, row))
-        self.memtable[key] = row
-        self.stats["inserts"] += 1
-        if len(self.memtable) >= self.flush_threshold:
-            self.flush()
+        with self._lock:
+            self.wal.append(WALRecord(next(self._lsn), "insert", key, row))
+            self.memtable[key] = row
+            self.stats["inserts"] += 1
+            self._version += 1
+            if len(self.memtable) >= self.flush_threshold:
+                self.flush()
 
     def delete(self, key: Any) -> None:
-        self.wal.append(WALRecord(next(self._lsn), "delete", key))
-        self.memtable[key] = TOMBSTONE
-        self.stats["deletes"] += 1
-        if len(self.memtable) >= self.flush_threshold:
-            self.flush()
+        with self._lock:
+            self.wal.append(WALRecord(next(self._lsn), "delete", key))
+            self.memtable[key] = TOMBSTONE
+            self.stats["deletes"] += 1
+            self._version += 1
+            if len(self.memtable) >= self.flush_threshold:
+                self.flush()
 
     def insert_batch(self, keys: Sequence[Any], rows: Sequence[Any]) -> None:
         """Paper Table 4: batching amortizes per-statement overhead — one
         WAL/memtable pass per chunk and one flush-threshold check per
         chunk instead of per record (flushes still fire at the same
         thresholds, so component sizes match the per-record path)."""
-        mem, wal, lsn = self.memtable, self.wal, self._lsn
-        i, n = 0, len(keys)
-        while i < n:
-            take = max(self.flush_threshold - len(mem), 1)
-            for k, r in zip(keys[i:i + take], rows[i:i + take]):
-                wal.append(WALRecord(next(lsn), "insert", k, r))
-                mem[k] = r
-            done = min(i + take, n) - i
-            self.stats["inserts"] += done
-            i += take
-            if len(mem) >= self.flush_threshold:
-                self.flush()
-                mem = self.memtable     # flush installed a fresh dict
+        with self._lock:
+            mem, wal, lsn = self.memtable, self.wal, self._lsn
+            i, n = 0, len(keys)
+            while i < n:
+                take = max(self.flush_threshold - len(mem), 1)
+                for k, r in zip(keys[i:i + take], rows[i:i + take]):
+                    wal.append(WALRecord(next(lsn), "insert", k, r))
+                    mem[k] = r
+                done = min(i + take, n) - i
+                self.stats["inserts"] += done
+                i += take
+                self._version += 1
+                if len(mem) >= self.flush_threshold:
+                    self.flush()
+                    mem = self.memtable     # flush installed a fresh dict
 
     # -- flush / merge ------------------------------------------------------
     def _ngram(self) -> Dict[str, int]:
@@ -452,40 +646,45 @@ class LSMIndex:
         With ``crash_before_validity`` the validity bit is never set,
         simulating a crash mid-flush: recovery must ignore the component
         (paper §4.4)."""
-        if not self.memtable:
-            return None
-        t0 = time.perf_counter()
-        with _obs.span("lsm.flush") as sp:
-            keys, vals = _sorted_kv(self.memtable)
-            comp = Component.build(keys, vals, schema=self.schema,
-                                   columnar=self.columnar,
-                                   ngram_fields=self._ngram(),
-                                   sec_fields=self._sec())
-            self.components.insert(0, comp)    # shadow: present but invalid
-            if crash_before_validity:
-                return comp
-            comp.valid = True                  # atomic install
-            self.memtable = {}
-            self.stats["flushes"] += 1
-            nbytes = component_nbytes(comp)
-            self.stats["flushed_rows"] += comp.size
-            self.stats["flushed_bytes"] += nbytes
-            sp.set("rows", comp.size)
-            sp.set("bytes", nbytes)
-        _FLUSH_S.observe(time.perf_counter() - t0)
-        _FLUSHES.inc()
-        _ROWS_FLUSHED.inc(comp.size)
-        _BYTES_FLUSHED.inc(nbytes)
-        _COMP_ROWS.observe(comp.size)
-        _COMP_BYTES.observe(nbytes)
-        # ingest accounting at flush granularity (never per-row): the
-        # delta of this index's insert+delete counters since last flush
-        ingested = self.stats["inserts"] + self.stats["deletes"]
-        _ROWS_INGESTED.inc(ingested - self._ingest_counted)
-        self._ingest_counted = ingested
-        _COMPONENTS.set(sum(1 for c in self.components if c.valid))
-        self._maybe_merge()
-        return comp
+        with self._lock:
+            if not self.memtable:
+                return None
+            t0 = time.perf_counter()
+            with _obs.span("lsm.flush") as sp:
+                keys, vals = _sorted_kv(self.memtable)
+                comp = Component.build(keys, vals, schema=self.schema,
+                                       columnar=self.columnar,
+                                       ngram_fields=self._ngram(),
+                                       sec_fields=self._sec())
+                # copy-on-write shadow install: present but invalid; the
+                # list object pinned views / in-flight readers grabbed is
+                # never mutated, only rebound
+                self.components = [comp] + self.components
+                if crash_before_validity:
+                    return comp
+                comp.valid = True              # atomic install
+                self.memtable = {}
+                self._version += 1
+                self.stats["flushes"] += 1
+                nbytes = component_nbytes(comp)
+                self.stats["flushed_rows"] += comp.size
+                self.stats["flushed_bytes"] += nbytes
+                sp.set("rows", comp.size)
+                sp.set("bytes", nbytes)
+            _FLUSH_S.observe(time.perf_counter() - t0)
+            _FLUSHES.inc()
+            _ROWS_FLUSHED.inc(comp.size)
+            _BYTES_FLUSHED.inc(nbytes)
+            _COMP_ROWS.observe(comp.size)
+            _COMP_BYTES.observe(nbytes)
+            # ingest accounting at flush granularity (never per-row): the
+            # delta of this index's insert+delete counters since last flush
+            ingested = self.stats["inserts"] + self.stats["deletes"]
+            _ROWS_INGESTED.inc(ingested - self._ingest_counted)
+            self._ingest_counted = ingested
+            _COMPONENTS.set(sum(1 for c in self.components if c.valid))
+            self._maybe_merge()
+            return comp
 
     def _maybe_merge(self) -> None:
         while True:
@@ -505,6 +704,14 @@ class LSMIndex:
         component (then they collapse).  Row-mode inputs (secondary
         indexes, forced row path) merge via the classic dict pass."""
         comps = list(comps)                    # newest -> oldest
+        self._lock.acquire()
+        try:
+            return self._merge_locked(comps, crash_before_validity)
+        finally:
+            self._lock.release()
+
+    def _merge_locked(self, comps: List[Component],
+                      crash_before_validity: bool) -> Component:
         t0 = time.perf_counter()
         with _obs.span("lsm.merge", components=len(comps)) as sp:
             includes_oldest = self.components and comps[-1] is [
@@ -534,12 +741,19 @@ class LSMIndex:
             ids = {c.comp_id for c in comps}
             pos = min(i for i, c in enumerate(self.components)
                       if c.comp_id in ids)
-            self.components.insert(pos + 0, out)  # shadow next to inputs
+            # copy-on-write shadow install next to the inputs
+            shadowed = list(self.components)
+            shadowed.insert(pos, out)
+            self.components = shadowed
             if crash_before_validity:
                 return out
             out.valid = True                   # atomic swap: install + retire
             self.components = [c for c in self.components
                                if c.comp_id not in ids]
+            self._version += 1
+            # replaced components physically retire now unless a pinned
+            # snapshot still references them (then: deferred to unpin)
+            self._retire_replaced(comps)
             self.stats["merges"] += 1
             self.stats["merged_rows"] += out.size
             nbytes = component_nbytes(out)

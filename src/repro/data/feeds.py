@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence
@@ -35,8 +36,16 @@ import numpy as np
 from .. import obs as _obs
 
 __all__ = ["Adaptor", "SyntheticTokenAdaptor", "FileAdaptor", "SocketAdaptor",
-           "FeedJoint", "Feed", "RedundantIntake", "BatchAssembler",
-           "DatasetSink"]
+           "FeedJoint", "FeedOverflow", "Feed", "RedundantIntake",
+           "BatchAssembler", "DatasetSink"]
+
+
+class FeedOverflow(RuntimeError):
+    """Raised by ``FeedJoint.publish`` under the ``overflow='raise'``
+    policy when buffering the new records would evict records a live
+    subscriber has not consumed yet.  The joint is left unchanged, so
+    the publisher can apply backpressure and retry after consumers
+    catch up."""
 
 
 # ---------------------------------------------------------------------------
@@ -160,17 +169,35 @@ class RedundantIntake(Adaptor):
 
 class FeedJoint:
     """A tap on a feed's dataflow: buffers records and lets any number of
-    subscribers consume at their own pace (bounded replay window)."""
+    subscribers consume at their own pace (bounded replay window).
 
-    def __init__(self, window: int = 4096, name: Optional[str] = None):
+    ``overflow`` selects what happens when a publish would push records a
+    live subscriber has not consumed yet out of the window:
+
+    * ``"drop"`` (default) — evict them anyway but count every unconsumed
+      record lost in the ``feed.joint.<name>.dropped`` obs counter; the
+      lagging subscriber's next ``consume`` raises as before.
+    * ``"raise"`` — refuse the publish with :class:`FeedOverflow` and
+      leave the joint untouched, so the publisher can block/retry
+      (backpressure — the serving harness uses this).
+
+    Records every subscriber has consumed always retire silently.
+    """
+
+    def __init__(self, window: int = 4096, name: Optional[str] = None,
+                 overflow: str = "drop"):
+        assert overflow in ("drop", "raise"), overflow
         self.window = window
         self.name = name
+        self.overflow = overflow
         self.buffer: collections.deque = collections.deque()
         self.base = 0                      # cursor of buffer[0]
         self.subscribers: Dict[str, int] = {}
         self.published = 0
+        self.dropped = 0                   # unconsumed records evicted
         self._first_publish_t: Optional[float] = None
         self._last_publish_t: Optional[float] = None
+        self._lock = threading.RLock()     # concurrent pump/consume safety
 
     @property
     def head(self) -> int:
@@ -185,37 +212,56 @@ class FeedJoint:
         return self.published / elapsed if elapsed > 0 else 0.0
 
     def publish(self, records: Sequence[Any]) -> None:
-        now = time.perf_counter()
-        if self._first_publish_t is None:
-            self._first_publish_t = now
-        self._last_publish_t = now
-        self.published += len(records)
-        _obs.counter(f"feed.joint.{self.name or 'joint'}.published").inc(
-            len(records))
-        self.buffer.extend(records)
-        # retire records every subscriber has consumed, bounded by window
-        floor = min(self.subscribers.values(), default=self.head)
-        while len(self.buffer) > self.window or self.base < floor:
-            if self.base >= floor and len(self.buffer) <= self.window:
-                break
-            self.buffer.popleft()
-            self.base += 1
+        with self._lock:
+            floor = min(self.subscribers.values(), default=self.head)
+            if self.overflow == "raise":
+                retirable = max(0, floor - self.base)
+                if len(self.buffer) - retirable + len(records) > self.window:
+                    raise FeedOverflow(
+                        f"joint {self.name or 'joint'}: publishing "
+                        f"{len(records)} records would evict unconsumed "
+                        f"records (floor={floor}, window={self.window})")
+            now = time.perf_counter()
+            if self._first_publish_t is None:
+                self._first_publish_t = now
+            self._last_publish_t = now
+            self.published += len(records)
+            _obs.counter(f"feed.joint.{self.name or 'joint'}.published").inc(
+                len(records))
+            self.buffer.extend(records)
+            # retire records every subscriber has consumed; past the
+            # subscriber floor evict only on window overflow, and count
+            # each unconsumed record lost
+            dropped = 0
+            while len(self.buffer) > self.window or self.base < floor:
+                if self.base >= floor and len(self.buffer) <= self.window:
+                    break
+                self.buffer.popleft()
+                if self.base >= floor:
+                    dropped += 1
+                self.base += 1
+            if dropped:
+                self.dropped += dropped
+                _obs.counter(
+                    f"feed.joint.{self.name or 'joint'}.dropped").inc(dropped)
 
     def subscribe(self, name: str, cursor: Optional[int] = None) -> None:
-        self.subscribers[name] = self.head if cursor is None else cursor
+        with self._lock:
+            self.subscribers[name] = self.head if cursor is None else cursor
 
     def consume(self, name: str, n: int) -> List[Any]:
-        cur = self.subscribers[name]
-        if cur < self.base:
-            raise RuntimeError(
-                f"subscriber {name} fell behind the replay window "
-                f"({cur} < {self.base}); re-seed from checkpoint")
-        start = cur - self.base
-        out = list(itertools.islice(self.buffer, start, start + n))
-        self.subscribers[name] = cur + len(out)
-        _obs.gauge(f"feed.joint.{self.name or 'joint'}.lag.{name}").set(
-            self.head - self.subscribers[name])
-        return out
+        with self._lock:
+            cur = self.subscribers[name]
+            if cur < self.base:
+                raise RuntimeError(
+                    f"subscriber {name} fell behind the replay window "
+                    f"({cur} < {self.base}); re-seed from checkpoint")
+            start = cur - self.base
+            out = list(itertools.islice(self.buffer, start, start + n))
+            self.subscribers[name] = cur + len(out)
+            _obs.gauge(f"feed.joint.{self.name or 'joint'}.lag.{name}").set(
+                self.head - self.subscribers[name])
+            return out
 
 
 @dataclass
@@ -232,7 +278,8 @@ class Feed:
     store: Optional[Callable[[Sequence[Any]], None]] = None
     source_joint: Optional[FeedJoint] = None
     joint: FeedJoint = field(default_factory=FeedJoint)
-    cursor: int = 0
+    cursor: int = 0            # records *taken in* from the source
+    last_intake: int = 0       # intake size of the most recent pump
 
     def __post_init__(self):
         assert (self.adaptor is None) != (self.source_joint is None), \
@@ -243,19 +290,26 @@ class Feed:
             self.source_joint.subscribe(self.name)
 
     def pump(self, n: int) -> int:
-        """Run one intake->compute->store cycle of up to n records."""
+        """Run one intake->compute->store cycle of up to n records.
+        Returns the *post-filter* record count delivered downstream; the
+        checkpoint ``cursor`` advances by the *pre-filter* intake count
+        (also exposed as ``last_intake``) so a ``restore()`` seeks the
+        adaptor to the true source offset even when UDFs filter records
+        — otherwise replay would re-deliver already-processed records."""
         with _obs.span("feed.pump." + self.name) as sp:
             if self.adaptor is not None:
                 recs = self.adaptor.next_batch(n)
             else:
                 recs = self.source_joint.consume(self.name, n)
+            intake = len(recs)
             for udf in self.udfs:
                 recs = [udf(r) for r in recs]
                 recs = [r for r in recs if r is not None]  # UDFs may filter
             self.joint.publish(recs)
             if self.store is not None:
                 self.store(recs)
-            self.cursor += len(recs)
+            self.cursor += intake
+            self.last_intake = intake
             sp.set("records", len(recs))
         _obs.counter(f"feed.{self.name}.records").inc(len(recs))
         _obs.histogram(f"feed.{self.name}.batch_records").observe(len(recs))
@@ -263,14 +317,21 @@ class Feed:
 
     # -- checkpointable state (exact-resume deliverable) -------------------
     def state(self) -> Dict[str, Any]:
-        return {"name": self.name, "cursor": self.cursor,
-                "subscribers": dict(self.joint.subscribers)}
+        st = {"name": self.name, "cursor": self.cursor,
+              "subscribers": dict(self.joint.subscribers)}
+        if self.source_joint is not None:
+            # a secondary feed's own consume position lives in the
+            # *source* joint's subscriber table, not in self.joint
+            st["source_cursor"] = self.source_joint.subscribers[self.name]
+        return st
 
     def restore(self, state: Dict[str, Any]) -> None:
         self.cursor = state["cursor"]
         if self.adaptor is not None:
             self.adaptor.seek(self.cursor)
         self.joint.subscribers.update(state.get("subscribers", {}))
+        if self.source_joint is not None and "source_cursor" in state:
+            self.source_joint.subscribe(self.name, state["source_cursor"])
 
 
 class DatasetSink:
@@ -301,11 +362,16 @@ class DatasetSink:
 
     def __call__(self, records: Sequence[Any]) -> None:
         self.backlog.extend(records)
-        while len(self.backlog) >= self.batch_size:
-            chunk = self.backlog[:self.batch_size]
-            self.backlog = self.backlog[self.batch_size:]
+        # drain by index in one pass — re-slicing the backlog per chunk
+        # is O(n^2) on large pumps
+        pos = 0
+        while len(self.backlog) - pos >= self.batch_size:
+            chunk = self.backlog[pos:pos + self.batch_size]
+            pos += self.batch_size
             self.dataset.insert_batch(chunk)
             self._record_batch(len(chunk))
+        if pos:
+            del self.backlog[:pos]
         _obs.gauge(f"feed.sink.{self._ds_name}.backlog").set(
             len(self.backlog))
 

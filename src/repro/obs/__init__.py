@@ -75,10 +75,20 @@ Metric name registry (``metrics.snapshot()`` keys):
                                 flushed/merged (a freshness sample, not a
                                 cross-index aggregate)
 
+  Snapshot pinning — LSM storage (core/lsm):
+    lsm.pins                    counter: snapshot views pinned
+    lsm.deferred_retires        counter: replaced components whose
+                                physical retirement waited on a pin
+    lsm.pinned_snapshots        gauge: currently-live pinned views
+
   Feeds (data/feeds):
     feed.<feed>.records             counter: records stored by the feed
     feed.<feed>.batch_records       histogram: records per pump cycle
     feed.joint.<joint>.published    counter: records published to a joint
+    feed.joint.<joint>.dropped      counter: *unconsumed* records evicted
+                                    past the replay window (overflow
+                                    policy "drop"; fully-consumed
+                                    retirements are never counted)
     feed.joint.<joint>.lag.<sub>    gauge: head - subscriber cursor after
                                     each consume (records behind)
     feed.sink.<dataset>.records     counter: records delivered via
@@ -88,6 +98,20 @@ Metric name registry (``metrics.snapshot()`` keys):
                                     full micro-batch (sink lag)
     per-joint ingest rate: ``FeedJoint.rate()`` (records/sec over the
     joint's publish lifetime).
+
+  Serving harness (serve/harness):
+    serve.ingest.acked          counter: records acknowledged to storage
+                                (after insert_batch returned)
+    serve.admission.rejected    counter: queries shed by the admission
+                                controller (no slot within timeout)
+    serve.admission.inflight    gauge: admitted queries currently running
+    serve.query.latency_s       histogram: per-query wall time (p50/p99
+                                are the serve_bench report numbers)
+    serve.query.torn_reads      counter: snapshot scans violating the
+                                lane-prefix consistency oracle
+    serve.query.lost_acks       counter: snapshot scans missing records
+                                acked before the pin
+    serve.recoveries            counter: crash_and_recover cycles
 
 Executor-level accounting stays on ``storage/query.ExecStats`` (per-query
 scope): ``kernel_dispatches`` / ``h2d_bytes`` / ``d2h_bytes`` are the

@@ -1,0 +1,511 @@
+"""Admission-controlled concurrent serving loop: feeds in, queries out.
+
+One :class:`ServeHarness` owns a :class:`PartitionedDataset` plus
+
+* N ingest lanes — ``Feed`` pump threads whose store stage is a
+  :class:`BoundedSink` (a bounded ``queue.Queue``: *block*, never drop)
+  drained by one :class:`SinkWorker` per lane delivering micro-batches
+  through ``insert_batch`` and acknowledging primary keys only after
+  the insert returns;
+* M :class:`QueryWorker` threads behind an :class:`AdmissionController`
+  semaphore, alternating snapshot-isolated verification scans
+  (``dataset.pin()``) with executor queries
+  (``run_query(..., snapshot=True)``).
+
+**The consistency invariant.**  Lane ``l`` of ``L`` inserts primary keys
+``l, l+L, l+2L, ...`` in order, so any snapshot must contain, per lane,
+exactly a *prefix* of that lane's key sequence — and at least every key
+acknowledged before the snapshot was pinned.  A gap in a lane is a torn
+read; a count below the pre-pin ack floor is a lost acknowledged write.
+Both are counted (``serve.query.torn_reads`` / ``serve.query.lost_acks``)
+on every verification scan, making the stress benchmark an oracle, not a
+smoke test.
+
+**Fault tolerance.**  ``checkpoint()`` parks the pumps, drains the
+queues, and captures every feed's cursor state; ``crash_and_recover()``
+rebuilds the dataset from (valid components + WAL), restores the feeds
+from the last checkpoint, and resumes — records between checkpoint and
+crash are replayed at-least-once and deduplicated by PK upsert.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from .. import obs as _obs
+from ..core import algebra as A
+from ..data.feeds import Adaptor, Feed, FeedJoint
+from ..storage.query import run_query
+
+__all__ = ["AdmissionController", "BoundedSink", "IngestPump", "QueryWorker",
+           "ServeHarness", "ServeReport", "SinkWorker",
+           "StridedRecordAdaptor"]
+
+
+# ---------------------------------------------------------------------------
+# Workload pieces
+# ---------------------------------------------------------------------------
+
+def _default_record(pk: int) -> Dict[str, Any]:
+    return {"pk": int(pk),
+            "val": int((pk * 2654435761) % 100003),
+            "text": f"rec-{pk % 97}"}
+
+
+class StridedRecordAdaptor(Adaptor):
+    """Deterministic record source for ingest lane ``lane`` of ``lanes``:
+    the i-th record carries primary key ``i*lanes + lane``, so concurrent
+    lanes never collide and each lane's key sequence is monotone — the
+    property the snapshot-consistency oracle checks.  Seekable, so a feed
+    ``restore()`` replays exactly."""
+
+    def __init__(self, lane: int, lanes: int,
+                 make_record: Optional[Callable[[int], Dict[str, Any]]] = None,
+                 limit: Optional[int] = None):
+        self.lane = int(lane)
+        self.lanes = int(lanes)
+        self.make_record = make_record or _default_record
+        self.limit = limit
+        self.cursor = 0
+
+    def next_batch(self, n: int) -> List[Any]:
+        if self.limit is not None:
+            n = max(0, min(n, self.limit - self.cursor))
+        out = [self.make_record((self.cursor + j) * self.lanes + self.lane)
+               for j in range(n)]
+        self.cursor += len(out)
+        return out
+
+    def seek(self, cursor: int) -> None:
+        self.cursor = cursor
+
+
+class BoundedSink:
+    """Feed store stage pushing micro-batches onto a bounded queue.  A
+    full queue *blocks* the pump (backpressure) instead of dropping —
+    the fix for silent feed-side loss under a slow storage stage."""
+
+    def __init__(self, q: "queue.Queue[List[Any]]"):
+        self.q = q
+
+    def __call__(self, records: Sequence[Any]) -> None:
+        if records:
+            self.q.put(list(records), block=True)
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+class AdmissionController:
+    """Caps in-flight queries with a semaphore.  ``admit()`` either
+    grants a slot within ``timeout`` seconds or rejects (counted in
+    ``serve.admission.rejected``) — open-loop clients keep offering
+    load; the controller sheds it instead of queueing unboundedly."""
+
+    def __init__(self, max_inflight: int = 8, timeout: float = 0.2):
+        self.max_inflight = int(max_inflight)
+        self.timeout = float(timeout)
+        self._sem = threading.Semaphore(self.max_inflight)
+        self._lock = threading.Lock()
+        self.admitted = 0
+        self.rejected = 0
+        self._inflight = _obs.gauge("serve.admission.inflight")
+        self._rejected_c = _obs.counter("serve.admission.rejected")
+
+    @contextmanager
+    def admit(self) -> Iterator[bool]:
+        ok = self._sem.acquire(timeout=self.timeout)
+        if not ok:
+            with self._lock:
+                self.rejected += 1
+            self._rejected_c.inc()
+            yield False
+            return
+        with self._lock:
+            self.admitted += 1
+            self._inflight.set(self.max_inflight - self._sem._value)
+        try:
+            yield True
+        finally:
+            self._sem.release()
+
+
+# ---------------------------------------------------------------------------
+# Worker threads
+# ---------------------------------------------------------------------------
+
+class IngestPump(threading.Thread):
+    """Runs one feed's intake→compute→store cycle until stopped or the
+    adaptor is exhausted.  Parks (without consuming) while the harness
+    gate is closed, so ``checkpoint()`` can quiesce the pipeline."""
+
+    def __init__(self, feed: Feed, batch: int, gate: threading.Event,
+                 stop: threading.Event):
+        super().__init__(daemon=True, name=f"pump-{feed.name}")
+        self.feed = feed
+        self.batch = int(batch)
+        self.gate = gate
+        self.stop_ev = stop
+        self.parked = threading.Event()
+        self.exhausted = threading.Event()
+
+    def run(self) -> None:
+        while not self.stop_ev.is_set():
+            if not self.gate.is_set():
+                self.parked.set()
+                self.gate.wait(0.02)
+                continue
+            self.parked.clear()
+            self.feed.pump(self.batch)
+            if self.feed.last_intake == 0:       # end of stream
+                self.exhausted.set()
+                self.parked.set()
+                self.stop_ev.wait(0.02)
+        self.parked.set()
+
+
+class SinkWorker(threading.Thread):
+    """Drains one ingest lane's bounded queue into the dataset and
+    acknowledges primary keys *after* ``insert_batch`` returns — the ack
+    list is the ground truth the consistency oracle checks against."""
+
+    def __init__(self, harness: "ServeHarness", lane: int,
+                 q: "queue.Queue[List[Any]]", stop: threading.Event):
+        super().__init__(daemon=True, name=f"sink-{lane}")
+        self.h = harness
+        self.lane = lane
+        self.q = q
+        self.stop_ev = stop
+
+    def run(self) -> None:
+        ds, pk = self.h.dataset, self.h.dataset.pk
+        acked_c = _obs.counter("serve.ingest.acked")
+        while True:
+            try:
+                chunk = self.q.get(timeout=0.02)
+            except queue.Empty:
+                if self.stop_ev.is_set():
+                    return
+                continue
+            try:
+                ds.insert_batch(chunk)
+                pks = [r[pk] for r in chunk]
+                with self.h._ack_lock:
+                    # a set, not a list: at-least-once replay after a
+                    # crash re-delivers (and re-acks) records, and the
+                    # consistency floor must count *distinct* acks
+                    self.h.acked[self.lane].update(pks)
+                acked_c.inc(len(pks))
+            finally:
+                self.q.task_done()
+
+
+class QueryWorker(threading.Thread):
+    """Open-loop query client: on every admitted slot it runs either a
+    snapshot verification scan (the consistency oracle) or an executor
+    query over a pinned snapshot, and observes the latency histogram."""
+
+    def __init__(self, harness: "ServeHarness", idx: int,
+                 stop: threading.Event):
+        super().__init__(daemon=True, name=f"query-{idx}")
+        self.h = harness
+        self.idx = idx
+        self.stop_ev = stop
+        self.queries = 0
+        self.torn = 0
+        self.lost = 0
+        self.errors: List[str] = []
+
+    def run(self) -> None:
+        lat = _obs.histogram("serve.query.latency_s")
+        torn_c = _obs.counter("serve.query.torn_reads")
+        lost_c = _obs.counter("serve.query.lost_acks")
+        i = 0
+        while not self.stop_ev.is_set():
+            with self.h.admission.admit() as ok:
+                if not ok:
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    if i % 2 == 0:
+                        torn, lost = self.h.verify_snapshot()
+                        if torn:
+                            self.torn += 1
+                            torn_c.inc()
+                        if lost:
+                            self.lost += 1
+                            lost_c.inc()
+                    else:
+                        self.h.executor_query(self.idx + i)
+                except Exception as e:            # noqa: BLE001
+                    self.errors.append(f"{type(e).__name__}: {e}")
+                lat.observe(time.perf_counter() - t0)
+                self.queries += 1
+                i += 1
+
+
+# ---------------------------------------------------------------------------
+# Report + harness
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeReport:
+    """Outcome of one mixed-workload run (see ``as_dict`` for the JSON
+    schema serve_bench emits)."""
+    duration_s: float
+    ingest_acked: int
+    ingest_rate: float            # acked records / wall second
+    queries: int
+    admission_rejected: int
+    query_p50_ms: Optional[float]
+    query_p99_ms: Optional[float]
+    torn_reads: int
+    lost_acks: int                # live-scan floor violations
+    lost_acked_final: int         # acked pks missing from the final scan
+    recoveries: int
+    query_errors: List[str] = field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "duration_s": self.duration_s,
+            "ingest_acked": self.ingest_acked,
+            "ingest_rate": self.ingest_rate,
+            "queries": self.queries,
+            "admission_rejected": self.admission_rejected,
+            "query_p50_ms": self.query_p50_ms,
+            "query_p99_ms": self.query_p99_ms,
+            "torn_reads": self.torn_reads,
+            "lost_acks": self.lost_acks,
+            "lost_acked_final": self.lost_acked_final,
+            "recoveries": self.recoveries,
+            "query_errors": self.query_errors[:8],
+        }
+
+
+class ServeHarness:
+    """Concurrent serving loop over one ``PartitionedDataset``: N ingest
+    lanes + M query workers under admission control.  ``run(duration_s)``
+    is the one-call driver; ``start()``/``stop()`` plus ``checkpoint()``
+    and ``crash_and_recover()`` compose for fault-injection tests."""
+
+    def __init__(self, dataset: Any, *, n_ingest: int = 2, n_query: int = 2,
+                 pump_batch: int = 64, queue_depth: int = 8,
+                 max_inflight: int = 8,
+                 make_record: Optional[Callable[[int], Dict[str, Any]]] = None,
+                 records_per_lane: Optional[int] = None,
+                 joint_window: int = 4096):
+        self.dataset = dataset
+        self.n_ingest = int(n_ingest)
+        self.n_query = int(n_query)
+        self.pump_batch = int(pump_batch)
+        self.queue_depth = int(queue_depth)
+        self.joint_window = int(joint_window)
+        self.admission = AdmissionController(max_inflight)
+        self.acked: List[set] = [set() for _ in range(self.n_ingest)]
+        self._ack_lock = threading.Lock()
+        self.recoveries = 0
+        self.feeds: List[Feed] = []
+        self.queues: List["queue.Queue[List[Any]]"] = []
+        for lane in range(self.n_ingest):
+            q: "queue.Queue[List[Any]]" = queue.Queue(maxsize=queue_depth)
+            adaptor = StridedRecordAdaptor(lane, self.n_ingest,
+                                           make_record=make_record,
+                                           limit=records_per_lane)
+            feed = Feed(name=f"{dataset.name}-ingest{lane}",
+                        adaptor=adaptor, store=BoundedSink(q),
+                        joint=FeedJoint(window=self.joint_window,
+                                        name=f"{dataset.name}-ingest{lane}"))
+            self.queues.append(q)
+            self.feeds.append(feed)
+        self._ckpt: Optional[List[Dict[str, Any]]] = None
+        self._gate = threading.Event()
+        self._stop = threading.Event()
+        self._pumps: List[IngestPump] = []
+        self._sinks: List[SinkWorker] = []
+        self._workers: List[QueryWorker] = []
+        self._done_workers: List[QueryWorker] = []
+        self._t0: Optional[float] = None
+        self._elapsed = 0.0
+
+    # -- query surface ------------------------------------------------------
+    def verify_snapshot(self) -> "tuple[bool, bool]":
+        """Pin a snapshot and check the lane-prefix consistency oracle.
+        Returns (torn, lost): ``torn`` — some lane's key set is not a
+        prefix of its insertion order; ``lost`` — some lane holds fewer
+        keys than were acknowledged before the pin."""
+        lanes = self.n_ingest
+        with self._ack_lock:
+            floors = [len(a) for a in self.acked]
+        snap = self.dataset.pin()
+        try:
+            parts = [snap.partition_pk_array(i)
+                     for i in range(self.dataset.num_partitions)]
+        finally:
+            snap.release()
+        parts = [p for p in parts if p.size]
+        pks = (np.concatenate(parts) if parts
+               else np.empty(0, dtype=np.int64)).astype(np.int64)
+        torn = lost = False
+        for lane in range(lanes):
+            lane_pks = pks[pks % lanes == lane]
+            k = int(lane_pks.size)
+            if k and (int(lane_pks.max()) // lanes != k - 1
+                      or np.unique(lane_pks).size != k):
+                torn = True
+            if k < floors[lane]:
+                lost = True
+        return torn, lost
+
+    def executor_query(self, salt: int) -> int:
+        """One executor query through the optimizer + row/columnar engine
+        over a pinned snapshot (``run_query(snapshot=True)``)."""
+        pk = self.dataset.pk
+        r = salt % 7
+        plan = A.select(A.scan(self.dataset.name),
+                        pred=lambda row: row[pk] % 7 == r,
+                        fields=[pk])
+        rows, _ = run_query(plan, {self.dataset.name: self.dataset},
+                            snapshot=True)
+        return len(rows)
+
+    # -- lifecycle ----------------------------------------------------------
+    def _spawn(self) -> None:
+        self._stop = threading.Event()
+        self._pumps = [IngestPump(f, self.pump_batch, self._gate, self._stop)
+                       for f in self.feeds]
+        self._sinks = [SinkWorker(self, lane, q, self._stop)
+                       for lane, q in enumerate(self.queues)]
+        self._workers = [QueryWorker(self, j, self._stop)
+                         for j in range(self.n_query)]
+        for t in self._pumps + self._sinks + self._workers:
+            t.start()
+
+    def start(self) -> None:
+        if self._ckpt is None:
+            self._ckpt = [f.state() for f in self.feeds]   # initial cursors
+        self._gate.set()
+        self._t0 = time.perf_counter()
+        self._spawn()
+
+    def stop(self) -> None:
+        """Quiesce and join every thread (queues drain first, so all
+        pumped records are delivered and acked)."""
+        self._quiesce()
+        self._stop.set()
+        for t in self._pumps + self._sinks + self._workers:
+            t.join(timeout=10.0)
+        self._done_workers.extend(self._workers)
+        self._workers = []
+        if self._t0 is not None:
+            self._elapsed += time.perf_counter() - self._t0
+            self._t0 = None
+
+    def _quiesce(self) -> None:
+        self._gate.clear()
+        for p in self._pumps:
+            p.parked.wait(timeout=10.0)
+        for q in self.queues:
+            q.join()                       # every delivered chunk acked
+
+    def exhausted(self) -> bool:
+        return all(p.exhausted.is_set() for p in self._pumps)
+
+    def checkpoint(self) -> List[Dict[str, Any]]:
+        """Park the pumps, drain the queues, capture every feed cursor,
+        resume.  The captured state is durable: everything at or before
+        each cursor has been acked to storage."""
+        self._quiesce()
+        self._ckpt = [f.state() for f in self.feeds]
+        self._gate.set()
+        return self._ckpt
+
+    def crash_and_recover(self) -> None:
+        """Kill the pipeline mid-flight, rebuild the dataset from (valid
+        components + WAL), restore feeds from the last checkpoint and
+        resume pumping — at-least-once replay; PK upserts dedupe."""
+        self._stop.set()
+        self._gate.set()                   # unblock parked pumps to exit
+        for t in self._pumps + self._sinks + self._workers:
+            t.join(timeout=10.0)
+        self._done_workers.extend(self._workers)
+        for q in self.queues:              # drop in-flight chunks: the
+            while True:                    # replay below re-delivers them
+                try:
+                    q.get_nowait()
+                    q.task_done()
+                except queue.Empty:
+                    break
+        self.dataset.crash_and_recover()
+        self.recoveries += 1
+        _obs.counter("serve.recoveries").inc()
+        if self._ckpt is not None:
+            for f, st in zip(self.feeds, self._ckpt):
+                f.restore(st)
+        self._gate.set()
+        self._spawn()
+
+    # -- driver -------------------------------------------------------------
+    def run(self, duration_s: float = 2.0,
+            checkpoint_after: Optional[int] = None,
+            crash_after: Optional[int] = None) -> ServeReport:
+        """Drive the mixed workload for ``duration_s`` (or until every
+        lane's adaptor is exhausted).  ``checkpoint_after`` /
+        ``crash_after`` are total-acked-record thresholds: once acks
+        pass ``checkpoint_after`` a checkpoint is taken, and once they
+        pass ``crash_after`` the pipeline is crashed and recovered —
+        everything acked between the two replays at-least-once."""
+        self.start()
+        deadline = time.perf_counter() + duration_s
+        did_ckpt = checkpoint_after is None
+        did_crash = crash_after is None
+        while time.perf_counter() < deadline:
+            with self._ack_lock:
+                total = sum(len(a) for a in self.acked)
+            if not did_ckpt and total >= checkpoint_after:
+                self.checkpoint()
+                did_ckpt = True
+            if did_ckpt and not did_crash and total >= crash_after:
+                self.crash_and_recover()
+                did_crash = True
+            if self.exhausted() and did_ckpt and did_crash:
+                break
+            time.sleep(0.005)
+        self.stop()
+        return self.report()
+
+    def report(self) -> ServeReport:
+        lat = _obs.histogram("serve.query.latency_s")
+        with self._ack_lock:
+            acked_sets = [set(a) for a in self.acked]   # defensive copies
+        n_acked = sum(len(s) for s in acked_sets)
+        final = set()
+        for i in range(self.dataset.num_partitions):
+            final.update(int(x) for x in
+                         self.dataset.partition_pk_array(i).tolist())
+        lost_final = sum(len(s - final) for s in acked_sets)
+        workers = self._done_workers + self._workers
+        elapsed = self._elapsed if self._elapsed > 0 else 1e-9
+        p50 = lat.percentile(50)
+        p99 = lat.percentile(99)
+        return ServeReport(
+            duration_s=elapsed,
+            ingest_acked=n_acked,
+            ingest_rate=n_acked / elapsed,
+            queries=sum(w.queries for w in workers),
+            admission_rejected=self.admission.rejected,
+            query_p50_ms=None if p50 is None else p50 * 1e3,
+            query_p99_ms=None if p99 is None else p99 * 1e3,
+            torn_reads=sum(w.torn for w in workers),
+            lost_acks=sum(w.lost for w in workers),
+            lost_acked_final=lost_final,
+            recoveries=self.recoveries,
+            query_errors=[e for w in workers for e in w.errors],
+        )

@@ -47,6 +47,7 @@ Faithful structure:
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -54,13 +55,14 @@ import numpy as np
 
 from ..core import adm
 from ..core.functions import cells_covering_circle
-from ..core.lsm import LSMIndex, TOMBSTONE, TieredMergePolicy, WALRecord, \
-    key_array, recover
+from ..core.lsm import LSMIndex, LSMView, TOMBSTONE, TieredMergePolicy, \
+    WALRecord, key_array, recover
 from ..columnar.batch import ColumnBatch, promotes_lossless
 from ..columnar.postings import FieldPostings, cell_codes_for_query
 from ..columnar.schema import ColumnSchema
 
-__all__ = ["PartitionedDataset", "hash_partition", "hash_partition_array"]
+__all__ = ["PartitionedDataset", "DatasetSnapshot", "hash_partition",
+           "hash_partition_array"]
 
 
 def hash_partition(key: Any, num_partitions: int) -> int:
@@ -91,6 +93,51 @@ def hash_partition_array(keys: np.ndarray, num_partitions: int) -> np.ndarray:
     h = (keys.astype(np.uint64)
          * np.uint64(11400714819323198485)) >> np.uint64(40)
     return (h % np.uint64(num_partitions)).astype(np.int64)
+
+
+class _BatchGate:
+    """Shared/exclusive gate making snapshots *batch*-consistent cuts.
+
+    Writers (``insert`` / ``insert_batch`` / ``delete``) hold the gate
+    in shared mode, so concurrent batches on different partitions still
+    proceed in parallel; ``pin()`` takes it exclusive for the brief
+    moment it pins every partition's LSM view.  Without it a snapshot
+    could land *between* the per-partition sub-inserts of one
+    ``insert_batch`` and observe half a micro-batch.  Exclusive waiters
+    get priority so a steady write load cannot starve snapshot pins."""
+
+    __slots__ = ("_cv", "_shared", "_excl", "_excl_waiting")
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._shared = 0
+        self._excl = False
+        self._excl_waiting = 0
+
+    def acquire_shared(self) -> None:
+        with self._cv:
+            while self._excl or self._excl_waiting:
+                self._cv.wait()
+            self._shared += 1
+
+    def release_shared(self) -> None:
+        with self._cv:
+            self._shared -= 1
+            if self._shared == 0:
+                self._cv.notify_all()
+
+    def acquire_exclusive(self) -> None:
+        with self._cv:
+            self._excl_waiting += 1
+            while self._excl or self._shared:
+                self._cv.wait()
+            self._excl_waiting -= 1
+            self._excl = True
+
+    def release_exclusive(self) -> None:
+        with self._cv:
+            self._excl = False
+            self._cv.notify_all()
 
 
 @dataclass
@@ -133,11 +180,18 @@ class PartitionedDataset:
         # columnar engine: open fields seen so far (name -> column kind)
         self._open_schema = ColumnSchema()
         self._declared = tuple(f.name for f in dtype.fields)
-        # per-partition assembled-scan cache, invalidated by any mutation
-        # (keyed on component ids + mutation counters + recovery epoch:
-        # recovery replaces the LSMIndex, resetting its counters, so the
-        # epoch keeps pre-crash cache entries from colliding)
-        self._scan_cache: Dict[int, Dict[str, Any]] = {}
+        # assembled-scan cache keyed by (partition, recovery epoch, LSM
+        # version): the version is the snapshot-isolation key, so a query
+        # over a pinned snapshot and a live read at the same version share
+        # entries, and concurrent writers simply create entries under new
+        # keys instead of invalidating a reader's.  GC keeps, per
+        # partition, only the current version plus pinned ones (the epoch
+        # keeps pre-crash entries from colliding after recovery replaces
+        # the LSMIndex and resets its version counter).
+        self._scan_cache: Dict[Tuple[int, int, int], Dict[str, Any]] = {}
+        self._cache_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._batch_gate = _BatchGate()
         self._recover_epoch = 0
         self._schema_cache: Optional[Tuple[Any, ColumnSchema]] = None
 
@@ -195,12 +249,18 @@ class PartitionedDataset:
         insert is exactly one primary-index update — no old-version
         lookup, no per-index (key, pk) maintenance."""
         rec = self.dtype.validate(record)
-        self.stats["bytes_encoded"] += len(self.dtype.encode(rec))
+        nbytes = len(self.dtype.encode(rec))
         self._open_schema.observe_row(rec, self._declared)
         key = rec[self.pk]
         part = self.partitions[hash_partition(key, self.num_partitions)]
-        part.primary.insert(key, rec)
-        self.stats["inserts"] += 1
+        self._batch_gate.acquire_shared()
+        try:
+            part.primary.insert(key, rec)
+        finally:
+            self._batch_gate.release_shared()
+        with self._stats_lock:
+            self.stats["bytes_encoded"] += nbytes
+            self.stats["inserts"] += 1
 
     def insert_batch(self, records: Sequence[Dict[str, Any]]) -> None:
         """One-statement batch (paper Table 4: amortizes per-statement
@@ -239,17 +299,30 @@ class PartitionedDataset:
                              else hash_partition(key, P)]
             ks.append(key)
             rs.append(rec)
-        for part, (ks, rs) in zip(self.partitions, buckets):
-            if ks:
-                part.primary.insert_batch(ks, rs)
-        self.stats["inserts"] += len(records)
+        # shared gate: concurrent batches still run in parallel, but a
+        # snapshot pin (exclusive) can never observe half of this batch
+        self._batch_gate.acquire_shared()
+        try:
+            for part, (ks, rs) in zip(self.partitions, buckets):
+                if ks:
+                    part.primary.insert_batch(ks, rs)
+        finally:
+            self._batch_gate.release_shared()
+        with self._stats_lock:
+            self.stats["inserts"] += len(records)
 
     def delete(self, key: Any) -> bool:
         part = self.partitions[hash_partition(key, self.num_partitions)]
-        if part.primary.lookup(key) is None:
-            return False
-        part.primary.delete(key)
-        self.stats["deletes"] += 1
+        self._batch_gate.acquire_shared()
+        try:
+            with part.primary._lock:  # lookup+delete is one write step
+                if part.primary.lookup(key) is None:
+                    return False
+                part.primary.delete(key)
+        finally:
+            self._batch_gate.release_shared()
+        with self._stats_lock:
+            self.stats["deletes"] += 1
         return True
 
     # -- read paths ----------------------------------------------------------
@@ -259,8 +332,11 @@ class PartitionedDataset:
         part = self.partitions[hash_partition(key, self.num_partitions)]
         return part.primary.lookup(key)
 
-    def scan_partition(self, i: int) -> List[Dict[str, Any]]:
-        return [row for _, row in self.partitions[i].primary.items()]
+    def scan_partition(self, i: int,
+                       _view: Optional[LSMView] = None
+                       ) -> List[Dict[str, Any]]:
+        view = _view if _view is not None else self._view(i)
+        return [row for _, row in view.items()]
 
     def scan(self) -> List[Dict[str, Any]]:
         out: List[Dict[str, Any]] = []
@@ -290,35 +366,72 @@ class PartitionedDataset:
         return sch
 
     def _partition_version(self, i: int) -> Tuple:
-        prim = self.partitions[i].primary
-        return (self._recover_epoch,
-                tuple(c.comp_id for c in prim.components if c.valid),
-                prim.stats["inserts"], prim.stats["deletes"])
+        return (self._recover_epoch, self.partitions[i].primary.version)
 
-    def _live_selection(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _view(self, i: int) -> LSMView:
+        """Unfrozen point-in-time view of partition ``i`` (the default
+        for every read path; concurrent readers pass a pinned view from a
+        :class:`DatasetSnapshot` instead)."""
+        return self.partitions[i].primary.current_view()
+
+    def _cache_entry(self, i: int, view: LSMView) -> Dict[str, Any]:
+        """The scan-cache entry for (partition, view-version): idx/keys
+        live selection, assembled batches per projection, and memtable
+        postings.  Creation GCs stale versions for the partition."""
+        key = (i, self._recover_epoch, view.version)
+        entry = self._scan_cache.get(key)
+        if entry is None:
+            with self._cache_lock:
+                entry = self._scan_cache.get(key)
+                if entry is None:
+                    entry = self._scan_cache[key] = {
+                        "idx": None, "keys": None, "batches": {},
+                        "sec": {}, "ngram": {}}
+                    self._cache_gc(i)
+        return entry
+
+    def _cache_gc(self, i: int) -> None:
+        """Drop partition ``i`` cache entries whose version is neither
+        current nor pinned by a live snapshot (called under
+        ``_cache_lock``)."""
+        prim = self.partitions[i].primary
+        keep = set(prim.pinned_versions())
+        keep.add(prim.version)
+        epoch = self._recover_epoch
+        for key in [k for k in self._scan_cache
+                    if k[0] == i and (k[1] != epoch or k[2] not in keep)]:
+            self._scan_cache.pop(key, None)
+
+    def _cacheable(self, i: int, view: LSMView) -> bool:
+        """An entry computed from a frozen (pinned) view is always safe
+        to share; one computed from a live view is shared only if no
+        writer raced the computation (else it may be torn — return it to
+        this caller, never cache it)."""
+        return view.frozen \
+            or self.partitions[i].primary.version == view.version
+
+    def _live_selection(self, i: int,
+                        _view: Optional[LSMView] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
         """Newest-wins live-row selection for partition ``i``: positions
         ``idx`` into the memtable+components concat (newest first) and the
         pk array ``keys`` aligned with them, both ordered by ascending pk.
         Cached per storage version; computed from keys + tombstone flags
         only — no record decode, no column shred."""
-        ver = self._partition_version(i)
-        cache = self._scan_cache.get(i)
-        if cache is None or cache["ver"] != ver:
-            cache = {"ver": ver, "batches": {}, "idx": None, "keys": None}
-            self._scan_cache[i] = cache
+        view = _view if _view is not None else self._view(i)
+        cache = self._cache_entry(i, view)
         if cache["idx"] is not None:
             return cache["idx"], cache["keys"]
-        prim = self.partitions[i].primary
         key_arrays: List[np.ndarray] = []
         tombs: List[np.ndarray] = []
-        mem = prim.memtable            # newest version of any key it holds
+        mem = view.memtable            # newest version of any key it holds
         if mem:
             key_arrays.append(key_array(list(mem)))
             tombs.append(np.fromiter((r is TOMBSTONE
                                       for r in mem.values()),
                                      dtype=bool, count=len(mem)))
-        for comp in prim.components:   # newest first
-            if not comp.valid or comp.size == 0:
+        for comp in view.components:   # newest first
+            if comp.size == 0:
                 continue
             key_arrays.append(comp.keys)
             tombs.append(comp.tomb)
@@ -362,20 +475,24 @@ class PartitionedDataset:
                 keys = np.empty(len(idx), dtype=object)
                 for j, pos in enumerate(idx.tolist()):
                     keys[j] = flat_keys[pos]
-        cache["idx"] = idx
-        cache["keys"] = keys
+        if self._cacheable(i, view):
+            # keys before idx: concurrent readers test idx for presence
+            cache["keys"] = keys
+            cache["idx"] = idx
         return idx, keys
 
-    def partition_pk_array(self, i: int) -> np.ndarray:
+    def partition_pk_array(self, i: int,
+                           _view: Optional[LSMView] = None) -> np.ndarray:
         """Sorted live primary keys of partition ``i``, aligned row-for-row
         with ``scan_partition_batch(i, ...)``: element j is the pk of the
         scan batch's j-th record.  Sorted candidate-PK arrays from the
         secondary indexes intersect against this array to become position
         bitmaps over the cached ColumnBatches (columnar index access)."""
-        return self._live_selection(i)[1]
+        return self._live_selection(i, _view)[1]
 
     def scan_partition_batch(self, i: int,
-                             columns: Optional[Sequence[str]] = None
+                             columns: Optional[Sequence[str]] = None,
+                             _view: Optional[LSMView] = None
                              ) -> ColumnBatch:
         """Columnar scan of one partition, zero-copy over component
         storage: the immutable components' primary ColumnBatches are
@@ -385,30 +502,32 @@ class PartitionedDataset:
         from key + tombstone arrays only — gathers live rows.  Nothing
         is shredded except the (mutable) memtable tail.  Row order
         (sorted by pk) and contents match ``scan_partition`` exactly."""
+        view = _view if _view is not None else self._view(i)
         schema = self.columnar_schema()
         names = list(schema) if columns is None \
             else [c for c in columns if c in schema]
-        idx, _ = self._live_selection(i)
-        cache = self._scan_cache[i]
+        idx, _ = self._live_selection(i, view)
+        cache = self._cache_entry(i, view)
         ckey = tuple(names)
-        if ckey in cache["batches"]:
-            return cache["batches"][ckey]
-        prim = self.partitions[i].primary
+        cached = cache["batches"].get(ckey)
+        if cached is not None:
+            return cached
         batches: List[ColumnBatch] = []
-        mem = prim.memtable
+        mem = view.memtable
         if mem:
             batches.append(ColumnBatch.from_rows(
                 [({} if r is TOMBSTONE else r) for r in mem.values()],
                 schema, names))
-        for comp in prim.components:   # newest first, as in _live_selection
-            if not comp.valid or comp.size == 0:
+        for comp in view.components:   # newest first, as in _live_selection
+            if comp.size == 0:
                 continue
             batches.append(comp.as_batch(schema).project(names))
         if not batches:
             out = ColumnBatch.from_rows([], schema, names)
         else:
             out = ColumnBatch.concat(batches).take(idx)
-        cache["batches"][ckey] = out
+        if self._cacheable(i, view):
+            cache["batches"][ckey] = out
         return out
 
     # -- secondary postings probes (candidate reads) --------------------------
@@ -418,33 +537,33 @@ class PartitionedDataset:
                 f"no {kind} index on {self.name}.{fld}")
         return self._sec_spec(fld)
 
-    def _sec_sources(self, i: int, fld: str) -> Tuple[List[Tuple[int, Any]],
-                                                      int]:
-        """(offset, FieldPostings) per storage tier of partition ``i`` in
+    def _sec_sources(self, i: int, fld: str, view: LSMView
+                     ) -> Tuple[List[Tuple[int, Any]], int]:
+        """(offset, FieldPostings) per storage tier of the view in
         ``_live_selection`` concat order (memtable first, then components
         newest-first) plus the concat length — the secondary twin of
         ``_ngram_sources``.  Component postings were built at flush/merge
         (``ensure_sec_postings`` is a no-op then); the mutable memtable
         tail is indexed here, cached per storage version."""
         spec = self._sec_spec(fld)
-        prim = self.partitions[i].primary
         sources: List[Tuple[int, Any]] = []
         off = 0
-        mem = prim.memtable
+        mem = view.memtable
         if mem:
-            # the scan-cache entry is replaced on any mutation (storage
-            # version key), so the per-field memtable postings cached in
-            # it are automatically invalidated with the memtable
-            cache = self._scan_cache[i].setdefault("sec", {})
+            # cache entries are keyed by storage version, so the
+            # per-field memtable postings cached here can never be stale
+            cache = self._cache_entry(i, view)["sec"]
             p = cache.get(fld)
             if p is None or p.spec != spec:
                 vals = [None if r is TOMBSTONE else r.get(fld)
                         for r in mem.values()]
-                cache[fld] = p = FieldPostings.from_values(vals, spec)
+                p = FieldPostings.from_values(vals, spec)
+                if self._cacheable(i, view):
+                    cache[fld] = p
             sources.append((0, p))
             off = len(mem)
-        for comp in prim.components:           # newest first
-            if not comp.valid or comp.size == 0:
+        for comp in view.components:           # newest first
+            if comp.size == 0:
                 continue
             sources.append((off, comp.ensure_sec_postings(fld, spec)))
             off += comp.size
@@ -464,7 +583,8 @@ class PartitionedDataset:
         all_pos = np.concatenate(parts) if len(parts) > 1 else parts[0]
         return t_occurrence_mask(all_pos, total, 1)[idx]
 
-    def secondary_candidate_mask(self, i: int, fld: str, lo: Any, hi: Any
+    def secondary_candidate_mask(self, i: int, fld: str, lo: Any, hi: Any,
+                                 _view: Optional[LSMView] = None
                                  ) -> np.ndarray:
         """Secondary B+-tree range probe -> candidate bitmap over
         partition ``i``'s scan positions (aligned with
@@ -473,16 +593,19 @@ class PartitionedDataset:
         one contiguous positions slice — no (key, pk) pair is ever
         materialized and no python list is walked."""
         self._require_sec(fld, "btree")
-        idx, _ = self._live_selection(i)
+        view = _view if _view is not None else self._view(i)
+        idx, _ = self._live_selection(i, view)
         if not len(idx):
             return np.zeros(0, dtype=bool)
-        sources, total = self._sec_sources(i, fld)
+        sources, total = self._sec_sources(i, fld, view)
         parts = [off + p.range_positions(lo, hi) for off, p in sources]
         return self._positions_mask(parts, total, idx)
 
     def spatial_candidate_mask(self, i: int, fld: str,
                                center: Tuple[float, float],
-                               radius: float) -> np.ndarray:
+                               radius: float,
+                               _view: Optional[LSMView] = None
+                               ) -> np.ndarray:
         """Grid ('rtree') probe -> candidate bitmap (post-validation still
         required: covering cells over-approximate the circle).  The
         covering cells are encoded and *deduplicated* once, then probed
@@ -490,70 +613,89 @@ class PartitionedDataset:
         searchsorted + segment gather — overlapping cells are never
         scanned twice."""
         self._require_sec(fld, "rtree")
-        idx, _ = self._live_selection(i)
+        view = _view if _view is not None else self._view(i)
+        idx, _ = self._live_selection(i, view)
         if not len(idx):
             return np.zeros(0, dtype=bool)
         codes = cell_codes_for_query(
             cells_covering_circle(center, radius, self.spatial_cell_size))
-        sources, total = self._sec_sources(i, fld)
+        sources, total = self._sec_sources(i, fld, view)
         parts = [off + p.lookup_positions(codes) for off, p in sources]
         return self._positions_mask(parts, total, idx)
 
     def keyword_candidate_mask(self, i: int, fld: str, token: str,
-                               fuzzy_ed: int = 0) -> np.ndarray:
+                               fuzzy_ed: int = 0,
+                               _view: Optional[LSMView] = None
+                               ) -> np.ndarray:
         """Inverted-index probe -> candidate bitmap; ``fuzzy_ed > 0`` runs
         each tier's (distinct) token dictionary through one batched
         banded-DP call (kernels/fuzzy_ops) instead of a per-token python
         DP."""
         self._require_sec(fld, "keyword")
-        idx, _ = self._live_selection(i)
+        view = _view if _view is not None else self._view(i)
+        idx, _ = self._live_selection(i, view)
         if not len(idx):
             return np.zeros(0, dtype=bool)
         token = token.lower()
-        sources, total = self._sec_sources(i, fld)
+        sources, total = self._sec_sources(i, fld, view)
         parts = [off + p.token_positions(token, fuzzy_ed)
                  for off, p in sources]
         return self._positions_mask(parts, total, idx)
 
     # sorted-PK candidate surfaces: the bitmap gathered through the live
-    # pk array (ascending, so the result is sorted and deduplicated)
-    def secondary_candidate_pks(self, i: int, fld: str, lo: Any, hi: Any
+    # pk array (ascending, so the result is sorted and deduplicated) —
+    # one view serves both sides, so mask and pk array can never skew
+    def secondary_candidate_pks(self, i: int, fld: str, lo: Any, hi: Any,
+                                _view: Optional[LSMView] = None
                                 ) -> np.ndarray:
-        return self.partition_pk_array(i)[
-            self.secondary_candidate_mask(i, fld, lo, hi)]
+        view = _view if _view is not None else self._view(i)
+        return self.partition_pk_array(i, view)[
+            self.secondary_candidate_mask(i, fld, lo, hi, view)]
 
     def spatial_candidate_pks(self, i: int, fld: str,
                               center: Tuple[float, float],
-                              radius: float) -> np.ndarray:
-        return self.partition_pk_array(i)[
-            self.spatial_candidate_mask(i, fld, center, radius)]
+                              radius: float,
+                              _view: Optional[LSMView] = None
+                              ) -> np.ndarray:
+        view = _view if _view is not None else self._view(i)
+        return self.partition_pk_array(i, view)[
+            self.spatial_candidate_mask(i, fld, center, radius, view)]
 
     def keyword_candidate_pks(self, i: int, fld: str, token: str,
-                              fuzzy_ed: int = 0) -> np.ndarray:
-        return self.partition_pk_array(i)[
-            self.keyword_candidate_mask(i, fld, token, fuzzy_ed)]
+                              fuzzy_ed: int = 0,
+                              _view: Optional[LSMView] = None
+                              ) -> np.ndarray:
+        view = _view if _view is not None else self._view(i)
+        return self.partition_pk_array(i, view)[
+            self.keyword_candidate_mask(i, fld, token, fuzzy_ed, view)]
 
     # row-engine surfaces (paper §4.3: 'the result of a secondary key
     # lookup is a set of primary keys') — same postings probes, scalar
     # list out
-    def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any
+    def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any,
+                                   _view: Optional[LSMView] = None
                                    ) -> List[Any]:
-        return self.secondary_candidate_pks(i, fld, lo, hi).tolist()
+        return self.secondary_candidate_pks(i, fld, lo, hi, _view).tolist()
 
     def spatial_search_partition(self, i: int, fld: str,
                                  center: Tuple[float, float],
-                                 radius: float) -> List[Any]:
-        return self.spatial_candidate_pks(i, fld, center, radius).tolist()
+                                 radius: float,
+                                 _view: Optional[LSMView] = None
+                                 ) -> List[Any]:
+        return self.spatial_candidate_pks(i, fld, center, radius,
+                                          _view).tolist()
 
     def keyword_search_partition(self, i: int, fld: str, token: str,
-                                 fuzzy_ed: int = 0) -> List[Any]:
-        return self.keyword_candidate_pks(i, fld, token,
-                                          fuzzy_ed).tolist()
+                                 fuzzy_ed: int = 0,
+                                 _view: Optional[LSMView] = None
+                                 ) -> List[Any]:
+        return self.keyword_candidate_pks(i, fld, token, fuzzy_ed,
+                                          _view).tolist()
 
     # -- ngram (fuzzy) candidate generation -----------------------------------
-    def _ngram_sources(self, i: int, fld: str) -> Tuple[List[Tuple[int, Any]],
-                                                        int]:
-        """(offset, GramPostings) per storage tier of partition ``i`` in
+    def _ngram_sources(self, i: int, fld: str, view: LSMView
+                       ) -> Tuple[List[Tuple[int, Any]], int]:
+        """(offset, GramPostings) per storage tier of the view in
         ``_live_selection`` concat order (memtable first, then components
         newest-first) plus the concat length.  Component postings were
         built at flush/merge (``ensure_gram_postings`` is a no-op then);
@@ -561,30 +703,31 @@ class PartitionedDataset:
         version."""
         from ..fuzzy.ngram import GramPostings
         k = self._ngram_specs[fld]
-        prim = self.partitions[i].primary
         sources: List[Tuple[int, Any]] = []
         off = 0
-        mem = prim.memtable
+        mem = view.memtable
         if mem:
-            # the scan-cache entry is replaced on any mutation (storage
-            # version key), so a per-field memtable postings cache in it
-            # is automatically invalidated with the memtable
-            cache = self._scan_cache[i].setdefault("ngram", {})
+            # cache entries are keyed by storage version, so a per-field
+            # memtable postings cache in one can never be stale
+            cache = self._cache_entry(i, view)["ngram"]
             p = cache.get(fld)
             if p is None:
                 vals = [None if r is TOMBSTONE else r.get(fld)
                         for r in mem.values()]
-                cache[fld] = p = GramPostings.from_values(vals, k)
+                p = GramPostings.from_values(vals, k)
+                if self._cacheable(i, view):
+                    cache[fld] = p
             sources.append((0, p))
             off = len(mem)
-        for comp in prim.components:           # newest first
-            if not comp.valid or comp.size == 0:
+        for comp in view.components:           # newest first
+            if comp.size == 0:
                 continue
             sources.append((off, comp.ensure_gram_postings(fld, k)))
             off += comp.size
         return sources, off
 
-    def ngram_candidate_mask(self, i: int, fld: str, spec: Tuple
+    def ngram_candidate_mask(self, i: int, fld: str, spec: Tuple,
+                             _view: Optional[LSMView] = None
                              ) -> np.ndarray:
         """T-occurrence candidate bitmap over partition ``i``'s scan
         positions (aligned with ``scan_partition_batch`` /
@@ -597,11 +740,12 @@ class PartitionedDataset:
         from ..kernels.fuzzy_ops import t_occurrence_mask
         if fld not in self._ngram_specs:
             raise adm.ValidationError(f"no ngram index on {self.name}.{fld}")
-        idx, _ = self._live_selection(i)
+        view = _view if _view is not None else self._view(i)
+        idx, _ = self._live_selection(i, view)
         if not len(idx):
             return np.zeros(0, dtype=bool)
         qh, threshold = query_grams(spec, self._ngram_specs[fld])
-        sources, total = self._ngram_sources(i, fld)
+        sources, total = self._ngram_sources(i, fld, view)
         if threshold <= 0:
             has = np.zeros(total, dtype=bool)
             for off, p in sources:
@@ -612,7 +756,8 @@ class PartitionedDataset:
             else np.zeros(0, dtype=np.int64)
         return t_occurrence_mask(all_pos, total, threshold)[idx]
 
-    def ngram_search_partition(self, i: int, fld: str, spec: Tuple
+    def ngram_search_partition(self, i: int, fld: str, spec: Tuple,
+                               _view: Optional[LSMView] = None
                                ) -> List[Tuple[Any, int]]:
         """Row-engine surface: (pk, gram hits) per candidate row — rows
         with any gram hit, plus (when T <= 0, so hits cannot prune) every
@@ -622,11 +767,12 @@ class PartitionedDataset:
         from ..fuzzy.ngram import query_grams
         if fld not in self._ngram_specs:
             raise adm.ValidationError(f"no ngram index on {self.name}.{fld}")
-        idx, keys = self._live_selection(i)
+        view = _view if _view is not None else self._view(i)
+        idx, keys = self._live_selection(i, view)
         if not len(idx):
             return []
         qh, threshold = query_grams(spec, self._ngram_specs[fld])
-        sources, total = self._ngram_sources(i, fld)
+        sources, total = self._ngram_sources(i, fld, view)
         counts = np.zeros(total, dtype=np.int64)
         has = np.zeros(total, dtype=bool)
         for off, p in sources:
@@ -643,13 +789,14 @@ class PartitionedDataset:
                 zip(keys.tolist(), live_counts.tolist(), emit.tolist())
                 if e]
 
-    def primary_lookup_partition(self, i: int, pks: Sequence[Any]
+    def primary_lookup_partition(self, i: int, pks: Sequence[Any],
+                                 _view: Optional[LSMView] = None
                                  ) -> List[Dict[str, Any]]:
         """Sorted-PK batched primary lookups (Figure 6's SORT_PK step makes
         this access pattern sequential on a real B+-tree).  The plan's
         SORT_PK already ordered the candidates, so an in-order input is
         detected with one linear pass instead of being re-sorted."""
-        prim = self.partitions[i].primary
+        prim = _view if _view is not None else self.partitions[i].primary
         pks = list(pks)
         try:
             unsorted = any(pks[j] > pks[j + 1] for j in range(len(pks) - 1))
@@ -682,5 +829,179 @@ class PartitionedDataset:
                                    sec_fields=self._sec_fields)
         return self
 
+    # -- snapshot isolation ---------------------------------------------------
+    def pin(self) -> "DatasetSnapshot":
+        """Pin a snapshot-isolated read view of every partition (paper
+        §2.4: queries serve against one consistent LSM state while feeds
+        keep ingesting).  Use as a context manager, or call
+        ``release()`` when done so replaced components can physically
+        retire."""
+        return DatasetSnapshot(self)
+
     def __len__(self) -> int:
         return sum(len(p.primary) for p in self.partitions)
+
+
+class DatasetSnapshot:
+    """Snapshot-isolated read facade over a :class:`PartitionedDataset`.
+
+    Pins one refcounted :class:`~repro.core.lsm.LSMView` per partition
+    (``LSMIndex.pin()``) and exposes the dataset's entire *read* surface
+    — row scans, columnar scans, candidate masks/PKs, ngram probes,
+    primary lookups — bound to those frozen views, so a whole query plan
+    (row or columnar engine) executes against one consistent LSM state
+    end to end while writers proceed.  Duck-types the dataset for the
+    executor and the columnar lowering: configuration attributes
+    (``name``, ``num_partitions``, index registries, ...) delegate to the
+    underlying dataset, mutators raise.  Scan-cache entries are shared
+    with the live dataset through the (partition, epoch, version) key,
+    so repeated queries over one snapshot — or a snapshot and a live
+    read at the same version — reuse the same assembled batches.
+    """
+
+    def __init__(self, ds: PartitionedDataset):
+        self._ds = ds
+        # exclusive gate: waits out in-flight insert/insert_batch/delete
+        # calls so the per-partition pins form one batch-consistent cut —
+        # never half of a multi-partition micro-batch
+        ds._batch_gate.acquire_exclusive()
+        try:
+            self._views: List[LSMView] = [p.primary.pin()
+                                          for p in ds.partitions]
+        finally:
+            ds._batch_gate.release_exclusive()
+        self._released = False
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def versions(self) -> Tuple[int, ...]:
+        """Per-partition pinned LSM versions (the snapshot identity)."""
+        return tuple(v.version for v in self._views)
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        """Unpin every partition view (idempotent): deferred component
+        retirements owed to this snapshot happen here."""
+        if self._released:
+            return
+        self._released = True
+        for v in self._views:
+            v.release()
+
+    def __enter__(self) -> "DatasetSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- config passthrough (executor/lowering/catalog probes) ---------------
+    def __getattr__(self, name: str):
+        # only called for attributes not defined on the snapshot: config
+        # and registry reads delegate; everything stateful is explicit
+        if name.startswith("_abc"):
+            raise AttributeError(name)
+        return getattr(self._ds, name)
+
+    def _blocked(self, *a, **k):
+        raise TypeError("DatasetSnapshot is read-only — writes go to the "
+                        "live PartitionedDataset")
+
+    insert = insert_batch = delete = create_index = _blocked
+    crash_and_recover = _blocked
+
+    def pin(self) -> "DatasetSnapshot":
+        raise TypeError("cannot pin a DatasetSnapshot — pin the live "
+                        "PartitionedDataset")
+
+    # -- read surface, bound to the pinned views -----------------------------
+    def lookup(self, key: Any) -> Optional[Dict[str, Any]]:
+        i = hash_partition(key, self._ds.num_partitions)
+        return self._views[i].lookup(key)
+
+    def scan_partition(self, i: int) -> List[Dict[str, Any]]:
+        return self._ds.scan_partition(i, _view=self._views[i])
+
+    def scan(self) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        for i in range(self._ds.num_partitions):
+            out.extend(self.scan_partition(i))
+        return out
+
+    def partition_pk_array(self, i: int) -> np.ndarray:
+        return self._ds.partition_pk_array(i, _view=self._views[i])
+
+    def scan_partition_batch(self, i: int,
+                             columns: Optional[Sequence[str]] = None
+                             ) -> ColumnBatch:
+        return self._ds.scan_partition_batch(i, columns,
+                                             _view=self._views[i])
+
+    def secondary_candidate_mask(self, i: int, fld: str, lo: Any, hi: Any
+                                 ) -> np.ndarray:
+        return self._ds.secondary_candidate_mask(i, fld, lo, hi,
+                                                 _view=self._views[i])
+
+    def spatial_candidate_mask(self, i: int, fld: str,
+                               center: Tuple[float, float],
+                               radius: float) -> np.ndarray:
+        return self._ds.spatial_candidate_mask(i, fld, center, radius,
+                                               _view=self._views[i])
+
+    def keyword_candidate_mask(self, i: int, fld: str, token: str,
+                               fuzzy_ed: int = 0) -> np.ndarray:
+        return self._ds.keyword_candidate_mask(i, fld, token, fuzzy_ed,
+                                               _view=self._views[i])
+
+    def secondary_candidate_pks(self, i: int, fld: str, lo: Any, hi: Any
+                                ) -> np.ndarray:
+        return self._ds.secondary_candidate_pks(i, fld, lo, hi,
+                                                _view=self._views[i])
+
+    def spatial_candidate_pks(self, i: int, fld: str,
+                              center: Tuple[float, float],
+                              radius: float) -> np.ndarray:
+        return self._ds.spatial_candidate_pks(i, fld, center, radius,
+                                              _view=self._views[i])
+
+    def keyword_candidate_pks(self, i: int, fld: str, token: str,
+                              fuzzy_ed: int = 0) -> np.ndarray:
+        return self._ds.keyword_candidate_pks(i, fld, token, fuzzy_ed,
+                                              _view=self._views[i])
+
+    def secondary_search_partition(self, i: int, fld: str, lo: Any, hi: Any
+                                   ) -> List[Any]:
+        return self._ds.secondary_search_partition(i, fld, lo, hi,
+                                                   _view=self._views[i])
+
+    def spatial_search_partition(self, i: int, fld: str,
+                                 center: Tuple[float, float],
+                                 radius: float) -> List[Any]:
+        return self._ds.spatial_search_partition(i, fld, center, radius,
+                                                 _view=self._views[i])
+
+    def keyword_search_partition(self, i: int, fld: str, token: str,
+                                 fuzzy_ed: int = 0) -> List[Any]:
+        return self._ds.keyword_search_partition(i, fld, token, fuzzy_ed,
+                                                 _view=self._views[i])
+
+    def ngram_candidate_mask(self, i: int, fld: str, spec: Tuple
+                             ) -> np.ndarray:
+        return self._ds.ngram_candidate_mask(i, fld, spec,
+                                             _view=self._views[i])
+
+    def ngram_search_partition(self, i: int, fld: str, spec: Tuple
+                               ) -> List[Tuple[Any, int]]:
+        return self._ds.ngram_search_partition(i, fld, spec,
+                                               _view=self._views[i])
+
+    def primary_lookup_partition(self, i: int, pks: Sequence[Any]
+                                 ) -> List[Dict[str, Any]]:
+        return self._ds.primary_lookup_partition(i, pks,
+                                                 _view=self._views[i])
+
+    def __len__(self) -> int:
+        return sum(int(self.partition_pk_array(i).shape[0])
+                   for i in range(self._ds.num_partitions))

@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from .. import obs as _obs
 from ..core.algebra import Connector, PhysicalOp
 from ..core.rewriter import Catalog, RewriteConfig, optimize
-from .dataset import PartitionedDataset, hash_partition
+from .dataset import DatasetSnapshot, PartitionedDataset, hash_partition
 
 __all__ = ["Executor", "run_query", "explain_analyze"]
 
@@ -460,22 +460,42 @@ def _finish_stats(ex: "Executor", traces0: int,
 def run_query(plan, datasets: Dict[str, PartitionedDataset],
               catalog: Optional[Catalog] = None,
               config: RewriteConfig = RewriteConfig(),
-              vectorize: bool = False
+              vectorize: bool = False,
+              snapshot: bool = False
               ) -> Tuple[Rows, "Executor"]:
     """Optimize a LogicalOp plan and execute it.  Returns (rows, executor)
     — the executor carries connector/operator statistics.  With
-    ``vectorize=True`` supported subplans run on the columnar engine."""
+    ``vectorize=True`` supported subplans run on the columnar engine.
+    With ``snapshot=True`` every dataset that supports ``pin()`` is
+    pinned for the duration of the query, so the whole plan executes
+    against one consistent LSM state even while concurrent writers are
+    ingesting (snapshot isolation; pins are released on return)."""
     if catalog is None:
         catalog = _default_catalog(datasets)
     phys = optimize(plan, catalog, config)
-    ex = Executor(datasets, vectorize=vectorize)
-    from ..kernels import columnar_ops as K
-    traces0 = K.trace_count()
-    kt0 = _obs.kernel_totals()
-    parts = ex.execute_op(phys)
-    _finish_stats(ex, traces0, kt0)
-    rows = [r for p in parts for r in p]
-    return rows, ex
+    pinned = []
+    exec_datasets = datasets
+    if snapshot:
+        exec_datasets = {}
+        for n, ds in datasets.items():
+            if hasattr(ds, "pin") and not isinstance(ds, DatasetSnapshot):
+                snap = ds.pin()
+                pinned.append(snap)
+                exec_datasets[n] = snap
+            else:
+                exec_datasets[n] = ds
+    try:
+        ex = Executor(exec_datasets, vectorize=vectorize)
+        from ..kernels import columnar_ops as K
+        traces0 = K.trace_count()
+        kt0 = _obs.kernel_totals()
+        parts = ex.execute_op(phys)
+        _finish_stats(ex, traces0, kt0)
+        rows = [r for p in parts for r in p]
+        return rows, ex
+    finally:
+        for snap in pinned:
+            snap.release()
 
 
 def _annotate(op: PhysicalOp, analysis: Dict[int, Dict[str, Any]]

@@ -232,14 +232,17 @@ def test_memtable_tail_postings_cached_and_invalidated():
     ds.insert({"id": 1, "txt": "coffee tonight"})
     ds.insert({"id": 2, "txt": "jax mesh"})
     assert ds.keyword_candidate_pks(0, "txt", "coffee").tolist() == [1]
-    cache1 = ds._scan_cache[0]["sec"]["txt"]
+    key = (0, *ds._partition_version(0))     # (partition, epoch, version)
+    cache1 = ds._scan_cache[key]["sec"]["txt"]
     # repeated probe reuses the cached memtable postings
     assert ds.keyword_candidate_pks(0, "txt", "jax").tolist() == [2]
-    assert ds._scan_cache[0]["sec"]["txt"] is cache1
-    ds.insert({"id": 3, "txt": "coffee"})     # mutation invalidates
+    assert ds._scan_cache[key]["sec"]["txt"] is cache1
+    ds.insert({"id": 3, "txt": "coffee"})    # mutation -> new version key
     assert sorted(ds.keyword_candidate_pks(0, "txt",
                                            "coffee").tolist()) == [1, 3]
-    assert ds._scan_cache[0]["sec"]["txt"] is not cache1
+    key2 = (0, *ds._partition_version(0))
+    assert key2 != key
+    assert ds._scan_cache[key2]["sec"]["txt"] is not cache1
 
 
 def test_candidate_masks_align_with_scan_batches():

@@ -1,0 +1,352 @@
+"""Concurrent serving: snapshot pin/unpin lifecycle, threaded
+ingest+query stress with a row-engine consistency oracle, the serve
+harness (admission control, backpressure, crash/replay), and the four
+feed-layer regression fixes that ride with it."""
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import adm
+from repro.core.lsm import LSMIndex, TieredMergePolicy
+from repro.data.feeds import (DatasetSink, Feed, FeedJoint, FeedOverflow,
+                              SyntheticTokenAdaptor)
+from repro.serve import ServeHarness, StridedRecordAdaptor
+from repro.storage.dataset import PartitionedDataset, hash_partition
+from repro.storage.query import run_query
+from repro.core import algebra as A
+
+
+def _ds(parts=4, threshold=64):
+    rt = adm.RecordType("R", (adm.Field("pk", adm.INT64),
+                              adm.Field("val", adm.INT64)), open=True)
+    return PartitionedDataset("S", rt, "pk", num_partitions=parts,
+                              flush_threshold=threshold,
+                              merge_policy=TieredMergePolicy(k=3))
+
+
+# ---------------------------------------------------------------------------
+# Pin/unpin refcount lifecycle (LSM layer)
+# ---------------------------------------------------------------------------
+
+def test_pin_defers_component_retirement_until_unpin():
+    ix = LSMIndex(flush_threshold=100, merge_policy=TieredMergePolicy(k=99))
+    for i in range(6):
+        ix.insert(i, {"pk": i})
+    ix.flush()
+    for i in range(6, 12):
+        ix.insert(i, {"pk": i})
+    ix.flush()
+    view = ix.pin()
+    old = [c for c in ix.components if c.valid]
+    assert len(old) == 2
+    ix.merge(old)
+    # replaced components are deferred, not retired, while the pin lives
+    assert all(not c.retired for c in old)
+    assert len(ix._deferred) == 2
+    # the pinned view still reads the pre-merge state
+    assert view.lookup(3) == {"pk": 3}
+    assert sorted(k for k, _ in view.items()) == list(range(12))
+    view.release()
+    assert all(c.retired for c in old)
+    assert not ix._deferred and not ix._comp_pins      # no refcount leak
+    assert ix.pinned_versions() == ()
+
+
+def test_unpin_is_idempotent_and_shared_pins_refcount():
+    ix = LSMIndex(flush_threshold=4, merge_policy=TieredMergePolicy(k=99))
+    for i in range(8):
+        ix.insert(i, {"pk": i})
+    v1 = ix.pin()
+    v2 = ix.pin()
+    old = [c for c in ix.components if c.valid]
+    ix.merge(old)
+    v1.release()
+    v1.release()                                       # double-release: no-op
+    assert any(not c.retired for c in old)             # v2 still pins them
+    v2.release()
+    assert all(c.retired for c in old)
+    assert not ix._comp_pins and not ix._deferred
+
+
+def test_pinned_view_isolated_from_later_writes_and_flush():
+    ix = LSMIndex(flush_threshold=4)
+    for i in range(3):
+        ix.insert(i, {"pk": i})
+    with ix.pin() as view:
+        for i in range(3, 40):
+            ix.insert(i, {"pk": i})                    # forces flushes
+        ix.insert(0, {"pk": 0, "v": 2})                # overwrite
+        assert sorted(k for k, _ in view.items()) == [0, 1, 2]
+        assert view.lookup(0) == {"pk": 0}             # pre-overwrite row
+    assert ix.lookup(0) == {"pk": 0, "v": 2}
+
+
+# ---------------------------------------------------------------------------
+# Dataset snapshots
+# ---------------------------------------------------------------------------
+
+def test_dataset_snapshot_is_stable_and_read_only():
+    ds = _ds()
+    ds.insert_batch([{"pk": i, "val": i} for i in range(100)])
+    with ds.pin() as snap:
+        before = sorted(r["pk"] for r in snap.scan())
+        ds.insert_batch([{"pk": i, "val": i} for i in range(100, 150)])
+        ds.delete(3)
+        assert sorted(r["pk"] for r in snap.scan()) == before
+        assert snap.lookup(3) == {"pk": 3, "val": 3}
+        assert len(snap) == 100
+        with pytest.raises(TypeError):
+            snap.insert({"pk": 999, "val": 0})
+        with pytest.raises(TypeError):
+            snap.pin()
+    assert ds.lookup(3) is None
+    assert len(ds) == 149
+
+
+def test_run_query_snapshot_flag_pins_and_releases():
+    ds = _ds()
+    ds.insert_batch([{"pk": i, "val": i % 7} for i in range(200)])
+    plan = A.select(A.scan("S"), pred=lambda r: r["val"] == 3,
+                    fields=["val"])
+    rows, _ = run_query(plan, {"S": ds}, snapshot=True)
+    assert sorted(r["pk"] for r in rows) == [i for i in range(200)
+                                             if i % 7 == 3]
+    # all pins released: nothing left pinned on any partition
+    assert all(p.primary.pinned_versions() == () for p in ds.partitions)
+
+
+# ---------------------------------------------------------------------------
+# Threaded stress: concurrent writers + snapshot queries, oracle-checked
+# ---------------------------------------------------------------------------
+
+def test_threaded_ingest_query_stress_prefix_oracle():
+    """Concurrent insert_batch (with flush/merge churn) + snapshot scans
+    must never raise, lose an acked row, or tear: every scan must equal
+    the oracle on some per-lane prefix of the acknowledged inserts."""
+    LANES, PER_LANE, BATCH = 3, 900, 30
+    ds = _ds(parts=4, threshold=48)        # low threshold: flushes + merges
+    acked = [0] * LANES
+    lock = threading.Lock()
+    errors = []
+    stop = threading.Event()
+
+    def writer(lane):
+        try:
+            for off in range(0, PER_LANE, BATCH):
+                recs = [{"pk": (off + j) * LANES + lane, "val": off + j}
+                        for j in range(BATCH)]
+                ds.insert_batch(recs)
+                with lock:
+                    acked[lane] += BATCH
+        except Exception as e:             # noqa: BLE001
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                with lock:
+                    floors = list(acked)
+                with ds.pin() as snap:
+                    pks = np.concatenate(
+                        [snap.partition_pk_array(i)
+                         for i in range(ds.num_partitions)]) \
+                        if len(snap) else np.empty(0, dtype=np.int64)
+                    again = sorted(r["pk"] for r in snap.scan())
+                pks = np.sort(pks.astype(np.int64))
+                # repeatable read: scan and pk-array agree on one snapshot
+                assert list(pks) == again
+                for lane in range(LANES):
+                    lp = pks[pks % LANES == lane]
+                    k = lp.size
+                    # prefix: exactly keys lane, lane+L, ..., (k-1)L+lane
+                    assert k == 0 or int(lp.max()) // LANES == k - 1, \
+                        f"torn lane {lane}"
+                    assert k >= floors[lane], \
+                        f"lost acked rows: lane {lane} has {k} < " \
+                        f"{floors[lane]}"
+        except Exception as e:             # noqa: BLE001
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(l,))
+               for l in range(LANES)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in writers + readers:
+        t.start()
+    for t in writers:
+        t.join(timeout=60)
+    stop.set()
+    for t in readers:
+        t.join(timeout=60)
+    assert not errors, errors[:3]
+    assert len(ds) == LANES * PER_LANE
+    # no pins leaked by the readers
+    assert all(p.primary.pinned_versions() == () for p in ds.partitions)
+
+
+# ---------------------------------------------------------------------------
+# Serve harness end-to-end
+# ---------------------------------------------------------------------------
+
+def test_serve_harness_mixed_workload_clean():
+    ds = _ds(parts=4, threshold=96)
+    h = ServeHarness(ds, n_ingest=2, n_query=2, pump_batch=32,
+                     records_per_lane=600)
+    rep = h.run(duration_s=15.0)
+    assert rep.ingest_acked == 1200
+    assert rep.torn_reads == 0 and rep.lost_acks == 0
+    assert rep.lost_acked_final == 0
+    assert not rep.query_errors
+    assert rep.queries > 0 and rep.query_p99_ms is not None
+    assert rep.ingest_rate > 0
+    assert len(ds) == 1200
+
+
+def test_serve_harness_crash_recover_replays_at_least_once():
+    ds = _ds(parts=4, threshold=96)
+    h = ServeHarness(ds, n_ingest=2, n_query=2, pump_batch=32,
+                     records_per_lane=800)
+    rep = h.run(duration_s=20.0, checkpoint_after=400, crash_after=800)
+    assert rep.recoveries == 1
+    assert rep.torn_reads == 0 and rep.lost_acks == 0
+    assert rep.lost_acked_final == 0
+    assert not rep.query_errors
+    # at-least-once + PK-idempotent upserts: exactly the keyspace, no dupes
+    assert len(ds) == 1600
+    final = set()
+    for i in range(ds.num_partitions):
+        final.update(int(x) for x in ds.partition_pk_array(i).tolist())
+    assert final == set(range(1600))
+
+
+def test_bounded_sink_blocks_instead_of_dropping():
+    q = queue.Queue(maxsize=1)
+    from repro.serve import BoundedSink
+    sink = BoundedSink(q)
+    sink([1, 2])                            # fills the queue
+    t = threading.Thread(target=lambda: sink([3, 4]))
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                     # blocked on the full queue
+    assert q.get() == [1, 2]
+    q.task_done()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert q.get() == [3, 4]                # delivered, not dropped
+
+
+# ---------------------------------------------------------------------------
+# Feed-layer regression fixes (one dedicated test per bugfix)
+# ---------------------------------------------------------------------------
+
+def test_feed_cursor_advances_by_prefilter_intake_across_restore():
+    """Bugfix: cursor tracked the post-UDF-filter count, so restore()
+    re-sought into already-processed source records (duplicates)."""
+    def make(lane_records):
+        return StridedRecordAdaptor(0, 1, limit=lane_records)
+
+    seen = []
+    feed = Feed("f", adaptor=make(100),
+                udfs=[lambda r: r if r["pk"] % 2 == 0 else None],
+                store=seen.extend)
+    delivered = feed.pump(10)
+    assert delivered == 5                  # return value stays post-filter
+    assert feed.cursor == 10               # cursor is pre-filter intake
+    assert feed.last_intake == 10
+    st = feed.state()
+
+    # resume on a fresh pipeline from the checkpoint
+    seen2 = []
+    feed2 = Feed("f", adaptor=make(100),
+                 udfs=[lambda r: r if r["pk"] % 2 == 0 else None],
+                 store=seen2.extend)
+    feed2.restore(st)
+    feed2.pump(10)
+    replayed = [r["pk"] for r in seen2]
+    original = [r["pk"] for r in seen]
+    assert not set(replayed) & set(original), \
+        "restore() replayed already-processed source records"
+    assert replayed == [10, 12, 14, 16, 18]
+
+
+def test_secondary_feed_checkpoints_own_source_position():
+    """Bugfix: a secondary feed's consume position lives in the source
+    joint's subscriber table and was never checkpointed/restored."""
+    primary = Feed("p", adaptor=SyntheticTokenAdaptor(8, 100))
+    got = []
+    sec = Feed("s", source_joint=primary.joint, store=got.extend)
+    primary.pump(40)
+    sec.pump(15)
+    st = sec.state()
+    assert st["source_cursor"] == 15
+    # source joint drifts (another subscriber-free consume would move it)
+    sec.pump(10)
+    assert primary.joint.subscribers["s"] == 25
+    sec.restore(st)
+    assert primary.joint.subscribers["s"] == 15
+    sec.pump(10)
+    # resumed exactly where the checkpoint said, re-reading records 15..24
+    assert [r["doc_id"] for r in got[15:25]] == \
+           [r["doc_id"] for r in got[25:35]]
+
+
+def test_joint_overflow_raise_policy_and_drop_counter():
+    """Bugfix: publish silently evicted unconsumed records past the
+    window; now 'raise' refuses (joint untouched) and 'drop' counts."""
+    j = FeedJoint(window=8, name="ovf", overflow="raise")
+    j.subscribe("slow")
+    j.publish(list(range(8)))
+    base, buf = j.base, list(j.buffer)
+    with pytest.raises(FeedOverflow):
+        j.publish([8, 9])
+    assert j.base == base and list(j.buffer) == buf    # untouched
+    # consumer catches up -> the same publish now succeeds
+    assert j.consume("slow", 4) == [0, 1, 2, 3]
+    j.publish([8, 9])
+    assert j.consume("slow", 6) == [4, 5, 6, 7, 8, 9]
+    assert j.dropped == 0
+
+    d = FeedJoint(window=4, name="ovf2", overflow="drop")
+    d.subscribe("slow")
+    d.publish(list(range(6)))              # 2 unconsumed records evicted
+    assert d.dropped == 2
+    with pytest.raises(RuntimeError):
+        d.consume("slow", 1)               # loss now surfaces on consume
+
+    # fully-consumed records always retire silently, never counted
+    ok = FeedJoint(window=4, name="ovf3")
+    ok.subscribe("fast")
+    ok.publish([1, 2])
+    ok.consume("fast", 2)
+    ok.publish([3, 4, 5, 6])
+    assert ok.dropped == 0
+
+
+def test_dataset_sink_single_pass_drain():
+    """Bugfix/perf: the sink re-sliced its backlog per chunk (O(n^2));
+    the one-pass drain must deliver identical batches."""
+    class Rec:
+        def __init__(self):
+            self.batches = []
+            self.name = "d"
+
+        def insert_batch(self, chunk):
+            self.batches.append(list(chunk))
+
+    rec = Rec()
+    sink = DatasetSink(rec, batch_size=3)
+    sink([{"pk": i} for i in range(7)])    # 2 full batches + 1 leftover
+    assert [len(b) for b in rec.batches] == [3, 3]
+    assert [r["pk"] for b in rec.batches for r in b] == list(range(6))
+    assert [r["pk"] for r in sink.backlog] == [6]
+    sink([{"pk": i} for i in range(7, 9)])
+    assert [len(b) for b in rec.batches] == [3, 3, 3]
+    assert sink.backlog == []
+    assert sink.flush() == 0
+    sink([{"pk": 99}])
+    assert sink.flush() == 1
+    assert rec.batches[-1] == [{"pk": 99}]
+    assert sink.stats["records"] == 10
