@@ -1,0 +1,130 @@
+"""Device residency: cold vs warm Figure-6 chains under the buffer pool
+and fused plan cache.
+
+The first execution of an index chain pays everything once: the fused
+core traces, the pow2-padded columns and postings upload, the plan shape
+enters the cache.  Every later execution of the same plan shape must be
+one cached fused dispatch per partition over already-resident buffers —
+``h2d_bytes == 0``, ``kernel_retraces == 0``, ``plan_cache_misses == 0``
+— and at least 3x faster than the cold run.  A warm query that ships
+bytes host->device, retraces, or misses the plan cache fails the bench
+(scripts/verify.sh runs ``--smoke``).
+
+Dataset sizes are deliberately offset from index_bench's so the pow2
+buckets differ: when both smoke benches run in one process the fused
+core must trace fresh here, keeping the cold measurement honest.
+
+Usage: PYTHONPATH=src python -m benchmarks.residency_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime as dt
+import sys
+
+from repro.configs.tinysocial import build_dataverse
+from repro.core import algebra as A
+from repro.kernels import device_pool as DP
+from repro.storage.query import run_query
+
+from ._timing import stopwatch, timed as _timed
+
+N_USERS, N_MSGS = 6000, 18000
+SMOKE_USERS, SMOKE_MSGS = 1000, 3000
+
+
+def _canon(rows):
+    return sorted(repr(sorted(r.items(), key=lambda kv: kv[0]))
+                  for r in rows)
+
+
+def _plans():
+    lo, hi = dt.datetime(2010, 1, 1), dt.datetime(2010, 3, 1)
+    mlo = dt.datetime(2014, 1, 15)
+    return {
+        # selective range, full records out: warm cost is the boundary
+        # decode, the candidate chain itself is one resident dispatch
+        "btree_select": A.select(
+            A.scan("MugshotUsers"),
+            pred=lambda r: lo <= r["user-since"] <= hi,
+            fields=["user-since"], ranges={"user-since": (lo, hi)},
+            ranges_exact=True),
+        # wide range into a fused aggregate: no rows materialize, the
+        # warm query is pure device work + one scalar row back
+        "btree_agg": A.aggregate(
+            A.select(A.scan("MugshotMessages"),
+                     pred=lambda r: r["timestamp"] >= mlo,
+                     fields=["timestamp"],
+                     ranges={"timestamp": (mlo, None)}, ranges_exact=True),
+            {"c": ("count", "*"), "av": ("avg", "author-id"),
+             "mx": ("max", "timestamp")}),
+    }
+
+
+def run(smoke: bool = False) -> list:
+    nu, nm = (SMOKE_USERS, SMOKE_MSGS) if smoke else (N_USERS, N_MSGS)
+    _, ds = build_dataverse(nu, nm, num_partitions=4, flush_threshold=256)
+    rows = []
+    repeat = 3 if smoke else 5
+    for name, plan in _plans().items():
+        with stopwatch() as cold:
+            res0, ex0 = run_query(plan, ds, vectorize=True)
+        h2d_cold = ex0.stats.h2d_bytes
+        assert ex0.stats.rows_fallback == 0, \
+            f"{name}: cold run fell back to the row engine"
+        assert ex0.stats.plan_cache_misses >= 1, \
+            f"{name}: cold run never reached the fused plan cache"
+        assert h2d_cold > 0, f"{name}: cold run uploaded nothing"
+        ((res_w, ex_w), t_warm) = _timed(
+            lambda p=plan: run_query(p, ds, vectorize=True), repeat)
+        assert _canon(res_w) == _canon(res0), \
+            f"{name}: warm results diverge from the cold run"
+        assert ex_w.stats.h2d_bytes == 0, \
+            f"{name}: warm query shipped {ex_w.stats.h2d_bytes} bytes " \
+            f"host->device (buffer pool miss)"
+        assert ex_w.stats.kernel_retraces == 0, \
+            f"{name}: warm query retraced {ex_w.stats.kernel_retraces} cores"
+        assert ex_w.stats.plan_cache_hits >= 1 \
+            and ex_w.stats.plan_cache_misses == 0, \
+            f"{name}: warm query missed the plan cache " \
+            f"({ex_w.stats.plan_cache_hits} hits, " \
+            f"{ex_w.stats.plan_cache_misses} misses)"
+        speedup = cold.seconds / t_warm
+        assert speedup >= 3.0, \
+            f"{name}: warm only {speedup:.2f}x vs cold (need >= 3x)"
+        pool = DP.pool.stats()
+        rows.append({
+            "bench": f"residency_{name}",
+            "us_per_call": cold.seconds * 1e6,
+            "us_warm": t_warm * 1e6,
+            "speedup": round(speedup, 2),
+            "h2d_cold": h2d_cold,
+            "h2d_warm": ex_w.stats.h2d_bytes,
+            "retraces_warm": ex_w.stats.kernel_retraces,
+            "derived": f"warm {speedup:.1f}x vs cold, "
+                       f"{h2d_cold} B uploaded once, "
+                       f"{pool['resident_bytes']} B resident "
+                       f"({len(res_w)} rows out)",
+        })
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="small dataset, fewer repeats (CI gate)")
+    args = p.parse_args()
+    with stopwatch() as sw:
+        out = run(smoke=args.smoke)
+    print("name,us_cold,us_warm,speedup,h2d_cold,h2d_warm,retraces_warm")
+    for r in out:
+        print(f"{r['bench']},{r['us_per_call']:.1f},{r['us_warm']:.1f},"
+              f"{r['speedup']},{r['h2d_cold']},{r['h2d_warm']},"
+              f"{r['retraces_warm']}")
+    print(f"# residency_bench done in {sw.seconds:.1f}s "
+          f"({'smoke' if args.smoke else 'full'})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,14 +3,15 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3] [--smoke]
                                                [--json out.json]
 
-``--smoke`` drives the six CI smoke benches (columnar / index / ingest /
-fuzzy / feeds / serve) at reduced sizes with one combined exit code —
+``--smoke`` drives the seven CI smoke benches (columnar / index /
+residency / ingest / fuzzy / feeds / serve) at reduced sizes with one
+combined exit code —
 this is what ``scripts/verify.sh`` and the CI workflow invoke, replacing
 the old per-bench invocations.  Each smoke bench carries its own hard
 assertions (engine equivalence, no silent index/fuzzy fallback, zero
-kernel retraces on repeated queries, zero torn reads / lost acks under
-concurrent serving), so a nonzero exit means a real regression, not a
-slow machine.
+kernel retraces on repeated queries, zero host->device bytes on warm
+chains, zero torn reads / lost acks under concurrent serving), so a
+nonzero exit means a real regression, not a slow machine.
 
 ``--json out.json`` additionally writes a machine-readable report:
 
@@ -23,7 +24,7 @@ slow machine.
      "failures": ["<module>: <error>", ...]}
 
 CI archives this file per run; ``scripts/verify.sh`` asserts it parses
-and contains all five smoke benches.
+and contains rows from every smoke module.
 
 Prints ``name,us_per_call,derived`` CSV (plus table-specific columns).
 """
@@ -39,7 +40,8 @@ from repro import obs
 
 from ._timing import stopwatch
 
-SMOKE_MODULES = ("columnar", "index", "ingest", "fuzzy", "feeds", "serve")
+SMOKE_MODULES = ("columnar", "index", "residency", "ingest", "fuzzy",
+                 "feeds", "serve")
 JSON_SCHEMA_VERSION = 1
 
 
@@ -47,7 +49,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="")
     p.add_argument("--smoke", action="store_true",
-                   help="run the five CI smoke benches (reduced sizes, "
+                   help="run the CI smoke benches (reduced sizes, "
                         "one exit code)")
     p.add_argument("--json", default="", metavar="PATH",
                    help="write a structured JSON report (bench rows + "
@@ -55,14 +57,15 @@ def main() -> None:
     args = p.parse_args()
 
     from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
-                   ingest_bench, serve_bench, step_bench, table2_storage,
-                   table3_queries, table4_inserts)
+                   ingest_bench, residency_bench, serve_bench, step_bench,
+                   table2_storage, table3_queries, table4_inserts)
     modules = {
         "table2": table2_storage,
         "table3": table3_queries,
         "table4": table4_inserts,
         "columnar": columnar_bench,
         "index": index_bench,
+        "residency": residency_bench,
         "fuzzy": fuzzy_bench,
         "ingest": ingest_bench,
         "feeds": feeds_bench,

@@ -7,18 +7,22 @@
 #      the gate existed);
 #   2. the full pytest suite (collection regressions — import errors,
 #      missing optional deps — show up here before anything else does);
-#   3. the six smoke benches via `benchmarks/run.py --smoke`
-#      (columnar / index / ingest / fuzzy / feeds / serve), whose hard
-#      assertions catch: a row-vs-columnar divergence, an index or
-#      fuzzy plan silently falling back to the row engine, a candidate
-#      read regressing onto a python walk (the CSR postings must beat
-#      the legacy secondary-LSM walk), a kernel retrace on repeated
-#      queries, an ingest pipeline divergence, or a torn read / lost
-#      acknowledged record under concurrent mixed ingest+query serving;
+#   3. the seven smoke benches via `benchmarks/run.py --smoke`
+#      (columnar / index / residency / ingest / fuzzy / feeds / serve),
+#      whose hard assertions catch: a row-vs-columnar divergence, an
+#      index or fuzzy plan silently falling back to the row engine, a
+#      candidate read regressing onto a python walk (the CSR postings
+#      must beat the legacy secondary-LSM walk), a kernel retrace on
+#      repeated queries, a warm index chain shipping host->device bytes
+#      (the device buffer pool must keep operands resident), an ingest
+#      pipeline divergence, or a torn read / lost acknowledged record
+#      under concurrent mixed ingest+query serving;
 #   4. the structured bench report (`--json bench_smoke.json`) parses,
-#      carries schema_version 1, contains rows from all six smoke
-#      modules, and the serve rows report nonzero sustained ingest and
-#      a p99 query latency — CI uploads the file as a run artifact.
+#      carries schema_version 1, contains rows from every smoke module,
+#      the serve rows report nonzero sustained ingest and a p99 query
+#      latency, and the residency rows show warm queries uploading zero
+#      bytes at >= 3x the cold latency — CI uploads the file as a run
+#      artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,8 +46,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --smoke --json bench_smoke.json
 
-# The report must parse, be schema-stable, and cover all six smoke
-# modules — a bench that crashed or was silently skipped fails here.
+# The report must parse, be schema-stable, and cover every smoke
+# module — a bench that crashed or was silently skipped fails here.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
 import json
 
@@ -65,6 +69,17 @@ for row in serve_rows:
     assert row["ingest_rate"] > 0, f"zero sustained ingest: {row}"
     assert row["query_p99_ms"] is not None, f"missing p99: {row}"
     assert row["torn_reads"] == 0 and row["lost_acked"] == 0, row
+# Residency rows must prove upload-once semantics: warm repeats of a
+# Figure-6 chain ship nothing host->device, never retrace, and beat
+# the cold (trace + upload) execution by >= 3x.
+res_rows = [r for r in report["benches"].values()
+            if r["module"] == "residency"]
+assert res_rows, "no residency bench rows in report"
+for row in res_rows:
+    assert row["h2d_cold"] > 0, f"cold run uploaded nothing: {row}"
+    assert row["h2d_warm"] == 0, f"warm query shipped bytes: {row}"
+    assert row["retraces_warm"] == 0, f"warm query retraced: {row}"
+    assert row["speedup"] >= 3.0, f"warm speedup under 3x: {row}"
 print(f"verify: bench_smoke.json ok "
       f"({len(report['benches'])} benches, {len(report['metrics'])} metrics)")
 EOF

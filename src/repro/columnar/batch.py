@@ -73,6 +73,10 @@ class Column:
     values: Optional[List[str]] = None  # sorted dictionary for 'str'
     # pow2-padded (data, valid) view, built once per immutable column
     _padded: Optional[tuple] = field(default=None, repr=False, compare=False)
+    # int64 widening of padded() for bool columns, built once (stable
+    # identity: the device buffer pool keys on the padded arrays)
+    _padded_i64: Optional[tuple] = field(default=None, repr=False,
+                                         compare=False)
 
     def __len__(self) -> int:
         return int(self.data.shape[0])
@@ -97,6 +101,15 @@ class Column:
             valid = np.concatenate([self.valid, np.zeros(pad, dtype=bool)])
             self._padded = (data, valid)
         return self._padded
+
+    def padded_int64(self) -> tuple:
+        """``padded()`` with the data widened to int64 — what the kernels
+        compare bool columns as.  Cached so repeated queries hand the
+        same arrays to the device pool instead of re-widening per call."""
+        if self._padded_i64 is None:
+            data, valid = self.padded()
+            self._padded_i64 = (data.astype(np.int64), valid)
+        return self._padded_i64
 
     def take(self, idx: np.ndarray) -> "Column":
         return Column(self.kind, self.data[idx], self.valid[idx], self.values)

@@ -282,6 +282,25 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
                 out = _apply_conn(conn, out, ex, p)
                 return out
             return run_fused_agg
+        # a secondary-index chain directly below the aggregate compiles
+        # into the fused whole-chain dispatch (probe -> bitmap -> filter
+        # -> reduce as one plan-cached kernel; columnar/plancache) with
+        # the per-operator chain as its partitionwise fallback
+        if child_op.kind in ("POST_VALIDATE_SELECT",
+                             "PRIMARY_INDEX_LOOKUP") \
+                and conn.name == "OneToOne":
+            try:
+                inner = _compile_index_path(child_op, ex,
+                                            _agg_out_cols(aggs) or None,
+                                            p, aggs=aggs)
+            except Unsupported:
+                inner = None
+            if inner is not None:
+                def run_index_agg():
+                    out = inner()
+                    ex.stats.vectorized(k, len(out))
+                    return _apply_conn(conn, out, ex, p)
+                return run_index_agg
         child = _compile(child_op, ex, _agg_out_cols(aggs) or None)
 
         def run_local_agg():
@@ -464,7 +483,9 @@ def _range_mask(ds: Any, i: int, f: str, lo: Any, hi: Any):
 
 
 def _compile_index_path(op: PhysicalOp, ex: Any,
-                        needed: Optional[Set[str]], p: int) -> Node:
+                        needed: Optional[Set[str]], p: int,
+                        aggs: Optional[Dict[str, Tuple[str, str]]] = None
+                        ) -> Node:
     """Lower POST_VALIDATE_SELECT <- PRIMARY_INDEX_LOOKUP <- SORT_PK <-
     {SECONDARY,SPATIAL,KEYWORD}_INDEX_SEARCH onto the columnar engine:
     each partition's search yields a candidate position bitmap straight
@@ -546,13 +567,50 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
                 (search.attrs["lo"], search.attrs["hi"]):
         validate_ranges.pop(search_field)
 
+    if aggs is not None and is_fuzzy:
+        raise Unsupported("fuzzy aggregate chain")   # generic path handles
+    # whole-chain fused dispatch (columnar/plancache): compiled once per
+    # plan shape, runs the probe -> AND -> filter (-> reduce) pipeline as
+    # one kernel over pooled device buffers.  Partitions it declines fall
+    # through to the per-operator path below — results are identical.
+    fused = None
+    if not is_fuzzy and search.kind == "SECONDARY_INDEX_SEARCH":
+        from . import plancache as PC
+        chain_ops = (search.kind, "SORT_PK", "PRIMARY_INDEX_LOOKUP") \
+            + (("POST_VALIDATE_SELECT",) if validate is not None else ()) \
+            + (("LOCAL_AGG",) if aggs is not None else ())
+        fused = PC.compile_chain(
+            ds, chain_ops=chain_ops, search_field=search_field,
+            search_bounds=(search.attrs["lo"], search.attrs["hi"]),
+            extra=[(f,) + tuple(ranges[f]) for f in extra_fields],
+            validate_ranges=validate_ranges, pred=pred,
+            residual=residual, fields=fields, aggs=aggs)
+
     def run_index_path():
         from ..fuzzy.verify import verify_mask
         stat = ex.stats.fuzzy_vectorized if is_fuzzy \
             else ex.stats.index_vectorized
         out: List[ColumnBatch] = []
         n_cand = n_found = n_valid = 0
+        empty_row = None
+        if aggs is not None:
+            from . import plancache as PC
+            # what LOCAL_AGG yields for an empty / padding partition
+            empty_row = PC.empty_partition_agg(aggs)
+
+        def emit_empty():
+            out.append(ColumnBatch.from_rows([dict(empty_row)])
+                       if aggs is not None else ColumnBatch({}, 0))
+
         for i in range(ds.num_partitions):
+            res = fused(i, cols) if fused is not None else None
+            if res is not None:
+                n_cand += res.n_cand
+                n_found += res.n_found
+                n_valid += res.n_valid
+                out.append(ColumnBatch.from_rows([res.row])
+                           if aggs is not None else res.batch)
+                continue
             if is_fuzzy:
                 # T-occurrence candidate bitmap, already position-aligned
                 # with the partition's scan batch — no PK intersection
@@ -560,12 +618,12 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
                                                fuzzy_spec)
                 n_cand += int(mask.sum())
                 if not mask.any():
-                    out.append(ColumnBatch({}, 0))   # no candidates
+                    emit_empty()                 # no candidates
                     continue
             else:
                 mask = _search_mask(ds, i, search)
                 if mask is None or not mask.any():
-                    out.append(ColumnBatch({}, 0))   # short-circuit: no scan
+                    emit_empty()                 # short-circuit: no scan
                     continue
                 n_cand += int(mask.sum())
             for f in extra_fields:
@@ -574,7 +632,7 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
                 lo, hi = ranges[f]
                 mask = mask & _range_mask(ds, i, f, lo, hi)
             if not mask.any():
-                out.append(ColumnBatch({}, 0))   # empty intersection
+                emit_empty()                     # empty intersection
                 continue
             n_found += int(mask.sum())           # live candidates gathered
             batch = ds.scan_partition_batch(i, cols)
@@ -589,8 +647,16 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
             else:
                 got = batch.filter(mask)
             n_valid += len(got)
-            out.append(got)
-        out += _empty(p - ds.num_partitions)
+            if aggs is not None:
+                row, _surv = O.aggregate_batch(got, aggs, partial=True)
+                out.append(ColumnBatch.from_rows([row]))
+            else:
+                out.append(got)
+        if aggs is not None:
+            for _ in range(p - ds.num_partitions):
+                emit_empty()
+        else:
+            out += _empty(p - ds.num_partitions)
         stat(search.kind, n_cand)
         if is_fuzzy:
             stat("T_OCCURRENCE", n_cand)

@@ -72,9 +72,10 @@ def make_range_preds(batch: ColumnBatch,
                 hi = None if hi is None else encode_scalar(hi, col.kind)
         except (TypeError, ValueError, OverflowError):
             return None
-        data, valid = col.padded()      # cached pow2 view: stable shapes
-        if col.kind == "bool":
-            data = data.astype(np.int64)
+        # cached pow2 views: stable shapes AND stable identities (the
+        # device buffer pool keys on these arrays)
+        data, valid = col.padded_int64() if col.kind == "bool" \
+            else col.padded()
         preds.append((data, valid, lo, hi))
     return preds
 
@@ -187,9 +188,9 @@ def _kernel_agg_cols(batch: ColumnBatch,
             continue
         if fn in ("sum", "avg") and col.kind not in ("i64", "f64", "bool"):
             continue
-        data, valid = col.padded()      # cached pow2 view: stable shapes
-        if col.kind == "bool":
-            data = data.astype(np.int64)
+        # cached pow2 views: stable shapes and pool-stable identities
+        data, valid = col.padded_int64() if col.kind == "bool" \
+            else col.padded()
         arrays.append((data, valid))
         meta.append((name, fn, col.kind, col))
     return arrays, meta

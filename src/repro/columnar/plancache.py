@@ -1,0 +1,366 @@
+"""Compiled fused Figure-6 chains: one cached jit dispatch per plan shape.
+
+The per-operator columnar index path (``lower._compile_index_path``) runs
+a secondary-index chain as a handful of kernel dispatches per partition:
+CSR probe scatter, extra-field bitmap ANDs, validate-range mask, then —
+under a LOCAL_AGG — the fused filter+aggregate reduction, with the
+candidate bitmap round-tripping to host between every step.  This module
+compiles the whole chain
+
+    index probe -> bitmap AND -> live gather -> filter / aggregate
+
+into a single jitted core (``_chain_core``) whose operands are the
+device-resident pooled buffers (``kernels/device_pool``): the per-tier
+pow2-padded CSR positions arrays, the live-selection index, and the
+partition batch's padded columns.  Probe bounds travel as dynamic 0-d
+scalars, so a repeated query over a warm pool is exactly one dispatch
+with ``h2d_bytes == 0`` and zero retraces.
+
+Plan shapes are keyed by the chain's op sequence plus every retrace-
+relevant static: pow2 buckets of the storage concat and live selection,
+per-field tier shape tuples, predicate/aggregate dtypes.  The
+:class:`PlanCache` records first sightings (``plan_cache.misses`` — the
+warm-up trace) vs. repeats (``plan_cache.hits``); the jit trace cache
+itself is the compiled artifact, so a hit is purely a dictionary probe.
+
+Declines are cheap and total: any input the fused core cannot represent
+exactly (unordered key dictionary, obj-degraded validate column, fuzzy
+chains, live/storage mismatches mid-race) returns None and the caller
+falls back to the per-operator path — results are bit-identical either
+way (``tests/test_residency.py`` checks this differentially).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .. import obs
+from ..kernels import device_pool as _pool
+from ..kernels.columnar_ops import _TRACES, _ident
+from ..obs import record_dispatch as _record_dispatch
+from ..obs import record_retrace as _record_retrace
+from .batch import ColumnBatch, pow2_len
+
+__all__ = ["PlanCache", "plan_cache", "set_enabled", "totals",
+           "compile_chain", "ChainResult"]
+
+_HITS = obs.counter("plan_cache.hits")
+_MISSES = obs.counter("plan_cache.misses")
+_ENTRIES = obs.gauge("plan_cache.entries")
+
+
+class PlanCache:
+    """Plan-shape accounting for the fused chain dispatch.  The jit trace
+    cache holds the compiled executables; this records which shapes have
+    been seen (hit/miss/entries metrics survive ``obs.reset`` via the
+    internal tallies, which :func:`totals` exposes for ExecStats
+    diffing)."""
+
+    def __init__(self) -> None:
+        self._keys: set = set()
+        self._hits = 0
+        self._misses = 0
+        self.enabled = True
+
+    def note(self, key: Tuple) -> bool:
+        """Record one fused dispatch under plan shape ``key``; True if the
+        shape was already compiled (a cache hit)."""
+        hit = key in self._keys
+        if hit:
+            self._hits += 1
+            _HITS.inc()
+        else:
+            self._keys.add(key)
+            self._misses += 1
+            _MISSES.inc()
+        # set (not inc) every note: the gauge resurvives obs.reset()
+        _ENTRIES.set(len(self._keys))
+        return hit
+
+    def totals(self) -> Tuple[int, int]:
+        return self._hits, self._misses
+
+    def entry_count(self) -> int:
+        return len(self._keys)
+
+    def clear(self) -> None:
+        """Forget seen plan shapes (metrics accounting only — compiled
+        jit traces persist, so re-seen shapes re-warm without a trace)."""
+        self._keys.clear()
+        _ENTRIES.set(0)
+
+
+plan_cache = PlanCache()
+
+
+def set_enabled(v: bool) -> None:
+    """Disable to force every chain down the per-operator legacy path
+    (the differential harness runs both and compares)."""
+    plan_cache.enabled = bool(v)
+
+
+def totals() -> Tuple[int, int]:
+    return plan_cache.totals()
+
+
+# ---------------------------------------------------------------------------
+# the fused core
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("total_p2", "live_p2"))
+def _chain_core(tiers, bounds, idx_pad, n_live, preds, aggds,
+                total_p2, live_p2):
+    """Whole-chain dispatch.  Static shapes: ``total_p2`` (pow2 bucket of
+    the storage concat the CSR positions scatter into) and ``live_p2``
+    (pow2 bucket of the live selection / partition batch).  Everything
+    else — probe slice bounds, tier offsets, live count, range bounds —
+    is a dynamic 0-d operand, so bound changes never retrace.
+
+    Per range field: scatter the in-slice posting positions (sentinel
+    slot ``total_p2`` swallows out-of-slice and padding lanes) into an
+    occurrence count over the storage concat, then gather the >0 bitmap
+    through the newest-wins live selection.  The first field is the
+    chain's own index search (its survivor count is ``n_cand``); the
+    rest AND in as the multi-index conjunction (``n_found``).  Validate
+    ranges AND in as column compares, and the optional aggregate tail
+    reduces survivors without materializing a gather."""
+    _TRACES["n"] += 1
+    _record_retrace()
+    lane = jnp.arange(live_p2, dtype=jnp.int64) < n_live
+    field_masks = []
+    for field_pos, field_bounds in zip(tiers, bounds):
+        cnt = jnp.zeros(total_p2 + 1, dtype=jnp.int32)
+        for pos, (a, b, off) in zip(field_pos, field_bounds):
+            iota = jnp.arange(pos.shape[0], dtype=jnp.int64)
+            sel = (iota >= a) & (iota < b)
+            tgt = jnp.where(sel, pos + off, total_p2)
+            cnt = cnt.at[tgt].add(1)
+        field_masks.append((cnt[:total_p2] > 0)[idx_pad])
+    cand = field_masks[0] & lane
+    n_cand = jnp.sum(cand)
+    comb = cand
+    for m in field_masks[1:]:
+        comb = comb & m
+    n_found = jnp.sum(comb)
+    mask = comb
+    for data, valid, lo, hi in preds:
+        mask = mask & valid & (data >= lo) & (data <= hi)
+    n_valid = jnp.sum(mask)
+    per_col = []
+    for data, valid in aggds:
+        ok = mask & valid
+        cnt_c = jnp.sum(ok)
+        s = jnp.sum(jnp.where(ok, data, jnp.asarray(0, data.dtype)))
+        mn = jnp.min(jnp.where(ok, data, _ident(data.dtype, True)))
+        mx = jnp.max(jnp.where(ok, data, _ident(data.dtype, False)))
+        per_col.append((s, mn, mx, cnt_c))
+    return n_cand, n_found, n_valid, mask, tuple(per_col)
+
+
+# ---------------------------------------------------------------------------
+# host wrapper: gather operands, key the shape, dispatch, assemble
+# ---------------------------------------------------------------------------
+
+class ChainResult:
+    """One partition's fused chain outcome.  ``batch`` carries the
+    gathered survivors (mask mode) or None (aggregate mode, where ``row``
+    holds the partial-aggregate row instead)."""
+
+    __slots__ = ("batch", "row", "n_cand", "n_found", "n_valid")
+
+    def __init__(self, batch, row, n_cand, n_found, n_valid):
+        self.batch = batch
+        self.row = row
+        self.n_cand = n_cand
+        self.n_found = n_found
+        self.n_valid = n_valid
+
+
+def _field_tiers(ds: Any, i: int, fld: str, lo: Any, hi: Any
+                 ) -> Optional[Tuple[List[np.ndarray], List[Tuple], int,
+                                     np.ndarray]]:
+    """(padded per-tier positions, per-tier (a, b, off) bounds, storage
+    concat length, live index) for one range field, or None when any tier
+    defeats the fused representation (unordered keys, unencodable
+    bounds)."""
+    sources, total, idx = ds.secondary_fused_inputs(i, fld)
+    pads: List[np.ndarray] = []
+    abs_: List[Tuple] = []
+    for off, p in sources:
+        ab = p.range_offsets(lo, hi)
+        if ab is None:
+            return None
+        pads.append(p.padded_positions())
+        abs_.append((ab[0], ab[1], off))
+    return pads, abs_, total, idx
+
+
+def compile_chain(ds: Any, *, chain_ops: Tuple[str, ...], search_field: str,
+                  search_bounds: Tuple[Any, Any],
+                  extra: Sequence[Tuple[str, Any, Any]],
+                  validate_ranges: Dict[str, Tuple[Any, Any]],
+                  pred: Optional[Any], residual: bool,
+                  fields: Sequence[str],
+                  aggs: Optional[Dict[str, Tuple[str, str]]] = None):
+    """Compile-time half of the fused chain: returns a per-partition
+    runner ``run(i, cols) -> Optional[ChainResult]`` or None when the
+    chain can never fuse (dataset without the raw-operand surface,
+    aggregate mode with a residual row predicate — the gathered-survivor
+    semantics the core cannot reduce on-device)."""
+    if not hasattr(ds, "secondary_fused_inputs"):
+        return None
+    if aggs is not None and residual and pred is not None:
+        # legacy aggregates the row-checked survivors; the core cannot
+        return None
+    range_fields = [(search_field, search_bounds[0], search_bounds[1])]
+    range_fields += [tuple(e) for e in extra]
+
+    def run(i: int, cols: Optional[Sequence[str]]
+            ) -> Optional[ChainResult]:
+        from . import operators as O
+        if not plan_cache.enabled:
+            return None
+        tiers: List[Tuple[np.ndarray, ...]] = []
+        bounds: List[Tuple[Tuple, ...]] = []
+        total0 = idx0 = None
+        for fld, lo, hi in range_fields:
+            ft = _field_tiers(ds, i, fld, lo, hi)
+            if ft is None:
+                return None
+            pads, abs_, total, idx = ft
+            if total0 is None:
+                total0, idx0 = total, idx
+            elif total != total0 or idx is not idx0:
+                return None        # raced a writer between field probes
+            tiers.append(tuple(pads))
+            bounds.append(tuple(abs_))
+        n_live = int(idx0.shape[0])
+        if total0 == 0 or n_live == 0:
+            return None            # legacy short-circuits these for free
+        batch = ds.scan_partition_batch(i, cols)
+        if len(batch) != n_live:
+            return None            # raced a writer between probe and scan
+        preds = []
+        if validate_ranges:
+            made = O.make_range_preds(batch, validate_ranges)
+            if made is None or made is O.EMPTY:
+                return None
+            preds = made
+        agg_arrays: List[Tuple[np.ndarray, np.ndarray]] = []
+        agg_meta: List[Tuple] = []
+        if aggs is not None:
+            agg_arrays, agg_meta = O._kernel_agg_cols(batch, aggs)
+        total_p2 = pow2_len(total0)
+        idx_pad = _pool.padded(idx0, fill="zero")
+        live_p2 = int(idx_pad.shape[0])
+        # every padded column must sit in the same pow2 bucket as the
+        # live selection, or the core's mask/data shapes disagree
+        if any(int(d.shape[0]) != live_p2 for d, _v, _lo, _hi in preds) \
+                or any(int(d.shape[0]) != live_p2 for d, _v in agg_arrays):
+            return None
+        key = (chain_ops, total_p2, live_p2,
+               tuple(tuple(int(p.shape[0]) for p in fp) for fp in tiers),
+               tuple(str(d.dtype) for d, _v, _lo, _hi in preds),
+               tuple(str(d.dtype) for d, _v in agg_arrays),
+               aggs is not None)
+        plan_cache.note(key)
+
+        flat: List[np.ndarray] = []
+        for fp in tiers:
+            flat.extend(fp)
+        flat.append(idx_pad)
+        for d, v, _lo, _hi in preds:
+            flat.extend((d, v))
+        for d, v in agg_arrays:
+            flat.extend((d, v))
+        ops, missed = _pool.fetch(flat)
+        it = iter(ops)
+        dev_tiers = tuple(tuple(next(it) for _ in fp) for fp in tiers)
+        dev_idx = next(it)
+        dev_preds = []
+        for _d, _v, lo, hi in preds:
+            dd, dv = next(it), next(it)
+            blo, bhi = _prep_pred_bounds(_d, lo, hi)
+            dev_preds.append((dd, dv, blo, bhi))
+        dev_aggs = tuple((next(it), next(it)) for _ in agg_arrays)
+        dev_bounds = tuple(
+            tuple((np.asarray(a, np.int64), np.asarray(b, np.int64),
+                   np.asarray(off, np.int64)) for a, b, off in fb)
+            for fb in bounds)
+        with enable_x64():
+            outs = _chain_core(dev_tiers, dev_bounds, dev_idx,
+                               np.asarray(n_live, np.int64),
+                               tuple(dev_preds), dev_aggs,
+                               total_p2=total_p2, live_p2=live_p2)
+            n_cand, n_found, n_valid, mask_d, per_col = jax.device_get(outs)
+        mask_np = np.asarray(mask_d)
+        _record_dispatch("fused_index_chain", h2d=missed, d2h=[mask_np])
+        n_cand, n_found, n_valid = int(n_cand), int(n_found), int(n_valid)
+
+        if aggs is None:
+            got = batch.filter(mask_np[:n_live])
+            if residual and pred is not None and len(got):
+                view = got.project(list(fields)) if fields else got
+                rows = view.to_rows()
+                keep = np.fromiter((bool(pred(r)) for r in rows),
+                                   dtype=bool, count=len(rows))
+                got = got.filter(keep)
+            return ChainResult(got, None, n_cand, n_found, len(got))
+
+        # aggregate mode: device scalars for kernelable columns, one host
+        # pass over the gathered survivors for the rest — exactly
+        # ``operators.aggregate_batch`` over the filtered batch
+        row: Dict[str, Any] = {}
+        by_name = {m[0]: (j, m) for j, m in enumerate(agg_meta)}
+        got = None
+        for name, (fn, cname) in aggs.items():
+            if fn == "count" and cname == "*":
+                row[name] = n_valid
+                continue
+            if name in by_name and by_name[name][1][1] == fn:
+                j, (_, _, kind, col) = by_name[name]
+                s, mn, mx, c = per_col[j]
+                c = int(c)
+                s = s.item()
+                mn = O._decode_agg(mn.item() if c else None, kind, col)
+                mx = O._decode_agg(mx.item() if c else None, kind, col)
+                if kind == "i64" and isinstance(s, float):
+                    s = int(s)
+                O._finish_agg(row, name, fn, True, c, s, mn, mx)
+                continue
+            if got is None:        # numpy gather, no kernel dispatch
+                got = batch.filter(mask_np[:n_live])
+            vals = got.to_rows() if cname == "*" \
+                else O._py_agg_vals(got, cname)
+            reduce_sum = fn in ("sum", "avg") and vals and cname != "*"
+            O._finish_agg(row, name, fn, True, len(vals),
+                          sum(vals) if reduce_sum else 0,
+                          min(vals) if (fn == "min" and vals
+                                        and cname != "*") else None,
+                          max(vals) if (fn == "max" and vals
+                                        and cname != "*") else None)
+        return ChainResult(None, row, n_cand, n_found, n_valid)
+
+    return run
+
+
+def _prep_pred_bounds(data: np.ndarray, lo: Any, hi: Any
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Same-dtype 0-d bound operands (unbounded -> dtype extremes), the
+    ``columnar_ops._prep_bounds`` contract."""
+    from ..kernels.columnar_ops import _prep_bounds
+    return _prep_bounds(data, lo, hi)
+
+
+def empty_partition_agg(aggs: Dict[str, Tuple[str, str]]) -> Dict[str, Any]:
+    """The partial-aggregate row of an empty partition (what the legacy
+    LOCAL_AGG computes for short-circuited / padding partitions)."""
+    from . import operators as O
+    row, _ = O.aggregate_batch(ColumnBatch({}, 0), aggs, partial=True)
+    return row

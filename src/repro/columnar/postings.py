@@ -37,12 +37,13 @@ module now imports — one copy of the pattern for all four index kinds.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.functions import spatial_cell, word_tokens
+from .batch import pow2_len
 from .schema import encode_scalar
 
 __all__ = ["FieldPostings", "csr_from_pairs", "segment_gather",
@@ -141,6 +142,10 @@ class FieldPostings:
     has_value: np.ndarray     # bool [n_rows]
     n_rows: int
     ordered: bool = True
+    # pow2-padded positions view, built once per immutable postings
+    # (Column.padded idiom): stable identity == stable device-pool key
+    _padded: Optional[np.ndarray] = field(default=None, repr=False,
+                                          compare=False)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -355,14 +360,18 @@ class FieldPostings:
             return v
         return v                      # obj domain: probe with raw values
 
-    def range_positions(self, lo: Any, hi: Any) -> np.ndarray:
-        """Row positions whose key falls in [lo, hi] (raw, unencoded
-        bounds; None = unbounded): two binary searches over the key
-        dictionary, one contiguous positions slice."""
-        if self.keys.shape[0] == 0:
-            return _EMPTY_I64
+    def range_offsets(self, lo: Any, hi: Any) -> Optional[Tuple[int, int]]:
+        """Positions-slice bounds ``[a, b)`` covering keys in [lo, hi]
+        (raw, unencoded bounds; None = unbounded): two binary searches
+        over the key dictionary.  Returns None when the dictionary is
+        unordered or a bound cannot be encoded — callers fall back to
+        the per-key filter.  The scalar pair (rather than the slice
+        itself) is what the fused chain ships to the device, so the
+        pooled ``padded_positions`` array stays the only big operand."""
         if not self.ordered:
-            return self._filter_positions(lo, hi)
+            return None
+        if self.keys.shape[0] == 0:
+            return (0, 0)
         try:
             i = 0 if lo is None else int(
                 np.searchsorted(self.keys, self._encode_bound(lo, True),
@@ -371,10 +380,40 @@ class FieldPostings:
                 np.searchsorted(self.keys, self._encode_bound(hi, False),
                                 side="right"))
         except (TypeError, ValueError, OverflowError):
-            return self._filter_positions(lo, hi)
+            return None
         if j <= i:
+            return (0, 0)
+        return (int(self.offsets[i]), int(self.offsets[j]))
+
+    def range_positions(self, lo: Any, hi: Any) -> np.ndarray:
+        """Row positions whose key falls in [lo, hi]: one contiguous
+        positions slice via ``range_offsets``, or the per-key filter
+        when the bounds defeat the sorted dictionary."""
+        ab = self.range_offsets(lo, hi)
+        if ab is None:
+            return self._filter_positions(lo, hi)
+        a, b = ab
+        if b <= a:
             return _EMPTY_I64
-        return self.positions[self.offsets[i]:self.offsets[j]]
+        return self.positions[a:b]
+
+    def padded_positions(self) -> np.ndarray:
+        """Pow2-padded positions array, built once per immutable postings
+        (``Column.padded`` idiom).  Padding lanes are zero and must be
+        masked by the caller's ``[a, b)`` slice bounds (the fused chain
+        selects lanes by offset, so padding never counts); the stable
+        identity makes this a device-pool key for the component's whole
+        lifetime."""
+        if self._padded is None:
+            n = int(self.positions.shape[0])
+            np2 = pow2_len(n)
+            if np2 == n and n > 0:
+                self._padded = self.positions
+            else:
+                pad = np.zeros(max(np2, 1), dtype=np.int64)
+                pad[:n] = self.positions
+                self._padded = pad
+        return self._padded
 
     def _filter_positions(self, lo: Any, hi: Any) -> np.ndarray:
         """Per-key fallback over the (small, distinct) key dictionary for

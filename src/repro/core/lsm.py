@@ -100,6 +100,15 @@ _DEFERRED = _obs.counter("lsm.deferred_retires")
 _PINNED_G = _obs.gauge("lsm.pinned_snapshots")
 
 
+def _pool_release(comp: "Component") -> None:
+    """Device-pool eviction hook: a component's device buffers are freed
+    at the exact moment its ``retired`` flag flips — immediately at merge
+    when unpinned, or deferred until the last snapshot pin drops (lazy
+    import: the storage layer works without the kernel stack loaded)."""
+    from ..kernels.device_pool import pool
+    pool.release_component(comp)
+
+
 def _arr_nbytes(a: Optional[np.ndarray]) -> int:
     if a is None:
         return 0
@@ -570,6 +579,10 @@ class LSMIndex:
             for dead in retire:
                 dead.retired = True
                 self.stats["deferred_retires"] += 1
+        for dead in retire:
+            # deferred half of the device-pool eviction discipline: the
+            # buffers outlived the merge exactly as long as the pins did
+            _pool_release(dead)
         if retire:
             _DEFERRED.inc(len(retire))
         _PINNED_G.dec()
@@ -589,6 +602,7 @@ class LSMIndex:
                 c.retired = True
                 self.stats["deferred_retires"] += 1
                 _DEFERRED.inc()
+                _pool_release(c)       # merged away, unpinned: free now
 
     # -- update path (record-level "transactions": WAL then apply) ---------
     def insert(self, key: Any, row: Any) -> None:

@@ -35,11 +35,12 @@ them), never false negatives:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from ..columnar.batch import pow2_len
 from ..columnar.postings import csr_from_pairs, segment_gather
 from ..core.functions import (edit_distance_check, gram_tokens,
                               similarity_jaccard_check)
@@ -90,6 +91,24 @@ class GramPostings:
     positions: np.ndarray   # int64 row positions, grouped by gram
     has_value: np.ndarray   # bool [n_rows]
     n_rows: int
+    # pow2-padded positions view, built once per immutable postings
+    # (Column.padded idiom): stable identity == stable device-pool key
+    _padded: Any = field(default=None, repr=False, compare=False)
+
+    def padded_positions(self) -> np.ndarray:
+        """Pow2-padded positions array, built once (zero fill; padding
+        lanes must be masked by the caller's CSR offset bounds).  Stable
+        identity makes it a device-pool key for the component lifetime."""
+        if self._padded is None:
+            n = int(self.positions.shape[0])
+            np2 = pow2_len(n)
+            if np2 == n and n > 0:
+                self._padded = self.positions
+            else:
+                pad = np.zeros(max(np2, 1), dtype=np.int64)
+                pad[:n] = self.positions
+                self._padded = pad
+        return self._padded
 
     @classmethod
     def _empty(cls, k: int, has_value: np.ndarray) -> "GramPostings":

@@ -45,6 +45,7 @@ from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 
 from .ops import use_pallas
+from . import device_pool as _pool
 from ..obs import record_dispatch as _record_dispatch
 from ..obs import record_retrace as _record_retrace
 # the canonical pow2 helper lives with the padded-column storage it
@@ -153,9 +154,12 @@ def _pad_pred(p: Pred, np2: int) -> Pred:
             np.concatenate([valid, np.zeros(pad, dtype=bool)]), lo, hi)
 
 
+@functools.lru_cache(maxsize=64)
 def _live_pred(n: int, np2: int) -> Pred:
     """Unbounded predicate whose validity bitmap is the row-liveness flag
-    (True for the first ``n`` rows): ANDing it in masks padding out."""
+    (True for the first ``n`` rows): ANDing it in masks padding out.
+    Memoized per (n, np2) bucket so repeated no-predicate aggregates hand
+    the buffer pool the same arrays instead of re-allocating per query."""
     live = np.zeros(np2, dtype=bool)
     live[:n] = True
     return (np.zeros(np2, dtype=np.float64), live, None, None)
@@ -168,11 +172,15 @@ def _mask_jnp(preds: Sequence[Pred], n: int) -> np.ndarray:
     np2 = max(_pow2_len(n),
               max(int(p[0].shape[0]) for p in preds))
     preds = [_pad_pred(p, np2) for p in preds]
+    datas, valids, los, his = _split_preds(preds)
+    # already-resident operands (pooled component views) ship nothing;
+    # only this call's actual uploads count as h2d
+    k = len(datas)
+    ops, missed = _pool.fetch(list(datas) + list(valids))
     with enable_x64():
-        out = np.asarray(_mask_core(*_split_preds(preds)))
-    _record_dispatch("range_mask",
-                     h2d=[a for p in preds for a in (p[0], p[1])],
-                     d2h=[out])
+        out = np.asarray(_mask_core(tuple(ops[:k]), tuple(ops[k:]),
+                                    los, his))
+    _record_dispatch("range_mask", h2d=missed, d2h=[out])
     return out[:n]
 
 
@@ -200,14 +208,14 @@ def _agg_jnp(preds: Sequence[Pred],
                     [valid, np.zeros(pad, dtype=bool)])
             padded_aggs.append((data, valid))
         datas, valids, los, his = _split_preds(preds)
+        k, m = len(datas), len(padded_aggs)
+        ops, missed = _pool.fetch(
+            list(datas) + list(valids)
+            + [a[0] for a in padded_aggs] + [a[1] for a in padded_aggs])
         total, per_col = _agg_core(
-            datas, valids, los, his,
-            tuple(a[0] for a in padded_aggs),
-            tuple(a[1] for a in padded_aggs))
-        _record_dispatch(
-            "fused_filter_aggregate",
-            h2d=[a for p in preds for a in (p[0], p[1])]
-                + [a for pa in padded_aggs for a in pa])
+            tuple(ops[:k]), tuple(ops[k:2 * k]), los, his,
+            tuple(ops[2 * k:2 * k + m]), tuple(ops[2 * k + m:]))
+        _record_dispatch("fused_filter_aggregate", h2d=missed)
         out: Dict[str, Any] = {"count": int(total), "sums": [], "mins": [],
                                "maxs": [], "cnts": []}
         for s, mn, mx, cnt in per_col:
@@ -399,23 +407,49 @@ def _sorted_merge_mask(keys: np.ndarray, cands: np.ndarray) -> np.ndarray:
 def _pow2_pad(arr: np.ndarray) -> np.ndarray:
     """Pad a sorted array to the next power of two by duplicating its last
     element (stays sorted; duplicates never flip membership), bounding the
-    jit retrace count to O(log n * log m) shape pairs."""
-    n = arr.shape[0]
-    np2 = _pow2_len(n)
-    if np2 == n:
-        return arr
-    return np.concatenate([arr, np.full(np2 - n, arr[-1],
-                                        dtype=arr.dtype)])
+    jit retrace count to O(log n * log m) shape pairs.  Memoized by array
+    identity in the device pool, so repeated probes over the same sorted
+    keys reuse one padded view — which is itself a stable pool key."""
+    return _pool.padded(arr, fill="edge")
+
+
+@jax.jit
+def _intersect_rank_core(keys, cands):
+    """Membership plus its exclusive-cumsum rank fused into one dispatch:
+    the merge path consumes the device mask on-device instead of round-
+    tripping it to host between the bitmap and the rank pass."""
+    _TRACES["n"] += 1
+    _record_retrace()
+    n = keys.shape[0]
+    pos = jnp.searchsorted(keys, cands)
+    posc = jnp.clip(pos, 0, n - 1)
+    hit = (pos < n) & (keys[posc] == cands)
+    mask = jnp.zeros(n, dtype=jnp.int32)
+    mem = mask.at[posc].add(hit.astype(jnp.int32)) > 0
+    memi = mem.astype(jnp.int64)
+    return mem, jnp.cumsum(memi) - memi
 
 
 def _intersect_jnp(keys: np.ndarray, cands: np.ndarray) -> np.ndarray:
     n = keys.shape[0]
-    kp, cp = _pow2_pad(keys), _pow2_pad(cands)
+    ops, missed = _pool.fetch([_pow2_pad(keys), _pow2_pad(cands)])
     with enable_x64():
-        mask = np.asarray(_intersect_core(jnp.asarray(kp),
-                                          jnp.asarray(cp)))
-    _record_dispatch("sorted_intersect_mask", h2d=[kp, cp], d2h=[mask])
+        mask = np.asarray(_intersect_core(ops[0], ops[1]))
+    _record_dispatch("sorted_intersect_mask", h2d=missed, d2h=[mask])
     return mask[:n]
+
+
+def _intersect_rank_jnp(keys: np.ndarray, cands: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(membership, exclusive-cumsum rank) over ``keys`` in one dispatch
+    (see ``_intersect_rank_core``)."""
+    n = keys.shape[0]
+    ops, missed = _pool.fetch([_pow2_pad(keys), _pow2_pad(cands)])
+    with enable_x64():
+        mem_d, rank_d = _intersect_rank_core(ops[0], ops[1])
+        mem, rank = np.asarray(mem_d), np.asarray(rank_d)
+    _record_dispatch("sorted_intersect_mask", h2d=missed, d2h=[mem, rank])
+    return mem[:n], rank[:n]
 
 
 def _intersect_kernel(k_ref, c_ref, o_ref, *, m):
@@ -623,15 +657,18 @@ def sorted_merge_take(key_arrays: Sequence[np.ndarray],
                 mem = sorted_intersect_mask(union, arrays[i],
                                             force_pallas=force_pallas,
                                             interpret=interpret)
-            else:
+                pos = np.cumsum(mem) - mem  # exclusive cumsum == rank in c
+            elif union.shape[0] + arrays[i].shape[0] <= 1 << 20:
                 # merges see each (union, component) shape pair once, so
                 # the jitted oracle's trace never amortizes off-TPU: the
                 # host sorted merge gets a much higher floor than the
                 # (repeatedly-hit) intersect kernel's
-                mem = _sorted_merge_mask(union, arrays[i]) \
-                    if union.shape[0] + arrays[i].shape[0] <= 1 << 20 \
-                    else _intersect_jnp(union, arrays[i])
-            pos = np.cumsum(mem) - mem      # exclusive cumsum == rank in c
+                mem = _sorted_merge_mask(union, arrays[i])
+                pos = np.cumsum(mem) - mem
+            else:
+                # membership + rank fused on-device: the mask never
+                # round-trips to host just to feed the cumsum
+                mem, pos = _intersect_rank_jnp(union, arrays[i])
             sel = (take < 0) & mem
             take[sel] = offs[i] + pos[sel]
     else:

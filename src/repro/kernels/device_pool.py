@@ -1,0 +1,275 @@
+"""Device-resident buffer pool for immutable columnar operands.
+
+LSM components never mutate — they appear at flush/merge and retire when
+replaced — so their pow2-padded column arrays and CSR postings arrays
+are safe to keep device-side across queries.  The pool maps a *host*
+array (by identity) to its device copy: the first touch uploads (the
+caller records the host bytes as ``h2d``), every later touch returns the
+resident copy for free.  Because kernel wrappers only account
+``np.ndarray`` operands as transfer bytes (``obs.record_dispatch``), a
+fully-resident dispatch naturally reports ``h2d_bytes == 0``.
+
+Keying is by ``id(arr)`` guarded with a weak reference: the pow2-padded
+views are already shape- and identity-stable per LSM version
+(``Column.padded``, ``FieldPostings.padded_positions``, the partition
+scan cache), so one component column is one pool entry for the
+component's whole lifetime.  Eviction is driven from two sides:
+
+  * ``core/lsm.py`` calls :func:`release_component` at the two places a
+    component's ``retired`` flag flips — immediate retirement at merge,
+    or deferred retirement once the last snapshot pin drops — the same
+    discipline the host arrays already follow;
+  * a ``weakref.finalize`` per entry evicts when the host array is
+    garbage-collected anyway (dropped scan-cache versions, pre-crash
+    memtable postings after ``crash_and_recover``, throwaway operands),
+    so the pool cannot leak buffers for arrays nothing references.
+
+Metrics (see the registry docstring in ``obs/__init__``):
+``buffer_pool.hits`` / ``buffer_pool.misses`` / ``buffer_pool.evictions``
+counters and the ``buffer_pool.resident_bytes`` gauge.
+
+The pool also memoizes *host-side* pow2 padding (:meth:`DevicePool.padded`)
+so repeated probes over the same sorted-key arrays reuse one padded view
+— which is what makes the padded array a stable pool key in turn.
+"""
+
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .. import obs
+from ..columnar.batch import pow2_len as _pow2_len
+
+__all__ = ["DevicePool", "pool", "fetch", "padded", "release_component",
+           "clear", "stats"]
+
+_HITS = obs.counter("buffer_pool.hits")
+_MISSES = obs.counter("buffer_pool.misses")
+_EVICTIONS = obs.counter("buffer_pool.evictions")
+_RESIDENT = obs.gauge("buffer_pool.resident_bytes")
+
+
+def _poolable(a: Any) -> bool:
+    return isinstance(a, np.ndarray) and a.dtype != object
+
+
+class DevicePool:
+    """Identity-keyed host->device buffer cache (thread-safe)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        # id(host) -> (weakref(host), device, nbytes, finalizer)
+        self._entries: Dict[int, Tuple[Any, Any, int, Any]] = {}
+        # (id(host), fill) -> (weakref(host), padded host, finalizer)
+        self._pads: Dict[Tuple[int, str], Tuple[Any, np.ndarray, Any]] = {}
+        self._resident = 0
+
+    # -- residency ----------------------------------------------------------
+
+    def get(self, arr: np.ndarray) -> Tuple[Any, bool]:
+        """Device copy of ``arr`` plus whether it was already resident.
+        Uploads happen under ``enable_x64`` so int64/float64 operands
+        keep their width (matching the jnp-oracle kernel convention)."""
+        key = id(arr)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and e[0]() is arr:
+                _HITS.inc()
+                return e[1], True
+        with enable_x64():
+            dev = jnp.asarray(arr)
+        nb = int(arr.nbytes)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                if e[0]() is arr:          # lost an upload race: keep first
+                    _HITS.inc()
+                    return e[1], True
+                self._drop(key, e)         # stale entry under a reused id
+            fin = weakref.finalize(arr, self._on_dead, key)
+            fin.atexit = False
+            self._entries[key] = (weakref.ref(arr), dev, nb, fin)
+            self._resident += nb
+            _RESIDENT.set(self._resident)
+        _MISSES.inc()
+        return dev, False
+
+    def fetch(self, arrs: Sequence[Any]) -> Tuple[List[Any], List[Any]]:
+        """Map operands to device copies.  Returns ``(operands, missed)``
+        where ``missed`` lists the host arrays uploaded by this call —
+        exactly what the caller should report as ``h2d`` (pool hits ship
+        nothing; non-poolable operands pass through untouched and keep
+        their existing accounting)."""
+        out: List[Any] = []
+        missed: List[Any] = []
+        for a in arrs:
+            if _poolable(a):
+                dev, hit = self.get(a)
+                out.append(dev)
+                if not hit:
+                    missed.append(a)
+            else:
+                out.append(a)
+        return out, missed
+
+    # -- host-side pad memo -------------------------------------------------
+
+    def padded(self, arr: np.ndarray, fill: str = "edge") -> np.ndarray:
+        """Pow2-padded host view of a 1-d array, memoized by identity so
+        the padded array (the actual pool key) is stable across calls.
+        ``fill="edge"`` repeats the last element (keeps sorted arrays
+        sorted); ``fill="zero"`` pads with zeros (safe for index arrays
+        whose padding lanes are masked out)."""
+        n = int(arr.shape[0])
+        np2 = _pow2_len(n)
+        if np2 == n and n > 0:
+            return arr
+        key = (id(arr), fill)
+        with self._lock:
+            m = self._pads.get(key)
+            if m is not None and m[0]() is arr:
+                return m[1]
+        if n == 0:
+            pad = np.zeros(max(np2, 1), dtype=arr.dtype)
+        elif fill == "edge":
+            pad = np.concatenate(
+                [arr, np.full(np2 - n, arr[-1], dtype=arr.dtype)])
+        else:
+            pad = np.concatenate([arr, np.zeros(np2 - n, dtype=arr.dtype)])
+        with self._lock:
+            m = self._pads.get(key)
+            if m is not None and m[0]() is arr:
+                return m[1]
+            fin = weakref.finalize(arr, self._on_dead_pad, key)
+            fin.atexit = False
+            self._pads[key] = (weakref.ref(arr), pad, fin)
+        return pad
+
+    # -- eviction -----------------------------------------------------------
+
+    def release(self, arr: Any) -> None:
+        """Explicitly evict ``arr``'s device copy and any padded views
+        derived from it (their own device copies included)."""
+        if not isinstance(arr, np.ndarray):
+            return
+        with self._lock:
+            for fill in ("edge", "zero"):
+                m = self._pads.pop((id(arr), fill), None)
+                if m is not None:
+                    m[2].detach()
+                    self._release_exact(m[1])
+            self._release_exact(arr)
+
+    def release_component(self, comp: Any) -> None:
+        """Eviction hook for LSM component retirement: free every device
+        buffer backed by the component's arrays (keys, tombstones, batch
+        columns + their cached padded/int64 views, secondary and ngram
+        postings + their cached padded positions)."""
+        arrs: List[Any] = [getattr(comp, "keys", None),
+                           getattr(comp, "tomb", None)]
+        batch = getattr(comp, "batch", None)
+        if batch is not None:
+            for col in batch.columns.values():
+                arrs.extend((col.data, col.valid))
+                for cached in (getattr(col, "_padded", None),
+                               getattr(col, "_padded_i64", None)):
+                    if cached is not None:
+                        arrs.extend(cached)
+        posts = list(getattr(comp, "sec_postings", {}).values()) \
+            + list(getattr(comp, "gram_postings", {}).values())
+        for p in posts:
+            if p is None:
+                continue
+            arrs.extend((getattr(p, "keys", None), p.offsets, p.positions,
+                         p.has_value, getattr(p, "_padded", None)))
+        with self._lock:
+            for a in arrs:
+                if a is not None:
+                    self.release(a)
+
+    def clear(self) -> int:
+        """Evict everything (bench cold-start helper).  Returns the
+        number of entries dropped."""
+        with self._lock:
+            n = len(self._entries)
+            for key, e in list(self._entries.items()):
+                self._drop(key, e)
+            for m in self._pads.values():
+                m[2].detach()
+            self._pads.clear()
+            return n
+
+    # -- introspection ------------------------------------------------------
+
+    def resident_bytes(self) -> int:
+        return self._resident
+
+    def entry_count(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries),
+                "resident_bytes": self._resident,
+                "hits": _HITS.value, "misses": _MISSES.value,
+                "evictions": _EVICTIONS.value}
+
+    # -- internals ----------------------------------------------------------
+
+    def _release_exact(self, arr: np.ndarray) -> None:
+        e = self._entries.get(id(arr))
+        if e is not None and (e[0]() is arr or e[0]() is None):
+            self._drop(id(arr), e)
+
+    def _drop(self, key: int, e: Tuple[Any, Any, int, Any]) -> None:
+        if self._entries.get(key) is not e:
+            return
+        del self._entries[key]
+        e[3].detach()
+        self._resident -= e[2]
+        _RESIDENT.set(self._resident)
+        _EVICTIONS.inc()
+
+    def _on_dead(self, key: int) -> None:
+        # host array was garbage-collected: drop the device copy (RLock:
+        # safe even if the collection triggered under our own lock)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and e[0]() is None:
+                self._drop(key, e)
+
+    def _on_dead_pad(self, key: Tuple[int, str]) -> None:
+        with self._lock:
+            m = self._pads.pop(key, None)
+            # the padded host array dies with the memo entry; its own
+            # finalizer then evicts its device copy
+            if m is not None:
+                m[2].detach()
+
+
+pool = DevicePool()
+
+
+def fetch(arrs: Sequence[Any]) -> Tuple[List[Any], List[Any]]:
+    return pool.fetch(arrs)
+
+
+def padded(arr: np.ndarray, fill: str = "edge") -> np.ndarray:
+    return pool.padded(arr, fill)
+
+
+def release_component(comp: Any) -> None:
+    pool.release_component(comp)
+
+
+def clear() -> int:
+    return pool.clear()
+
+
+def stats() -> Dict[str, int]:
+    return pool.stats()

@@ -37,6 +37,7 @@ from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 
 from .ops import use_pallas
+from . import device_pool as _pool
 from .columnar_ops import _TRACES
 from ..obs import record_dispatch as _record_dispatch
 from ..obs import record_retrace as _record_retrace
@@ -100,10 +101,11 @@ def _tocc_jnp(positions: np.ndarray, n: int, threshold: int) -> np.ndarray:
     mp = _pow2_len(m)
     pos = np.concatenate([positions.astype(np.int64),
                           np.full(mp - m, np2, dtype=np.int64)])
+    ops, missed = _pool.fetch([pos])
     with enable_x64():
-        mask = np.asarray(_tocc_core(jnp.asarray(pos),
+        mask = np.asarray(_tocc_core(ops[0],
                                      jnp.asarray(threshold, jnp.int32), np2))
-    _record_dispatch("t_occurrence_mask", h2d=[pos], d2h=[mask])
+    _record_dispatch("t_occurrence_mask", h2d=missed, d2h=[mask])
     return mask[:n]
 
 
@@ -268,11 +270,12 @@ def _ed_jnp(strings: Sequence[str], query: str, d: int) -> np.ndarray:
     if query:
         q[:len(query)] = np.fromiter(map(ord, query), dtype=np.int32,
                                      count=len(query))
+    ops, missed = _pool.fetch([cand, lpad, q])
     with enable_x64():
         out = np.asarray(_ed_core(
-            jnp.asarray(cand), jnp.asarray(lpad), jnp.asarray(q),
+            ops[0], ops[1], ops[2],
             jnp.asarray(len(query), jnp.int64), jnp.asarray(d, jnp.int64)))
-    _record_dispatch("edit_distances", h2d=[cand, lpad, q], d2h=[out])
+    _record_dispatch("edit_distances", h2d=missed, d2h=[out])
     return out[:B]
 
 
@@ -379,12 +382,10 @@ def _inter_core(a, alens, b):
 
 
 def _inter_jnp(a_mat, alens, b_mat) -> np.ndarray:
+    ops, missed = _pool.fetch([a_mat, alens, b_mat])
     with enable_x64():
-        out = np.asarray(_inter_core(jnp.asarray(a_mat),
-                                     jnp.asarray(alens),
-                                     jnp.asarray(b_mat)))
-    _record_dispatch("set_intersect_counts",
-                     h2d=[a_mat, alens, b_mat], d2h=[out])
+        out = np.asarray(_inter_core(ops[0], ops[1], ops[2]))
+    _record_dispatch("set_intersect_counts", h2d=missed, d2h=[out])
     return out
 
 
@@ -548,10 +549,11 @@ def bitset_intersect_counts(bits: np.ndarray, ai: np.ndarray,
         bits = np.concatenate(
             [bits, np.zeros((rp - bits.shape[0], bits.shape[1]),
                             dtype=np.uint32)])
-    out = np.asarray(_popcount_inter_core(
-        jnp.asarray(bits), jnp.asarray(ai), jnp.asarray(bi)))
-    _record_dispatch("bitset_intersect_counts",
-                     h2d=[bits, ai, bi], d2h=[out])
+    # the record bitset matrix is reused across outer batches of a fuzzy
+    # join: pooling it means only the per-batch index arrays re-ship
+    ops, missed = _pool.fetch([bits, ai, bi])
+    out = np.asarray(_popcount_inter_core(ops[0], ops[1], ops[2]))
+    _record_dispatch("bitset_intersect_counts", h2d=missed, d2h=[out])
     return out[:P].astype(np.int64)
 
 

@@ -49,7 +49,30 @@ Metric name registry (``metrics.snapshot()`` keys):
     kernel.<name>.d2h_bytes     fused_filter_aggregate,
                                 sorted_intersect_mask, t_occurrence_mask,
                                 edit_distances, set_intersect_counts,
-                                bitset_intersect_counts)
+                                bitset_intersect_counts, and
+                                fused_index_chain — the whole Figure-6
+                                chain as one dispatch per partition,
+                                columnar/plancache)
+
+  Device buffer pool (kernels/device_pool): upload-once residency for
+  pow2-padded columns and postings across queries —
+    buffer_pool.hits            counter: operands found device-resident
+    buffer_pool.misses          counter: first-touch uploads (these are
+                                the only operands record_dispatch counts
+                                as h2d bytes — a warm query reports
+                                h2d_bytes == 0)
+    buffer_pool.evictions       counter: buffers dropped (LSM component
+                                retirement via release_component, or the
+                                host array's weakref finalizer)
+    buffer_pool.resident_bytes  gauge: bytes currently device-resident
+
+  Fused plan cache (columnar/plancache): compiled Figure-6 chains keyed
+  by plan shape (op sequence + pow2 operand buckets + dtypes) —
+    plan_cache.hits             counter: fused dispatches of an
+                                already-compiled plan shape
+    plan_cache.misses           counter: first sighting of a shape (the
+                                dispatch that traces _chain_core)
+    plan_cache.entries          gauge: distinct plan shapes seen
 
   Counters — LSM storage (core/lsm):
     lsm.flushes / lsm.merges    completed flush / merge operations

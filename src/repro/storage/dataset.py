@@ -601,6 +601,23 @@ class PartitionedDataset:
         parts = [off + p.range_positions(lo, hi) for off, p in sources]
         return self._positions_mask(parts, total, idx)
 
+    def secondary_fused_inputs(self, i: int, fld: str,
+                               _view: Optional[LSMView] = None
+                               ) -> Tuple[List[Tuple[int, Any]], int,
+                                          np.ndarray]:
+        """Raw operands for the fused Figure-6 chain dispatch
+        (``columnar/plancache``): the per-tier ``(offset, FieldPostings)``
+        sources, the storage concat length, and the live-selection index
+        array — the same three inputs ``secondary_candidate_mask`` feeds
+        through the per-operator scatter/gather path, returned unbaked so
+        the whole probe -> bitmap -> gather can run as one jit dispatch
+        over pooled device buffers."""
+        self._require_sec(fld, "btree")
+        view = _view if _view is not None else self._view(i)
+        idx, _ = self._live_selection(i, view)
+        sources, total = self._sec_sources(i, fld, view)
+        return sources, total, idx
+
     def spatial_candidate_mask(self, i: int, fld: str,
                                center: Tuple[float, float],
                                radius: float,
@@ -943,6 +960,12 @@ class DatasetSnapshot:
                                  ) -> np.ndarray:
         return self._ds.secondary_candidate_mask(i, fld, lo, hi,
                                                  _view=self._views[i])
+
+    def secondary_fused_inputs(self, i: int, fld: str):
+        # explicit (not __getattr__): the fused chain must see *this*
+        # snapshot's pinned view, not a freshly-taken one
+        return self._ds.secondary_fused_inputs(i, fld,
+                                               _view=self._views[i])
 
     def spatial_candidate_mask(self, i: int, fld: str,
                                center: Tuple[float, float],

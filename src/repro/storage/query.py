@@ -68,6 +68,10 @@ class ExecStats:
     kernel_dispatches: int = 0  # device-bound kernel calls this query made
     h2d_bytes: int = 0          # operand bytes shipped host -> device
     d2h_bytes: int = 0          # result bytes fetched device -> host
+    plan_cache_hits: int = 0    # fused chain dispatches reusing a
+    #                             compiled plan shape (columnar/plancache)
+    plan_cache_misses: int = 0  # fused chain plan shapes first seen (and
+    #                             trace-compiled) during this query
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -448,13 +452,18 @@ def _default_catalog(datasets: Dict[str, PartitionedDataset]) -> Catalog:
 
 
 def _finish_stats(ex: "Executor", traces0: int,
-                  kt0: Tuple[int, int, int]) -> None:
+                  kt0: Tuple[int, int, int],
+                  pc0: Tuple[int, int]) -> None:
+    from ..columnar import plancache as _pc
     from ..kernels import columnar_ops as K
     kt1 = _obs.kernel_totals()
+    pc1 = _pc.totals()
     ex.stats.kernel_retraces = K.trace_count() - traces0
     ex.stats.kernel_dispatches = kt1[0] - kt0[0]
     ex.stats.h2d_bytes = kt1[1] - kt0[1]
     ex.stats.d2h_bytes = kt1[2] - kt0[2]
+    ex.stats.plan_cache_hits = pc1[0] - pc0[0]
+    ex.stats.plan_cache_misses = pc1[1] - pc0[1]
 
 
 def run_query(plan, datasets: Dict[str, PartitionedDataset],
@@ -486,11 +495,13 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
                 exec_datasets[n] = ds
     try:
         ex = Executor(exec_datasets, vectorize=vectorize)
+        from ..columnar import plancache as _pc
         from ..kernels import columnar_ops as K
         traces0 = K.trace_count()
         kt0 = _obs.kernel_totals()
+        pc0 = _pc.totals()
         parts = ex.execute_op(phys)
-        _finish_stats(ex, traces0, kt0)
+        _finish_stats(ex, traces0, kt0, pc0)
         rows = [r for p in parts for r in p]
         return rows, ex
     finally:
@@ -544,13 +555,15 @@ def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
     ex = Executor(datasets, vectorize=vectorize)
     ex.analysis = {}
     ex._fallback_reasons = {}
+    from ..columnar import plancache as _pc
     from ..kernels import columnar_ops as K
     traces0 = K.trace_count()
     kt0 = _obs.kernel_totals()
+    pc0 = _pc.totals()
     t0 = time.perf_counter()
     parts = ex.execute_op(phys)
     wall = time.perf_counter() - t0
-    _finish_stats(ex, traces0, kt0)
+    _finish_stats(ex, traces0, kt0, pc0)
     rows = [r for p in parts for r in p]
     return {
         "rows": rows,
@@ -562,6 +575,8 @@ def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
             "h2d_bytes": ex.stats.h2d_bytes,
             "d2h_bytes": ex.stats.d2h_bytes,
             "kernel_retraces": ex.stats.kernel_retraces,
+            "plan_cache_hits": ex.stats.plan_cache_hits,
+            "plan_cache_misses": ex.stats.plan_cache_misses,
         },
         "stats": ex.stats,
     }
