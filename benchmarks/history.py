@@ -1,0 +1,253 @@
+"""Bench-history regression gate: compare a fresh ``benchmarks/run.py
+--json`` report against the committed ``benchmarks/baseline.json``.
+
+Until now the bench trajectory was empty — smoke benches carried
+hard-coded asserts (speedup >= 3x, zero torn reads, ...) but nothing
+compared run N against run N-1, so a 2x slowdown that still cleared the
+absolute floors was invisible.  This module is the gate:
+
+* ``--update`` seeds/refreshes the baseline from a fresh report: per
+  bench row it records ``us_per_call``, the owning module, a *tolerance
+  band* (``max_ratio``: how much slower the row may get before the gate
+  trips — per-module defaults cover the noisier thread-scheduling
+  benches), and the exact-invariant fields (``torn_reads``,
+  ``h2d_warm``, ...) that must never drift at all.
+
+* ``--check`` compares a fresh report row-by-row: prints a delta table,
+  writes a machine-readable delta report (``--report``, uploaded as a
+  CI artifact next to ``bench_smoke.json``), and exits nonzero when
+
+    - the baseline or report schema_version is unknown,
+    - a baselined bench is missing from the fresh report,
+    - an exact-invariant field changed, or
+    - a row regressed beyond its band: ``fresh > base * max_ratio``
+      *and* ``fresh - base > min_delta_us`` (the absolute slack keeps
+      near-zero rows from tripping on timer noise).
+
+  Improvements and new benches never fail the gate (new rows are listed
+  so the next ``--update`` picks them up).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.history --check \
+        [--baseline benchmarks/baseline.json] [--fresh bench_smoke.json] \
+        [--report bench_delta.json]
+    PYTHONPATH=src python -m benchmarks.history --update \
+        [--fresh bench_smoke.json]
+
+``scripts/verify.sh`` and CI run ``--check`` right after the smoke
+benches; regenerate the baseline with ``--update`` whenever a PR
+legitimately moves the numbers, and commit the diff.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+BASELINE_SCHEMA_VERSION = 1
+REPORT_SCHEMA_VERSIONS = (1,)          # accepted run.py --json schemas
+DEFAULT_BASELINE = "benchmarks/baseline.json"
+DEFAULT_FRESH = "bench_smoke.json"
+
+# How much slower (ratio) a row may get before the gate trips.  The
+# thread-scheduling benches (serve/feeds) and the microsecond-scale
+# index candidate reads are the noisiest (observed 3-5x run-to-run
+# swings on a loaded host); pure-kernel rows are the steadiest.
+# Written into the baseline per row so a future tightening only needs
+# --update.
+DEFAULT_MAX_RATIO = 3.0
+MODULE_MAX_RATIO = {"serve": 5.0, "feeds": 4.0, "ingest": 4.0,
+                    "index": 5.0}
+# Absolute slack: a row under the band never fails on fewer extra
+# microseconds than this (near-zero rows divide noisily — a 20us row
+# tripling is timer noise, not a regression).
+DEFAULT_MIN_DELTA_US = 1000.0
+
+# Fields that must match the baseline exactly — correctness/residency
+# invariants a timing band must never paper over.
+EXACT_FIELDS = ("torn_reads", "lost_acked", "recoveries",
+                "h2d_warm", "retraces_warm")
+
+
+def build_baseline(report: Dict[str, Any],
+                   default_max_ratio: float = DEFAULT_MAX_RATIO,
+                   min_delta_us: float = DEFAULT_MIN_DELTA_US
+                   ) -> Dict[str, Any]:
+    """Distill a ``run.py --json`` report into a committed baseline."""
+    sv = report.get("schema_version")
+    if sv not in REPORT_SCHEMA_VERSIONS:
+        raise ValueError(f"unsupported report schema_version: {sv!r}")
+    benches: Dict[str, Any] = {}
+    for name, row in sorted(report.get("benches", {}).items()):
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)):
+            continue                       # non-timing row: nothing to band
+        module = row.get("module", "")
+        entry: Dict[str, Any] = {
+            "us_per_call": float(us),
+            "module": module,
+            "max_ratio": MODULE_MAX_RATIO.get(module, default_max_ratio),
+        }
+        exact = {f: row[f] for f in EXACT_FIELDS if f in row}
+        if exact:
+            entry["exact"] = exact
+        benches[name] = entry
+    return {
+        "schema_version": BASELINE_SCHEMA_VERSION,
+        "source_schema_version": sv,
+        "smoke": bool(report.get("smoke")),
+        "min_delta_us": float(min_delta_us),
+        "benches": benches,
+    }
+
+
+def compare(baseline: Dict[str, Any], report: Dict[str, Any]
+            ) -> Tuple[List[Dict[str, Any]], List[str]]:
+    """Row-by-row delta of a fresh report against the baseline.
+
+    Returns (rows, failures): one delta row per bench with a ``status``
+    of ``ok`` / ``improved`` / ``regression`` / ``exact_mismatch`` /
+    ``missing`` / ``new``; ``failures`` holds one human-readable line
+    per gate violation (empty == gate passes)."""
+    failures: List[str] = []
+    bsv = baseline.get("schema_version")
+    if bsv != BASELINE_SCHEMA_VERSION:
+        return [], [f"baseline schema_version {bsv!r} != "
+                    f"{BASELINE_SCHEMA_VERSION} (regenerate with --update)"]
+    rsv = report.get("schema_version")
+    if rsv not in REPORT_SCHEMA_VERSIONS:
+        return [], [f"report schema_version {rsv!r} not in "
+                    f"{REPORT_SCHEMA_VERSIONS}"]
+    if report.get("failures"):
+        failures.append(f"fresh report carries bench failures: "
+                        f"{report['failures']}")
+    min_delta = float(baseline.get("min_delta_us", DEFAULT_MIN_DELTA_US))
+    fresh_rows = report.get("benches", {})
+    rows: List[Dict[str, Any]] = []
+    for name, base in sorted(baseline.get("benches", {}).items()):
+        row: Dict[str, Any] = {"bench": name, "module": base.get("module"),
+                               "base_us": base["us_per_call"],
+                               "max_ratio": base["max_ratio"]}
+        fresh = fresh_rows.get(name)
+        if fresh is None:
+            row.update(status="missing", fresh_us=None, ratio=None)
+            rows.append(row)
+            failures.append(f"{name}: baselined bench missing from report")
+            continue
+        us = fresh.get("us_per_call")
+        if not isinstance(us, (int, float)):
+            row.update(status="missing", fresh_us=None, ratio=None)
+            rows.append(row)
+            failures.append(f"{name}: fresh row has no numeric us_per_call")
+            continue
+        base_us = float(base["us_per_call"])
+        ratio = float(us) / base_us if base_us > 0 else float("inf")
+        row.update(fresh_us=float(us), ratio=ratio)
+        status = "ok"
+        for fld, want in base.get("exact", {}).items():
+            got = fresh.get(fld)
+            if got != want:
+                status = "exact_mismatch"
+                failures.append(f"{name}: invariant {fld} changed "
+                                f"{want!r} -> {got!r}")
+        if status == "ok":
+            if (ratio > base["max_ratio"]
+                    and (us - base_us) > min_delta):
+                status = "regression"
+                failures.append(
+                    f"{name}: {us:.1f}us vs baseline {base_us:.1f}us "
+                    f"({ratio:.2f}x > {base['max_ratio']:.2f}x band)")
+            elif ratio < 1.0:
+                status = "improved"
+        row["status"] = status
+        rows.append(row)
+    for name, fresh in sorted(fresh_rows.items()):
+        if name not in baseline.get("benches", {}) \
+                and isinstance(fresh.get("us_per_call"), (int, float)):
+            rows.append({"bench": name, "module": fresh.get("module"),
+                         "base_us": None, "max_ratio": None,
+                         "fresh_us": float(fresh["us_per_call"]),
+                         "ratio": None, "status": "new"})
+    return rows, failures
+
+
+def format_table(rows: List[Dict[str, Any]]) -> str:
+    """The human-readable delta table --check prints."""
+    header = (f"{'bench':<34} {'base_us':>12} {'fresh_us':>12} "
+              f"{'ratio':>7} {'band':>6}  status")
+    out = [header, "-" * len(header)]
+    for r in rows:
+        base = "-" if r["base_us"] is None else f"{r['base_us']:.1f}"
+        fresh = "-" if r["fresh_us"] is None else f"{r['fresh_us']:.1f}"
+        ratio = "-" if r["ratio"] is None else f"{r['ratio']:.2f}x"
+        band = "-" if r["max_ratio"] is None else f"{r['max_ratio']:.1f}x"
+        out.append(f"{r['bench']:<34} {base:>12} {fresh:>12} "
+                   f"{ratio:>7} {band:>6}  {r['status']}")
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = p.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--check", action="store_true",
+                      help="gate: compare fresh report vs baseline, "
+                           "exit nonzero on regression")
+    mode.add_argument("--update", action="store_true",
+                      help="seed/refresh the committed baseline from the "
+                           "fresh report")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE, metavar="PATH")
+    p.add_argument("--fresh", default=DEFAULT_FRESH, metavar="PATH",
+                   help="fresh run.py --json output (default "
+                        f"{DEFAULT_FRESH})")
+    p.add_argument("--report", default="", metavar="PATH",
+                   help="also write the delta rows as JSON (CI artifact)")
+    args = p.parse_args(argv)
+
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"history: cannot read fresh report {args.fresh}: {e}",
+              file=sys.stderr)
+        return 2
+
+    if args.update:
+        baseline = build_baseline(fresh)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"history: baseline -> {args.baseline} "
+              f"({len(baseline['benches'])} benches)")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"history: cannot read baseline {args.baseline}: {e} "
+              f"(seed one with --update)", file=sys.stderr)
+        return 2
+    rows, failures = compare(baseline, fresh)
+    print(format_table(rows))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({"schema_version": BASELINE_SCHEMA_VERSION,
+                       "baseline": args.baseline, "fresh": args.fresh,
+                       "rows": rows, "failures": failures}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# delta report -> {args.report}", file=sys.stderr)
+    if failures:
+        print("\nhistory: REGRESSION GATE FAILED", file=sys.stderr)
+        for line in failures:
+            print(f"  - {line}", file=sys.stderr)
+        return 1
+    n_ok = sum(r["status"] in ("ok", "improved") for r in rows)
+    print(f"\nhistory: gate passed ({n_ok} rows within band)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

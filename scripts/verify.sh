@@ -19,10 +19,17 @@
 #      under concurrent mixed ingest+query serving;
 #   4. the structured bench report (`--json bench_smoke.json`) parses,
 #      carries schema_version 1, contains rows from every smoke module,
-#      the serve rows report nonzero sustained ingest and a p99 query
-#      latency, and the residency rows show warm queries uploading zero
-#      bytes at >= 3x the cold latency — CI uploads the file as a run
-#      artifact.
+#      the serve rows report nonzero sustained ingest, a p99 query
+#      latency and a zero deadline-miss SLO ledger, and the residency
+#      rows show warm queries uploading zero bytes at >= 3x the cold
+#      latency — CI uploads the file as a run artifact;
+#   5. the bench-history regression gate (`benchmarks/history.py
+#      --check`) compares the fresh report row-by-row against the
+#      committed `benchmarks/baseline.json` tolerance bands and fails on
+#      any regression beyond band or drifted correctness invariant —
+#      the delta table lands in bench_delta.json (also a CI artifact).
+#      After a PR that legitimately moves the numbers, regenerate with
+#      `python -m benchmarks.history --update` and commit the diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -69,6 +76,10 @@ for row in serve_rows:
     assert row["ingest_rate"] > 0, f"zero sustained ingest: {row}"
     assert row["query_p99_ms"] is not None, f"missing p99: {row}"
     assert row["torn_reads"] == 0 and row["lost_acked"] == 0, row
+    # deadline SLO ledger must be clean at smoke load
+    assert row["slo_missed"] == 0, f"deadline misses at smoke load: {row}"
+    assert row["slo_rejected_deadline"] == 0, f"deadline rejections: {row}"
+    assert row["queue_wait_p99_ms"] is not None, f"missing queue wait: {row}"
 # Residency rows must prove upload-once semantics: warm repeats of a
 # Figure-6 chain ship nothing host->device, never retrace, and beat
 # the cold (trace + upload) execution by >= 3x.
@@ -83,3 +94,10 @@ for row in res_rows:
 print(f"verify: bench_smoke.json ok "
       f"({len(report['benches'])} benches, {len(report['metrics'])} metrics)")
 EOF
+
+# Bench-history regression gate: the fresh smoke numbers must stay
+# within the committed baseline's per-row tolerance bands.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.history --check \
+        --baseline benchmarks/baseline.json \
+        --fresh bench_smoke.json --report bench_delta.json

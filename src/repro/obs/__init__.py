@@ -128,13 +128,48 @@ Metric name registry (``metrics.snapshot()`` keys):
     serve.admission.rejected    counter: queries shed by the admission
                                 controller (no slot within timeout)
     serve.admission.inflight    gauge: admitted queries currently running
-    serve.query.latency_s       histogram: per-query wall time (p50/p99
-                                are the serve_bench report numbers)
+    serve.query.latency_s       histogram: admitted-query wall time,
+                                queue wait excluded (p50/p99 are the
+                                serve_bench report numbers)
     serve.query.torn_reads      counter: snapshot scans violating the
                                 lane-prefix consistency oracle
     serve.query.lost_acks       counter: snapshot scans missing records
                                 acked before the pin
     serve.recoveries            counter: crash_and_recover cycles
+
+  Request tracing + SLOs (serve/harness.RequestTracker; every
+  QueryWorker submission is a request with a monotone trace id and
+  queue-wait / pin / execute / result phases):
+    serve.queue_wait_s          histogram: admission queue wait per
+                                request — *including* time-to-rejection
+                                for shed requests, so rejected load is
+                                visible in the same distribution
+    serve.phase.pin_s           histogram: snapshot-pin phase wall time
+    serve.phase.execute_s       histogram: execute phase wall time
+    serve.phase.result_s        histogram: result/validation phase wall
+                                time (phase p99s feed the ServeReport
+                                tail-latency attribution table)
+    serve.slo.attained          counter: requests completed within the
+                                per-request deadline (queue wait counts)
+    serve.slo.missed            counter: requests completed but over
+                                deadline
+    serve.slo.rejected_deadline counter: requests rejected *because*
+                                their queue wait would have blown the
+                                deadline (deadline-based admission; slot
+                                -timeout rejections stay in
+                                serve.admission.rejected)
+    serve.request.profiled      counter: requests sampled by the 1-in-N
+                                profiler (full span trees retained in
+                                the harness's bounded profile ring)
+
+  Exporter (obs/export; nothing is sampled or served until
+  ``obs.serve_http()`` is called):
+    obs.exporter.scrapes        counter: HTTP requests answered on
+                                /metrics, /snapshot, /trace
+    ``MetricsSampler`` additionally exposes windowed per-second rates of
+    the feed./serve./kernel./buffer_pool. counters via the ``/metrics``
+    ``<family>_rate`` gauges (not registry metrics themselves — they
+    live in the sampler's time-series ring).
 
 Executor-level accounting stays on ``storage/query.ExecStats`` (per-query
 scope): ``kernel_dispatches`` / ``h2d_bytes`` / ``d2h_bytes`` are the
@@ -152,14 +187,19 @@ from typing import Any, Dict, Sequence, Tuple
 import numpy as np
 
 from . import metrics, tracer
-from .metrics import counter, gauge, histogram, snapshot
+from .metrics import counter, gauge, histogram, snapshot, typed_snapshot
 from .tracer import (Span, clear, current, disable, dump_trace, enable,
-                     enabled, events, span)
+                     enabled, events, span, to_chrome)
+from . import export
+from .export import (ExporterServer, MetricsSampler, TimeSeriesRing,
+                     render_prometheus, serve_http)
 
-__all__ = ["metrics", "tracer", "span", "enable", "disable", "enabled",
-           "current", "events", "clear", "dump_trace", "counter", "gauge",
-           "histogram", "snapshot", "reset", "record_dispatch",
-           "record_retrace", "kernel_totals", "Span"]
+__all__ = ["metrics", "tracer", "export", "span", "enable", "disable",
+           "enabled", "current", "events", "clear", "dump_trace",
+           "to_chrome", "counter", "gauge", "histogram", "snapshot",
+           "typed_snapshot", "reset", "record_dispatch", "record_retrace",
+           "kernel_totals", "Span", "ExporterServer", "MetricsSampler",
+           "TimeSeriesRing", "render_prometheus", "serve_http"]
 
 # hot-path handles: resolved once so record_dispatch costs dict-free
 # increments on the totals plus one cached lookup per kernel name

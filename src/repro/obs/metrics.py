@@ -14,6 +14,17 @@ ones).
 state alongside the bench numbers.  ``reset()`` zeroes everything
 (tests and per-query deltas use it or diff two snapshots).
 
+Snapshots never stall the hot path: ``snapshot()`` copies the
+name->metric mapping under the registry lock, then each metric copies
+its own state under its *per-metric* lock for only as long as a list
+copy takes — sorting (histogram quantiles) happens on the copy, outside
+every lock.  A slow consumer (the HTTP exporter scraping a large
+registry) therefore can never block a concurrent counter increment for
+longer than one bounded copy.  ``typed_snapshot()`` is the same walk
+but keeps the metric kind (``"counter"`` / ``"gauge"`` /
+``"histogram"``) alongside each value — the Prometheus renderer in
+``obs/export.py`` needs the kind to pick the exposition type.
+
 Histograms keep a bounded ring of recent observations (default 8192)
 for the quantiles; ``count``/``sum``/``min``/``max`` stay exact over
 the full stream.
@@ -25,7 +36,18 @@ import threading
 from typing import Any, Dict, List, Optional, Union
 
 __all__ = ["Counter", "Gauge", "Histogram", "Registry",
-           "counter", "gauge", "histogram", "snapshot", "reset"]
+           "counter", "gauge", "histogram", "snapshot", "typed_snapshot",
+           "reset"]
+
+
+def _nearest_rank(sorted_xs: List[float], p: float) -> Optional[float]:
+    """Nearest-rank quantile over an already-sorted window (None when
+    empty)."""
+    if not sorted_xs:
+        return None
+    n = len(sorted_xs)
+    k = min(n - 1, max(0, int(round(p / 100.0 * (n - 1)))))
+    return sorted_xs[k]
 
 
 class Counter:
@@ -49,7 +71,8 @@ class Counter:
             self._value = 0
 
     def _snap(self) -> Union[int, float]:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Gauge:
@@ -81,7 +104,8 @@ class Gauge:
             self._value = 0
 
     def _snap(self) -> Any:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Histogram:
@@ -120,10 +144,9 @@ class Histogram:
         with self._lock:
             if not self._ring:
                 return None
-            xs = sorted(self._ring)
-        # nearest-rank on the sorted window
-        k = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
-        return xs[k]
+            xs = list(self._ring)       # copy only; sort outside the lock
+        xs.sort()
+        return _nearest_rank(xs, p)
 
     def _reset(self) -> None:
         with self._lock:
@@ -135,14 +158,22 @@ class Histogram:
             self.max = None
 
     def _snap(self) -> Dict[str, Any]:
+        # one lock acquisition copies the whole state (scalars are read
+        # together with the ring, so count/sum/min/max are never torn
+        # against the quantiles); the sort runs on the copy, unlocked
+        with self._lock:
+            xs = list(self._ring)
+            count, total = self.count, self.sum
+            lo, hi = self.min, self.max
+        xs.sort()
         return {
-            "count": self.count,
-            "sum": self.sum,
-            "min": self.min,
-            "max": self.max,
-            "p50": self.percentile(50),
-            "p95": self.percentile(95),
-            "p99": self.percentile(99),
+            "count": count,
+            "sum": total,
+            "min": lo,
+            "max": hi,
+            "p50": _nearest_rank(xs, 50),
+            "p95": _nearest_rank(xs, 95),
+            "p99": _nearest_rank(xs, 99),
         }
 
 
@@ -182,9 +213,21 @@ class Registry:
         return self._get(name, Histogram, window=window)
 
     def snapshot(self) -> Dict[str, Any]:
+        with self._lock:                  # registry lock: mapping copy only
+            items = list(self._metrics.items())
+        # each _snap() takes its own per-metric lock just long enough to
+        # copy state — a hot-path increment never waits on the full walk
+        return {name: m._snap() for name, m in sorted(items)}
+
+    def typed_snapshot(self) -> Dict[str, Any]:
+        """Like ``snapshot()`` but each value is ``(kind, snap)`` where
+        kind is "counter" / "gauge" / "histogram" — what the Prometheus
+        renderer keys its exposition types on."""
         with self._lock:
             items = list(self._metrics.items())
-        return {name: m._snap() for name, m in sorted(items)}
+        kinds = {Counter: "counter", Gauge: "gauge", Histogram: "histogram"}
+        return {name: (kinds[type(m)], m._snap())
+                for name, m in sorted(items)}
 
     def reset(self) -> None:
         with self._lock:
@@ -199,4 +242,5 @@ counter = REGISTRY.counter
 gauge = REGISTRY.gauge
 histogram = REGISTRY.histogram
 snapshot = REGISTRY.snapshot
+typed_snapshot = REGISTRY.typed_snapshot
 reset = REGISTRY.reset

@@ -36,7 +36,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 __all__ = ["Span", "span", "enable", "disable", "enabled", "current",
-           "clear", "events", "dump_trace"]
+           "clear", "events", "dump_trace", "to_chrome"]
 
 _enabled = False
 _lock = threading.Lock()
@@ -92,8 +92,14 @@ class Span:
                 break
         if exc_type is not None:
             self.attrs.setdefault("error", exc_type.__name__)
-        with _lock:
-            _events.append(self)
+        # explicitly-constructed spans (the serve profile sampler builds
+        # Span(...) directly while global tracing is off) still nest on
+        # the thread-local stack — so record_dispatch attribution lands
+        # on them — but only enabled tracing retains them process-wide;
+        # the sampler keeps its own bounded ring instead
+        if _enabled:
+            with _lock:
+                _events.append(self)
         return None                     # never swallow the exception
 
 
@@ -149,10 +155,12 @@ def enabled() -> bool:
 
 
 def current() -> Optional[Span]:
-    """Innermost open span on this thread (None when tracing is disabled
-    or no span is open)."""
-    if not _enabled:
-        return None
+    """Innermost open span on this thread (None when no span is open).
+    Purely stack-based: ``span()`` never pushes when tracing is disabled,
+    so the common disabled path still returns None — but an explicitly
+    constructed ``Span`` (profile sampling) is visible here regardless
+    of the global flag, which is what routes kernel-dispatch attribution
+    onto sampled serve requests."""
     s = getattr(_tls, "stack", None)
     return s[-1] if s else None
 
@@ -169,14 +177,11 @@ def events() -> List[Span]:
         return list(_events)
 
 
-def dump_trace(path: str) -> int:
-    """Write finished spans as Chrome trace-event JSON (``ph: "X"``
-    complete events, ts/dur in microseconds).  Returns the number of
-    events written.  Open the file in chrome://tracing or
-    https://ui.perfetto.dev to see the nested operator/flush/merge/pump
-    timeline."""
-    evs = events()
-    trace = {
+def to_chrome(spans: List[Span]) -> Dict[str, Any]:
+    """Render finished spans as a Chrome trace-event dict (``ph: "X"``
+    complete events, ts/dur in microseconds) — shared by
+    ``dump_trace`` and the ``/trace`` HTTP endpoint (obs/export)."""
+    return {
         "displayTimeUnit": "ms",
         "traceEvents": [
             {
@@ -189,9 +194,17 @@ def dump_trace(path: str) -> int:
                 "args": {k: v for k, v in e.attrs.items()
                          if isinstance(v, (int, float, str, bool))},
             }
-            for e in evs
+            for e in spans
         ],
     }
+
+
+def dump_trace(path: str) -> int:
+    """Write finished spans as Chrome trace-event JSON.  Returns the
+    number of events written.  Open the file in chrome://tracing or
+    https://ui.perfetto.dev to see the nested operator/flush/merge/pump
+    timeline."""
+    trace = to_chrome(events())
     with open(path, "w") as f:
         json.dump(trace, f)
     return len(trace["traceEvents"])

@@ -26,10 +26,11 @@ for the mixed open-loop workload reporting sustained ingest rate and
 p50/p99 query latency through the ``obs`` histograms.
 """
 
-from .harness import (AdmissionController, BoundedSink, IngestPump,
-                      QueryWorker, ServeHarness, ServeReport, SinkWorker,
+from .harness import (Admission, AdmissionController, BoundedSink,
+                      IngestPump, QueryWorker, RequestRecord, RequestTracker,
+                      ServeHarness, ServeReport, SinkWorker,
                       StridedRecordAdaptor)
 
-__all__ = ["AdmissionController", "BoundedSink", "IngestPump", "QueryWorker",
-           "ServeHarness", "ServeReport", "SinkWorker",
-           "StridedRecordAdaptor"]
+__all__ = ["Admission", "AdmissionController", "BoundedSink", "IngestPump",
+           "QueryWorker", "RequestRecord", "RequestTracker", "ServeHarness",
+           "ServeReport", "SinkWorker", "StridedRecordAdaptor"]

@@ -1,0 +1,527 @@
+"""Exporter + request-tracing + bench-history tests (PR 9).
+
+Covers the serving-tier observability stack end to end:
+
+* Prometheus text rendering — name sanitization, label-rule folding,
+  histogram->summary quantile lines, and a full-registry line-format
+  sweep;
+* ``TimeSeriesRing`` windowed-rate math against hand-computed oracles
+  (including eviction once the ring wraps);
+* the HTTP endpoint on an ephemeral port, including a scrape taken
+  *while* a live ``ServeHarness`` run is in flight (the acceptance
+  criterion for the exporter tentpole);
+* deadline-based admission + SLO settlement on a fixed schedule, and a
+  saturating harness run that must shed by deadline without a single
+  torn read or lost ack;
+* the bounded 1-in-N profile ring;
+* the ``metrics.snapshot()`` torn-read regression (scalar pairs copied
+  under one lock while a writer races);
+* the ``benchmarks/history.py`` regression gate: a synthetic 50%
+  regression must exit nonzero under a tight band, schema drift must
+  fail, improvements and new rows must not.
+"""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from benchmarks import history
+from repro import obs
+from repro.core import adm
+from repro.obs.export import (ExporterServer, MetricsSampler, TimeSeriesRing,
+                              render_prometheus, sanitize_metric_name,
+                              serve_http)
+from repro.obs.metrics import Registry
+from repro.serve import AdmissionController, RequestTracker, ServeHarness
+from repro.storage.dataset import PartitionedDataset
+
+
+@pytest.fixture(autouse=True)
+def _quiet_tracer():
+    obs.disable()
+    obs.clear()
+    yield
+    obs.disable()
+    obs.clear()
+
+
+def _dataset(name: str, rows: int = 0,
+             num_partitions: int = 2) -> PartitionedDataset:
+    rt = adm.RecordType(f"T_{name}",
+                        (adm.Field("pk", adm.INT64),
+                         adm.Field("val", adm.INT64),
+                         adm.Field("text", adm.STRING)),
+                        open=True)
+    ds = PartitionedDataset(name, rt, "pk", num_partitions=num_partitions,
+                            flush_threshold=256)
+    for pk in range(rows):
+        ds.insert({"pk": pk, "val": pk % 97, "text": f"r{pk}"})
+    return ds
+
+
+# ---------------------------------------------------------------------------
+# Prometheus rendering
+# ---------------------------------------------------------------------------
+
+def test_sanitize_metric_name():
+    assert sanitize_metric_name("feed.tweets.records") == \
+        "feed_tweets_records"
+    assert sanitize_metric_name("serve.queue_wait_s") == "serve_queue_wait_s"
+    assert sanitize_metric_name("a-b c/d") == "a_b_c_d"
+    assert sanitize_metric_name("0weird") == "_0weird"
+    assert sanitize_metric_name("ok:colons") == "ok:colons"
+
+
+def test_render_prometheus_golden_lines():
+    typed = {
+        "serve.ingest.acked": ("counter", 42),
+        "buffer_pool.bytes": ("gauge", 1024),
+        "serve.queue_wait_s": ("histogram",
+                               {"count": 2, "sum": 0.04, "min": 0.01,
+                                "max": 0.03, "p50": 0.01, "p95": 0.03,
+                                "p99": 0.03}),
+    }
+    text = render_prometheus(typed)
+    assert "# TYPE serve_ingest_acked counter\nserve_ingest_acked 42" in text
+    assert "# TYPE buffer_pool_bytes gauge\nbuffer_pool_bytes 1024" in text
+    # histograms render as summaries: quantiles + _sum/_count + min/max
+    assert "# TYPE serve_queue_wait_s summary" in text
+    assert 'serve_queue_wait_s{quantile="0.5"} 0.01' in text
+    assert 'serve_queue_wait_s{quantile="0.99"} 0.03' in text
+    assert "serve_queue_wait_s_sum 0.04" in text
+    assert "serve_queue_wait_s_count 2" in text
+    assert "# TYPE serve_queue_wait_s_min gauge" in text
+    assert "serve_queue_wait_s_max 0.03" in text
+
+
+def test_render_prometheus_label_rules():
+    typed = {
+        "kernel.range_mask.dispatches": ("counter", 3),
+        "kernel.masked_sum.dispatches": ("counter", 5),
+        "kernel.range_mask.h2d_bytes": ("counter", 4096),
+        "feed.joint.fanout.lag.trainer": ("gauge", 7),
+        "feed.sink.tweets.backlog": ("gauge", 2),
+        "feed.tweets.records": ("counter", 500),
+    }
+    text = render_prometheus(typed)
+    # the per-kernel family folds into one family with a kernel label,
+    # every sample under a single TYPE header
+    assert text.count("# TYPE kernel_dispatches counter") == 1
+    assert 'kernel_dispatches{kernel="masked_sum"} 5' in text
+    assert 'kernel_dispatches{kernel="range_mask"} 3' in text
+    assert 'kernel_h2d_bytes{kernel="range_mask"} 4096' in text
+    assert ('feed_joint_lag{joint="fanout",subscriber="trainer"} 7'
+            in text)
+    assert 'feed_sink_backlog{dataset="tweets"} 2' in text
+    assert 'feed_records{feed="tweets"} 500' in text
+
+
+def test_render_prometheus_rates_render_as_gauges():
+    typed = {"serve.ingest.acked": ("counter", 100)}
+    text = render_prometheus(typed, rates={"serve.ingest.acked": 25.5})
+    assert "# TYPE serve_ingest_acked_rate gauge" in text
+    assert "serve_ingest_acked_rate 25.5" in text
+
+
+def test_render_prometheus_live_registry_is_wellformed():
+    """Every non-comment line of a full live-registry render must match
+    the exposition grammar: name{labels}? value."""
+    import re
+    obs.counter("export_t.alive").inc()
+    obs.histogram("export_t.h").observe(0.5)
+    line_re = re.compile(
+        r"^[a-zA-Z_:][a-zA-Z0-9_:]*"
+        r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"(,[a-zA-Z_][a-zA-Z0-9_]*='
+        r'"[^"]*")*\})?'
+        r" (NaN|[+-]Inf|-?[0-9].*)$")
+    text = render_prometheus()
+    assert text.endswith("\n")
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            kind = line.split()[-1]
+            assert kind in ("counter", "gauge", "summary"), line
+            continue
+        assert line_re.match(line), f"malformed exposition line: {line!r}"
+
+
+# ---------------------------------------------------------------------------
+# Windowed-rate ring
+# ---------------------------------------------------------------------------
+
+def test_ring_rate_matches_hand_oracle():
+    ring = TimeSeriesRing(size=4)
+    assert ring.rate("c") is None            # no samples yet
+    ring.append(0.0, {"c": 0.0})
+    assert ring.rate("c") is None            # one sample: no slope
+    ring.append(1.0, {"c": 10.0})
+    ring.append(2.0, {"c": 30.0})
+    # whole ring: (30 - 0) / (2 - 0)
+    assert ring.rate("c") == pytest.approx(15.0)
+    # trailing 1s window: oldest in-window sample is t=1.0
+    assert ring.rate("c", window_s=1.0) == pytest.approx(20.0)
+    assert ring.rates(window_s=1.0) == {"c": pytest.approx(20.0)}
+    # a counter absent from the newest sample yields no rate
+    assert ring.rate("missing") is None
+
+
+def test_ring_evicts_oldest_once_full():
+    ring = TimeSeriesRing(size=3)
+    for t in range(5):
+        ring.append(float(t), {"c": 10.0 * t})
+    assert len(ring) == 3
+    ts = [t for t, _ in ring.samples()]
+    assert ts == [2.0, 3.0, 4.0]             # oldest slots overwritten
+    # full-ring slope now spans the *retained* window only
+    assert ring.rate("c") == pytest.approx((40.0 - 20.0) / 2.0)
+
+
+def test_ring_rejects_degenerate_size():
+    with pytest.raises(ValueError):
+        TimeSeriesRing(size=1)
+
+
+def test_sampler_turns_counters_into_rates():
+    c = obs.counter("serve.export_t.sampled")
+    h = obs.histogram("serve.export_t.lat_s")
+    sampler = MetricsSampler(interval_s=999.0, size=8)
+    c.inc(100)
+    h.observe(1.0)
+    sampler.sample_now(t=10.0)
+    c.inc(50)
+    h.observe(1.0)
+    h.observe(2.0)
+    sampler.sample_now(t=20.0)
+    rates = sampler.rates()
+    assert rates["serve.export_t.sampled"] == pytest.approx(5.0)
+    # histogram count streams ride along as <name>.count
+    assert rates["serve.export_t.lat_s.count"] == pytest.approx(0.2)
+    # non-prefixed registry names are not retained
+    assert not any(k.startswith("obs.") for k in rates)
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint
+# ---------------------------------------------------------------------------
+
+def _get(url: str):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read().decode()
+
+
+def test_http_endpoint_round_trip():
+    obs.counter("serve.export_t.http").inc(7)
+    server = serve_http(port=0, sample_interval_s=0.05, rate_window_s=None)
+    try:
+        status, ctype, body = _get(server.url + "/metrics")
+        assert status == 200
+        assert ctype.startswith("text/plain")
+        assert "version=0.0.4" in ctype
+        assert "serve_export_t_http 7" in body
+        status, ctype, body = _get(server.url + "/snapshot")
+        assert status == 200 and ctype == "application/json"
+        snap = json.loads(body)
+        assert snap["serve.export_t.http"] == 7
+        status, ctype, body = _get(server.url + "/trace")
+        assert status == 200
+        trace = json.loads(body)
+        assert trace["displayTimeUnit"] == "ms"
+        assert isinstance(trace["traceEvents"], list)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(server.url + "/nope")
+        assert ei.value.code == 404
+        # scrapes are themselves counted
+        assert obs.snapshot()["obs.exporter.scrapes"] >= 3
+    finally:
+        server.stop()
+    # after stop() the port no longer answers
+    with pytest.raises(Exception):
+        urllib.request.urlopen(server.url + "/metrics", timeout=0.5)
+
+
+def test_exporter_serves_during_live_harness_run():
+    """Acceptance: a /metrics scrape taken while ServeHarness.run() is
+    mid-flight returns valid Prometheus text carrying serve counters."""
+    ds = _dataset("exp_live")
+    h = ServeHarness(ds, n_ingest=2, n_query=2, pump_batch=32,
+                     records_per_lane=3000, deadline_s=30.0)
+    server = serve_http(port=0, sample_interval_s=0.05,
+                        trace_source=h.tracker.profile_spans)
+    try:
+        h.start()
+        try:
+            time.sleep(0.25)               # scrape mid-run, not after
+            status, ctype, body = _get(server.url + "/metrics")
+        finally:
+            h.stop()
+        assert status == 200 and ctype.startswith("text/plain")
+        assert "# TYPE serve_ingest_acked counter" in body
+        assert "# TYPE serve_queue_wait_s summary" in body
+        assert 'serve_queue_wait_s{quantile="0.99"}' in body
+        rep = h.report()
+        assert rep.torn_reads == 0 and rep.lost_acks == 0
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Deadline admission + SLO settlement
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_by_deadline_on_fixed_schedule():
+    ac = AdmissionController(max_inflight=1, timeout=0.5, deadline_s=0.05)
+    waits_before = ac._queue_wait.count       # registry-shared histogram
+    with ac.admit() as g1:
+        assert g1 and not g1.rejected_deadline
+        # slot held: the next request's queue wait alone blows its
+        # deadline, so it must shed as a *deadline* rejection well
+        # before the 0.5s slot timeout
+        t0 = time.perf_counter()
+        with ac.admit() as g2:
+            waited = time.perf_counter() - t0
+            assert not g2
+            assert g2.rejected_deadline
+            assert 0.04 <= g2.queue_wait_s <= 0.4
+            assert waited < 0.45           # capped at deadline, not timeout
+    assert ac.admitted == 1
+    assert ac.rejected == 1 and ac.rejected_deadline == 1
+    # both waits — grant and time-to-rejection — landed in the histogram
+    assert ac._queue_wait.count - waits_before == 2
+
+
+def test_admission_slot_rejection_not_counted_as_deadline():
+    ac = AdmissionController(max_inflight=1, timeout=0.02, deadline_s=None)
+    with ac.admit():
+        with ac.admit() as g2:
+            assert not g2 and not g2.rejected_deadline
+    assert ac.rejected == 1 and ac.rejected_deadline == 0
+
+
+def test_tracker_settles_attained_missed_rejected():
+    tr = RequestTracker(deadline_s=0.05, profile_every=0)
+    ac = AdmissionController(max_inflight=1, timeout=0.5, deadline_s=0.05)
+
+    fast = tr.begin("query")               # completes inside deadline
+    with ac.admit() as g:
+        assert g
+        with fast.phase("execute"):
+            pass
+        tr.settle(fast)
+    assert fast.attained is True and fast.outcome == "ok"
+
+    slow = tr.begin("query")               # completes past deadline
+    with ac.admit() as g:
+        with slow.phase("execute"):
+            time.sleep(0.08)
+        tr.settle(slow)
+    assert slow.attained is False and slow.outcome == "ok"
+
+    shed = tr.begin("query")               # sheds while the slot is held
+    with ac.admit():
+        with ac.admit() as g:
+            assert not g
+            tr.settle(shed, g)
+    assert shed.outcome == "rejected_deadline" and shed.attained is None
+    assert shed.queue_wait_s == g.queue_wait_s
+
+    assert (tr.attained, tr.missed, tr.rejected_deadline) == (1, 1, 1)
+    assert tr.completed == 2 and tr.offered() == 3
+    assert tr.phase_hist["execute"].count == 2
+
+
+def test_harness_sheds_by_deadline_without_losing_correctness():
+    """Acceptance: a saturating schedule (1 slot, many workers, a
+    deadline far below the scan time) must produce nonzero
+    serve.slo.rejected_deadline while the consistency ledger stays
+    clean, and the report must carry queue-wait + per-phase p99s."""
+    ds = _dataset("exp_sat", rows=4000)
+    h = ServeHarness(ds, n_ingest=2, n_query=4, pump_batch=64,
+                     records_per_lane=3000, max_inflight=1,
+                     deadline_s=0.004, admission_timeout=0.25,
+                     profile_every=4)
+    rep = h.run(duration_s=6.0)
+    d = rep.as_dict()
+    assert d["slo"]["rejected_deadline"] > 0
+    assert d["slo"]["rejected_deadline"] == h.admission.rejected_deadline
+    assert d["torn_reads"] == 0 and d["lost_acks"] == 0
+    assert d["lost_acked_final"] == 0
+    assert not d["query_errors"]
+    # the report carries tail attribution: queue-wait p99 + phase p99s
+    assert d["queue_wait_p99_ms"] is not None
+    assert d["phase_p99_ms"]["execute"] is not None
+    # under saturation the tail may be dominated by queueing itself
+    assert d["slowest_phase_p99"] in ("queue_wait", "pin", "execute",
+                                      "result")
+    assert d["rejection_rate"] > 0
+    # the ledger is closed: every offered request either completed or
+    # was rejected, and both sides agree on the rejection count
+    offered = h.tracker.offered()
+    assert offered == h.tracker.completed + h.admission.rejected
+    assert h.admission.rejected == (h.tracker.rejected_slots
+                                    + h.tracker.rejected_deadline)
+
+
+def test_profile_ring_is_bounded_and_carries_span_trees():
+    ds = _dataset("exp_prof", rows=64)
+    h = ServeHarness(ds, n_ingest=1, n_query=2, pump_batch=32,
+                     records_per_lane=400, deadline_s=30.0,
+                     profile_every=1, profile_ring=4)
+    h.run(duration_s=3.0)
+    profiles = list(h.tracker.profiles)
+    assert 0 < len(profiles) <= 4            # deque(maxlen=4) bound
+    spans = h.tracker.profile_spans()
+    assert spans
+    names = {sp.name for sp in spans}
+    assert "serve.request" in names
+    assert any(n.startswith("serve.phase.") for n in names)
+    roots = [sp for sp in spans if sp.name == "serve.request"]
+    for sp in roots:
+        assert sp.t1 is not None             # closed
+        assert sp.attrs["outcome"] in ("ok", "error", "rejected",
+                                       "rejected_deadline")
+    # profiling ran with global tracing disabled: nothing leaked into
+    # the process-wide trace ring
+    assert obs.events() == []
+
+
+# ---------------------------------------------------------------------------
+# snapshot() race regression
+# ---------------------------------------------------------------------------
+
+def test_snapshot_is_consistent_under_writer_race():
+    """Regression for the snapshot torn-read: count/sum (and min/max)
+    are copied under one lock acquisition, so a histogram fed only 1.0s
+    must always satisfy sum == count exactly, even mid-write."""
+    reg = Registry()
+    c = reg.counter("race.c")
+    hist = reg.histogram("race.h", window=256)
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            c.inc()
+            hist.observe(1.0)
+
+    threads = [threading.Thread(target=writer, daemon=True)
+               for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        last = -1
+        for _ in range(300):
+            snap = reg.typed_snapshot()
+            kind, cv = snap["race.c"]
+            assert kind == "counter" and cv >= last
+            last = cv
+            kind, hs = snap["race.h"]
+            assert kind == "histogram"
+            assert hs["sum"] == float(hs["count"])   # torn pair would differ
+            if hs["count"]:
+                assert hs["min"] == hs["max"] == hs["p50"] == 1.0
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# bench-history regression gate
+# ---------------------------------------------------------------------------
+
+def _report(us: float, extra: dict = None) -> dict:
+    row = {"us_per_call": us, "module": "columnar", "torn_reads": 0}
+    row.update(extra or {})
+    return {"schema_version": 1, "smoke": True, "failures": [],
+            "benches": {"b1": row}}
+
+
+def _tight_baseline(us: float = 10000.0) -> dict:
+    base = history.build_baseline(_report(us))
+    base["benches"]["b1"]["max_ratio"] = 1.2      # tight synthetic band
+    return base
+
+
+def test_history_detects_50pct_regression():
+    base = _tight_baseline(10000.0)
+    rows, failures = history.compare(base, _report(15000.0))
+    assert failures and rows[0]["status"] == "regression"
+    assert rows[0]["ratio"] == pytest.approx(1.5)
+
+
+def test_history_passes_within_band_and_on_improvement():
+    base = _tight_baseline(10000.0)
+    rows, failures = history.compare(base, _report(11000.0))
+    assert not failures and rows[0]["status"] == "ok"
+    rows, failures = history.compare(base, _report(4000.0))
+    assert not failures and rows[0]["status"] == "improved"
+
+
+def test_history_absolute_slack_forgives_tiny_rows():
+    # 20us -> 200us is 10x, far over a 1.2x band — but only +180us,
+    # under the min_delta_us slack, so timer noise on near-zero rows
+    # (the feed micro-benches) never trips the gate
+    base = _tight_baseline(20.0)
+    rows, failures = history.compare(base, _report(200.0))
+    assert not failures and rows[0]["status"] == "ok"
+
+
+def test_history_exact_invariants_and_missing_rows_fail():
+    base = _tight_baseline(10000.0)
+    rows, failures = history.compare(
+        base, _report(10000.0, {"torn_reads": 1}))
+    assert failures and rows[0]["status"] == "exact_mismatch"
+    gone = _report(10000.0)
+    gone["benches"] = {}
+    rows, failures = history.compare(base, gone)
+    assert failures and rows[0]["status"] == "missing"
+    # a brand-new bench is listed but never fails the gate
+    extra = _report(10000.0)
+    extra["benches"]["b2"] = {"us_per_call": 5.0, "module": "serve"}
+    rows, failures = history.compare(base, extra)
+    assert not failures
+    assert {"new"} == {r["status"] for r in rows if r["bench"] == "b2"}
+
+
+def test_history_schema_version_gate():
+    base = _tight_baseline(10000.0)
+    bad = _report(10000.0)
+    bad["schema_version"] = 99
+    rows, failures = history.compare(base, bad)
+    assert failures and not rows
+    rows, failures = history.compare({"schema_version": 99},
+                                     _report(10000.0))
+    assert failures and not rows
+    with pytest.raises(ValueError):
+        history.build_baseline(bad)
+
+
+def test_history_main_exit_codes(tmp_path, capsys):
+    fresh = tmp_path / "fresh.json"
+    baseline = tmp_path / "baseline.json"
+    report = tmp_path / "delta.json"
+    fresh.write_text(json.dumps(_report(10000.0)))
+    # no baseline yet -> unreadable (2)
+    assert history.main(["--check", "--baseline", str(baseline),
+                         "--fresh", str(fresh)]) == 2
+    # seed it -> 0, then the gate passes against itself
+    assert history.main(["--update", "--baseline", str(baseline),
+                         "--fresh", str(fresh)]) == 0
+    assert history.main(["--check", "--baseline", str(baseline),
+                         "--fresh", str(fresh),
+                         "--report", str(report)]) == 0
+    delta = json.loads(report.read_text())
+    assert delta["rows"][0]["status"] == "ok" and not delta["failures"]
+    # tighten the band and regress 50% -> 1, failure recorded in report
+    base = json.loads(baseline.read_text())
+    base["benches"]["b1"]["max_ratio"] = 1.2
+    baseline.write_text(json.dumps(base))
+    fresh.write_text(json.dumps(_report(15000.0)))
+    assert history.main(["--check", "--baseline", str(baseline),
+                         "--fresh", str(fresh),
+                         "--report", str(report)]) == 1
+    delta = json.loads(report.read_text())
+    assert delta["failures"]
+    capsys.readouterr()                      # swallow the delta tables
