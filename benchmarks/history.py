@@ -59,7 +59,7 @@ DEFAULT_FRESH = "bench_smoke.json"
 # --update.
 DEFAULT_MAX_RATIO = 3.0
 MODULE_MAX_RATIO = {"serve": 5.0, "feeds": 4.0, "ingest": 4.0,
-                    "index": 5.0}
+                    "index": 5.0, "mesh": 4.0}
 # Absolute slack: a row under the band never fails on fewer extra
 # microseconds than this (near-zero rows divide noisily — a 20us row
 # tripling is timer noise, not a regression).

@@ -3,9 +3,9 @@
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table3] [--smoke]
                                                [--json out.json]
 
-``--smoke`` drives the seven CI smoke benches (columnar / index /
-residency / ingest / fuzzy / feeds / serve) at reduced sizes with one
-combined exit code —
+``--smoke`` drives the eight CI smoke benches (columnar / index /
+residency / ingest / fuzzy / feeds / serve / mesh) at reduced sizes
+with one combined exit code —
 this is what ``scripts/verify.sh`` and the CI workflow invoke, replacing
 the old per-bench invocations.  Each smoke bench carries its own hard
 assertions (engine equivalence, no silent index/fuzzy fallback, zero
@@ -41,7 +41,7 @@ from repro import obs
 from ._timing import stopwatch
 
 SMOKE_MODULES = ("columnar", "index", "residency", "ingest", "fuzzy",
-                 "feeds", "serve")
+                 "feeds", "serve", "mesh")
 JSON_SCHEMA_VERSION = 1
 
 
@@ -57,8 +57,9 @@ def main() -> None:
     args = p.parse_args()
 
     from . import (columnar_bench, feeds_bench, fuzzy_bench, index_bench,
-                   ingest_bench, residency_bench, serve_bench, step_bench,
-                   table2_storage, table3_queries, table4_inserts)
+                   ingest_bench, mesh_bench, residency_bench, serve_bench,
+                   step_bench, table2_storage, table3_queries,
+                   table4_inserts)
     modules = {
         "table2": table2_storage,
         "table3": table3_queries,
@@ -70,6 +71,7 @@ def main() -> None:
         "ingest": ingest_bench,
         "feeds": feeds_bench,
         "serve": serve_bench,
+        "mesh": mesh_bench,
         "steps": step_bench,
     }
     if args.smoke:

@@ -7,16 +7,17 @@
 #      the gate existed);
 #   2. the full pytest suite (collection regressions — import errors,
 #      missing optional deps — show up here before anything else does);
-#   3. the seven smoke benches via `benchmarks/run.py --smoke`
-#      (columnar / index / residency / ingest / fuzzy / feeds / serve),
-#      whose hard assertions catch: a row-vs-columnar divergence, an
+#   3. the eight smoke benches via `benchmarks/run.py --smoke`
+#      (columnar / index / residency / ingest / fuzzy / feeds / serve /
+#      mesh), whose hard assertions catch: a row-vs-columnar divergence, an
 #      index or fuzzy plan silently falling back to the row engine, a
 #      candidate read regressing onto a python walk (the CSR postings
 #      must beat the legacy secondary-LSM walk), a kernel retrace on
 #      repeated queries, a warm index chain shipping host->device bytes
 #      (the device buffer pool must keep operands resident), an ingest
-#      pipeline divergence, or a torn read / lost acknowledged record
-#      under concurrent mixed ingest+query serving;
+#      pipeline divergence, a torn read / lost acknowledged record
+#      under concurrent mixed ingest+query serving, or the SPMD
+#      partition mesh diverging from (or losing to) the partition loop;
 #   4. the structured bench report (`--json bench_smoke.json`) parses,
 #      carries schema_version 1, contains rows from every smoke module,
 #      the serve rows report nonzero sustained ingest, a p99 query
@@ -91,6 +92,15 @@ for row in res_rows:
     assert row["h2d_warm"] == 0, f"warm query shipped bytes: {row}"
     assert row["retraces_warm"] == 0, f"warm query retraced: {row}"
     assert row["speedup"] >= 3.0, f"warm speedup under 3x: {row}"
+# Mesh rows must prove the SPMD refactor held: one shard_map dispatch
+# answered for all partitions, bit-identically, from resident shards.
+mesh_rows = [r for r in report["benches"].values()
+             if r["module"] == "mesh"]
+assert mesh_rows, "no mesh bench rows in report"
+for row in mesh_rows:
+    assert row["spmd_dispatches"] >= 1, f"no SPMD dispatch: {row}"
+    assert row["h2d_warm"] == 0, f"warm mesh query shipped bytes: {row}"
+    assert row["retraces_warm"] == 0, f"warm mesh query retraced: {row}"
 print(f"verify: bench_smoke.json ok "
       f"({len(report['benches'])} benches, {len(report['metrics'])} metrics)")
 EOF

@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.algebra import Connector, PhysicalOp
 from .. import obs as _obs
+from ..runtime import spmd as SP
 from . import operators as O
 from .batch import ColumnBatch
 
@@ -157,6 +158,17 @@ def _apply_conn(conn: Connector, cparts: List[ColumnBatch], ex: Any,
     if conn.name == "OneToOne":
         return cparts
     if conn.name in ("MToNHashPartition", "MToNHashPartitionMerge"):
+        # on an active partition mesh the repartition lowers to one tiled
+        # all_to_all per column plane (placement- and order-identical to
+        # the host bucketing below); host path covers string/obj schemas
+        # whose dictionary codes are partition-local
+        exg = SP.exchange_batches(cparts, conn.keys, p)
+        if exg is not None:
+            out, moved = exg
+            if conn.name == "MToNHashPartitionMerge" and conn.sort_keys:
+                out = [O.sort_batch(b, conn.sort_keys, False) for b in out]
+            ex.stats.moved(conn.name, moved)
+            return out
         buckets: List[List[ColumnBatch]] = [[] for _ in range(p)]
         moved = 0
         for i, b in enumerate(cparts):
@@ -219,8 +231,14 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
         def run_select():
             cparts = child()
             cparts = _apply_conn(conn, cparts, ex, p)
-            out = [O.select_batch(b, ranges, pred, residual)
-                   for b in cparts]
+            # SPMD: every partition's range mask in one shard_map
+            # dispatch; None entries (empty batch / absent column) and a
+            # None return (no mesh, operand drift) keep the loop path
+            masks = SP.batched_range_masks(cparts, ranges)
+            out = [O.select_batch_with_mask(b, masks[i], pred, residual)
+                   if masks is not None and masks[i] is not None
+                   else O.select_batch(b, ranges, pred, residual)
+                   for i, b in enumerate(cparts)]
             ex.stats.vectorized(k, _total(out))
             return out
         return run_select
@@ -260,10 +278,16 @@ def _compile(op: PhysicalOp, ex: Any, needed: Optional[Set[str]]) -> Node:
             def run_fused_agg():
                 cparts = inner()
                 cparts = _apply_conn(sel_conn, cparts, ex, p)
+                # SPMD: all partitions' filter+reduce as one shard_map
+                # dispatch; per-partition None entries (and a None
+                # return) keep the per-partition kernel path
+                batched = SP.batched_select_aggregate(cparts, ranges, aggs)
                 out, survivors = [], 0
-                for b in cparts:
-                    r = O.fused_select_aggregate(b, ranges, aggs,
-                                                 partial=True)
+                for i, b in enumerate(cparts):
+                    r = batched[i] if batched is not None else None
+                    if r is None:
+                        r = O.fused_select_aggregate(b, ranges, aggs,
+                                                     partial=True)
                     if r is None:
                         sb = O.select_batch(b, ranges,
                                             child_op.attrs.get("pred"),
@@ -602,8 +626,15 @@ def _compile_index_path(op: PhysicalOp, ex: Any,
             out.append(ColumnBatch.from_rows([dict(empty_row)])
                        if aggs is not None else ColumnBatch({}, 0))
 
+        # SPMD: all partitions' fused chains as one stacked shard_map
+        # dispatch over the active mesh (plancache.run_all); a None
+        # return or per-partition None entries keep the loop below
+        spmd_res = fused.run_all(cols) if fused is not None else None
         for i in range(ds.num_partitions):
-            res = fused(i, cols) if fused is not None else None
+            if spmd_res is not None:
+                res = spmd_res[i]      # None: legacy path, same as loop
+            else:
+                res = fused(i, cols) if fused is not None else None
             if res is not None:
                 n_cand += res.n_cand
                 n_found += res.n_found

@@ -21,8 +21,9 @@ from .batch import Column, ColumnBatch, MISSING, build_column
 from .schema import VECTOR_KINDS, decode_scalar, encode_scalar
 
 __all__ = [
-    "EMPTY", "make_range_preds", "select_batch", "aggregate_batch",
-    "fused_select_aggregate", "group_aggregate", "sort_batch",
+    "EMPTY", "make_range_preds", "select_batch", "select_batch_with_mask",
+    "aggregate_batch", "fused_select_aggregate", "group_aggregate",
+    "sort_batch",
     "join_batches", "partition_ids", "concat_gather",
     "candidate_position_mask", "index_post_validate",
 ]
@@ -94,6 +95,21 @@ def select_batch(batch: ColumnBatch, ranges: Dict[str, Tuple[Any, Any]],
                            dtype=bool, count=n)
         return batch.filter(keep)
     out = batch.filter(K.range_mask(preds, n))
+    if residual and pred is not None:
+        rows = out.to_rows()
+        keep = np.fromiter((bool(pred(r)) for r in rows), dtype=bool,
+                           count=len(rows))
+        out = out.filter(keep)
+    return out
+
+
+def select_batch_with_mask(batch: ColumnBatch, mask: np.ndarray,
+                           pred: Optional[Any], residual: bool
+                           ) -> ColumnBatch:
+    """:func:`select_batch`'s tail when the range mask was already
+    computed elsewhere (the SPMD path batches all partitions' masks into
+    one dispatch — ``runtime/spmd.batched_range_masks``)."""
+    out = batch.filter(mask)
     if residual and pred is not None:
         rows = out.to_rows()
         keep = np.fromiter((bool(pred(r)) for r in rows), dtype=bool,
@@ -252,9 +268,30 @@ def aggregate_batch(batch: ColumnBatch, aggs: Dict[str, Tuple[str, str]],
             batch = batch.take(np.zeros(0, dtype=np.int64))
     arrays, meta = _kernel_agg_cols(batch, aggs)
     res = K.fused_filter_aggregate(preds, arrays, n)
+
+    def survivors() -> ColumnBatch:
+        # non-vectorizable columns pay one mask gather, shared across them
+        return batch.filter(K.range_mask(preds, len(batch))) if preds \
+            else batch
+
+    return _finish_aggregate(aggs, meta, res, partial, survivors)
+
+
+def _finish_aggregate(aggs: Dict[str, Tuple[str, str]],
+                      meta: List[Tuple[str, str, str, Column]],
+                      res: Dict[str, Any], partial: bool,
+                      survivors: Any) -> Tuple[Dict[str, Any], int]:
+    """Decode one fused-reduction result into the aggregate row — the
+    single decode shared by the kernel loop path (:func:`aggregate_batch`)
+    and the stacked SPMD path (``runtime/spmd.batched_select_aggregate``),
+    so the two are bit-identical by construction.  ``res`` is the
+    ``fused_filter_aggregate`` dict; ``survivors`` lazily materializes
+    the predicate-filtered batch for non-vectorizable columns (called at
+    most once)."""
     total = res["count"]
     out: Dict[str, Any] = {}
     by_name = {m[0]: (i, m) for i, m in enumerate(meta)}
+    got: Optional[ColumnBatch] = None
     for name, (fn, cname) in aggs.items():
         if fn == "count" and cname == "*":
             out[name] = total
@@ -271,10 +308,9 @@ def aggregate_batch(batch: ColumnBatch, aggs: Dict[str, Tuple[str, str]],
         # non-vectorizable column (obj / exotic combo): decoded python pass,
         # computing only the reduction the agg fn asks for (min/max of
         # non-summable values must not touch sum, like the row engine)
-        if preds:
-            batch = batch.filter(K.range_mask(preds, len(batch)))
-            preds = []
-        vals = batch.to_rows() if cname == "*" else _py_agg_vals(batch, cname)
+        if got is None:
+            got = survivors()
+        vals = got.to_rows() if cname == "*" else _py_agg_vals(got, cname)
         reduce_sum = fn in ("sum", "avg") and vals and cname != "*"
         _finish_agg(out, name, fn, partial, len(vals),
                     sum(vals) if reduce_sum else 0,

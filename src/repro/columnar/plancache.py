@@ -113,25 +113,17 @@ def totals() -> Tuple[int, int]:
 # the fused core
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("total_p2", "live_p2"))
-def _chain_core(tiers, bounds, idx_pad, n_live, preds, aggds,
+def _chain_math(tiers, bounds, idx_pad, n_live, preds, aggds,
                 total_p2, live_p2):
-    """Whole-chain dispatch.  Static shapes: ``total_p2`` (pow2 bucket of
-    the storage concat the CSR positions scatter into) and ``live_p2``
-    (pow2 bucket of the live selection / partition batch).  Everything
-    else — probe slice bounds, tier offsets, live count, range bounds —
-    is a dynamic 0-d operand, so bound changes never retrace.
-
-    Per range field: scatter the in-slice posting positions (sentinel
-    slot ``total_p2`` swallows out-of-slice and padding lanes) into an
-    occurrence count over the storage concat, then gather the >0 bitmap
-    through the newest-wins live selection.  The first field is the
-    chain's own index search (its survivor count is ``n_cand``); the
-    rest AND in as the multi-index conjunction (``n_found``).  Validate
-    ranges AND in as column compares, and the optional aggregate tail
-    reduces survivors without materializing a gather."""
-    _TRACES["n"] += 1
-    _record_retrace()
+    """The chain math, jit-agnostic: traced once per bucket by
+    :func:`_chain_core` (python loop, one partition per dispatch) and
+    once per (mesh, bucket) by ``runtime/spmd._chain_fn`` (vmapped over
+    the stacked partition axis inside ``shard_map``).  Padding a
+    partition into a larger common bucket is exact: extra tier lanes
+    fall outside their ``[a, b)`` slice and scatter into the sentinel,
+    extra live lanes die on the ``n_live`` lane mask, and aggregate
+    sums only ever add exact zeros (sum) or dtype-extreme identities
+    (min/max) for masked lanes."""
     lane = jnp.arange(live_p2, dtype=jnp.int64) < n_live
     field_masks = []
     for field_pos, field_bounds in zip(tiers, bounds):
@@ -161,6 +153,29 @@ def _chain_core(tiers, bounds, idx_pad, n_live, preds, aggds,
         mx = jnp.max(jnp.where(ok, data, _ident(data.dtype, False)))
         per_col.append((s, mn, mx, cnt_c))
     return n_cand, n_found, n_valid, mask, tuple(per_col)
+
+
+@functools.partial(jax.jit, static_argnames=("total_p2", "live_p2"))
+def _chain_core(tiers, bounds, idx_pad, n_live, preds, aggds,
+                total_p2, live_p2):
+    """Whole-chain dispatch.  Static shapes: ``total_p2`` (pow2 bucket of
+    the storage concat the CSR positions scatter into) and ``live_p2``
+    (pow2 bucket of the live selection / partition batch).  Everything
+    else — probe slice bounds, tier offsets, live count, range bounds —
+    is a dynamic 0-d operand, so bound changes never retrace.
+
+    Per range field: scatter the in-slice posting positions (sentinel
+    slot ``total_p2`` swallows out-of-slice and padding lanes) into an
+    occurrence count over the storage concat, then gather the >0 bitmap
+    through the newest-wins live selection.  The first field is the
+    chain's own index search (its survivor count is ``n_cand``); the
+    rest AND in as the multi-index conjunction (``n_found``).  Validate
+    ranges AND in as column compares, and the optional aggregate tail
+    reduces survivors without materializing a gather."""
+    _TRACES["n"] += 1
+    _record_retrace()
+    return _chain_math(tiers, bounds, idx_pad, n_live, preds, aggds,
+                       total_p2, live_p2)
 
 
 # ---------------------------------------------------------------------------
@@ -221,11 +236,15 @@ def compile_chain(ds: Any, *, chain_ops: Tuple[str, ...], search_field: str,
     range_fields = [(search_field, search_bounds[0], search_bounds[1])]
     range_fields += [tuple(e) for e in extra]
 
-    def run(i: int, cols: Optional[Sequence[str]]
-            ) -> Optional[ChainResult]:
+    def _gather(i: int, cols: Optional[Sequence[str]]
+                ) -> Optional[Dict[str, Any]]:
+        """One partition's fused-chain operands, or None when this
+        partition defeats the fused representation and must run the
+        per-operator legacy path.  An ``{"empty": True}`` marker flags a
+        short-circuitable partition (no storage / no live rows) — the
+        loop path declines those to legacy, and ``run_all`` hands them
+        back as per-partition fallbacks for exactly the same reason."""
         from . import operators as O
-        if not plan_cache.enabled:
-            return None
         tiers: List[Tuple[np.ndarray, ...]] = []
         bounds: List[Tuple[Tuple, ...]] = []
         total0 = idx0 = None
@@ -242,7 +261,7 @@ def compile_chain(ds: Any, *, chain_ops: Tuple[str, ...], search_field: str,
             bounds.append(tuple(abs_))
         n_live = int(idx0.shape[0])
         if total0 == 0 or n_live == 0:
-            return None            # legacy short-circuits these for free
+            return {"empty": True}  # legacy short-circuits these for free
         batch = ds.scan_partition_batch(i, cols)
         if len(batch) != n_live:
             return None            # raced a writer between probe and scan
@@ -264,45 +283,19 @@ def compile_chain(ds: Any, *, chain_ops: Tuple[str, ...], search_field: str,
         if any(int(d.shape[0]) != live_p2 for d, _v, _lo, _hi in preds) \
                 or any(int(d.shape[0]) != live_p2 for d, _v in agg_arrays):
             return None
-        key = (chain_ops, total_p2, live_p2,
-               tuple(tuple(int(p.shape[0]) for p in fp) for fp in tiers),
-               tuple(str(d.dtype) for d, _v, _lo, _hi in preds),
-               tuple(str(d.dtype) for d, _v in agg_arrays),
-               aggs is not None)
-        plan_cache.note(key)
+        return {"tiers": tiers, "bounds": bounds, "total_p2": total_p2,
+                "idx_pad": idx_pad, "live_p2": live_p2, "n_live": n_live,
+                "batch": batch, "preds": preds, "agg_arrays": agg_arrays,
+                "agg_meta": agg_meta}
 
-        flat: List[np.ndarray] = []
-        for fp in tiers:
-            flat.extend(fp)
-        flat.append(idx_pad)
-        for d, v, _lo, _hi in preds:
-            flat.extend((d, v))
-        for d, v in agg_arrays:
-            flat.extend((d, v))
-        ops, missed = _pool.fetch(flat)
-        it = iter(ops)
-        dev_tiers = tuple(tuple(next(it) for _ in fp) for fp in tiers)
-        dev_idx = next(it)
-        dev_preds = []
-        for _d, _v, lo, hi in preds:
-            dd, dv = next(it), next(it)
-            blo, bhi = _prep_pred_bounds(_d, lo, hi)
-            dev_preds.append((dd, dv, blo, bhi))
-        dev_aggs = tuple((next(it), next(it)) for _ in agg_arrays)
-        dev_bounds = tuple(
-            tuple((np.asarray(a, np.int64), np.asarray(b, np.int64),
-                   np.asarray(off, np.int64)) for a, b, off in fb)
-            for fb in bounds)
-        with enable_x64():
-            outs = _chain_core(dev_tiers, dev_bounds, dev_idx,
-                               np.asarray(n_live, np.int64),
-                               tuple(dev_preds), dev_aggs,
-                               total_p2=total_p2, live_p2=live_p2)
-            n_cand, n_found, n_valid, mask_d, per_col = jax.device_get(outs)
-        mask_np = np.asarray(mask_d)
-        _record_dispatch("fused_index_chain", h2d=missed, d2h=[mask_np])
-        n_cand, n_found, n_valid = int(n_cand), int(n_found), int(n_valid)
-
+    def _assemble(batch: ColumnBatch, n_live: int, mask_np: np.ndarray,
+                  per_col: Sequence[Tuple], agg_meta: Sequence[Tuple],
+                  n_cand: int, n_found: int, n_valid: int
+                  ) -> ChainResult:
+        """Shared result assembly for the loop and SPMD dispatch paths
+        (``per_col`` scalars arrive as 0-d device results or stacked-row
+        slices; both support ``.item()``)."""
+        from . import operators as O
         if aggs is None:
             got = batch.filter(mask_np[:n_live])
             if residual and pred is not None and len(got):
@@ -347,7 +340,183 @@ def compile_chain(ds: Any, *, chain_ops: Tuple[str, ...], search_field: str,
                                         and cname != "*") else None)
         return ChainResult(None, row, n_cand, n_found, n_valid)
 
+    def run(i: int, cols: Optional[Sequence[str]]
+            ) -> Optional[ChainResult]:
+        if not plan_cache.enabled:
+            return None
+        g = _gather(i, cols)
+        if g is None or g.get("empty"):
+            return None
+        tiers, bounds = g["tiers"], g["bounds"]
+        preds, agg_arrays = g["preds"], g["agg_arrays"]
+        total_p2, live_p2 = g["total_p2"], g["live_p2"]
+        idx_pad, n_live = g["idx_pad"], g["n_live"]
+        key = (chain_ops, total_p2, live_p2,
+               tuple(tuple(int(p.shape[0]) for p in fp) for fp in tiers),
+               tuple(str(d.dtype) for d, _v, _lo, _hi in preds),
+               tuple(str(d.dtype) for d, _v in agg_arrays),
+               aggs is not None, _spmd().mesh_key())
+        plan_cache.note(key)
+
+        flat: List[np.ndarray] = []
+        for fp in tiers:
+            flat.extend(fp)
+        flat.append(idx_pad)
+        for d, v, _lo, _hi in preds:
+            flat.extend((d, v))
+        for d, v in agg_arrays:
+            flat.extend((d, v))
+        ops, missed = _pool.fetch(flat)
+        it = iter(ops)
+        dev_tiers = tuple(tuple(next(it) for _ in fp) for fp in tiers)
+        dev_idx = next(it)
+        dev_preds = []
+        for _d, _v, lo, hi in preds:
+            dd, dv = next(it), next(it)
+            blo, bhi = _prep_pred_bounds(_d, lo, hi)
+            dev_preds.append((dd, dv, blo, bhi))
+        dev_aggs = tuple((next(it), next(it)) for _ in agg_arrays)
+        dev_bounds = tuple(
+            tuple((np.asarray(a, np.int64), np.asarray(b, np.int64),
+                   np.asarray(off, np.int64)) for a, b, off in fb)
+            for fb in bounds)
+        with enable_x64():
+            outs = _chain_core(dev_tiers, dev_bounds, dev_idx,
+                               np.asarray(n_live, np.int64),
+                               tuple(dev_preds), dev_aggs,
+                               total_p2=total_p2, live_p2=live_p2)
+            n_cand, n_found, n_valid, mask_d, per_col = jax.device_get(outs)
+        mask_np = np.asarray(mask_d)
+        _record_dispatch("fused_index_chain", h2d=missed, d2h=[mask_np])
+        return _assemble(g["batch"], n_live, mask_np, per_col,
+                         g["agg_meta"], int(n_cand), int(n_found),
+                         int(n_valid))
+
+    def run_all(cols: Optional[Sequence[str]]
+                ) -> Optional[List[Optional[ChainResult]]]:
+        """All partitions' chains as one stacked ``shard_map`` dispatch
+        over the active partition mesh.  Returns a per-partition result
+        list (None entries: that partition declined and must run the
+        loop/legacy path), or None when the whole query should fall
+        back to the per-partition loop (no mesh, fewer than two
+        stackable partitions, or cross-partition operand drift)."""
+        spmd = _spmd()
+        mesh = spmd.active_mesh()
+        if mesh is None or not plan_cache.enabled:
+            return None
+        P = int(ds.num_partitions)
+        gathered: List[Optional[Dict[str, Any]]] = []
+        entries: List[Tuple[int, Dict[str, Any]]] = []
+        for i in range(P):
+            g = _gather(i, cols)
+            gathered.append(g)
+            if g is not None and not g.get("empty"):
+                entries.append((i, g))
+        if len(entries) < 2:
+            spmd.note_fallback()
+            return None
+        g0 = entries[0][1]
+        n_fields = len(g0["tiers"])
+        pred_sig = tuple(str(d.dtype) for d, _v, _lo, _hi in g0["preds"])
+        agg_sig = tuple(str(d.dtype) for d, _v in g0["agg_arrays"])
+        meta_sig = tuple((m[0], m[1], m[2]) for m in g0["agg_meta"])
+        for _i, g in entries[1:]:
+            if (len(g["tiers"]) != n_fields
+                    or tuple(str(d.dtype) for d, _v, _lo, _hi
+                             in g["preds"]) != pred_sig
+                    or tuple(str(d.dtype)
+                             for d, _v in g["agg_arrays"]) != agg_sig
+                    or tuple((m[0], m[1], m[2])
+                             for m in g["agg_meta"]) != meta_sig):
+                spmd.note_fallback()
+                return None
+        # common buckets: every partition pads into the max pow2 bucket
+        # (exact — see _chain_math) and missing tier slots become
+        # zero-width (0, 0, 0) slices that scatter nothing
+        total_p2 = max(g["total_p2"] for _i, g in entries)
+        live_p2 = max(g["live_p2"] for _i, g in entries)
+        n_tiers = [max(len(g["tiers"][f]) for _i, g in entries)
+                   for f in range(n_fields)]
+        tier_w = [[max((int(g["tiers"][f][t].shape[0])
+                        for _i, g in entries if t < len(g["tiers"][f])),
+                       default=1)
+                   for t in range(n_tiers[f])] for f in range(n_fields)]
+        rows = spmd.rows_for(len(entries), mesh)
+        key = (chain_ops, total_p2, live_p2,
+               tuple(tuple(w for w in tier_w[f]) for f in range(n_fields)),
+               pred_sig, agg_sig, aggs is not None,
+               spmd.mesh_key(mesh), rows, "spmd")
+        plan_cache.note(key)
+
+        sc = spmd.stack_cache
+        st_tiers = []
+        st_bounds = []
+        for f in range(n_fields):
+            fp, fb = [], []
+            for t in range(n_tiers[f]):
+                arrs = [g["tiers"][f][t] if t < len(g["tiers"][f]) else None
+                        for _i, g in entries]
+                dt = next(a.dtype for a in arrs if a is not None)
+                fp.append(sc.stack(arrs, rows, tier_w[f][t], dt))
+                a_v = np.zeros(rows, np.int64)
+                b_v = np.zeros(rows, np.int64)
+                o_v = np.zeros(rows, np.int64)
+                for r, (_i, g) in enumerate(entries):
+                    if t < len(g["bounds"][f]):
+                        a, b, off = g["bounds"][f][t]
+                        a_v[r], b_v[r], o_v[r] = a, b, off
+                fb.append((a_v, b_v, o_v))
+            st_tiers.append(tuple(fp))
+            st_bounds.append(tuple(fb))
+        idx_st = sc.stack([g["idx_pad"] for _i, g in entries], rows,
+                          live_p2, g0["idx_pad"].dtype)
+        n_live_v = np.zeros(rows, np.int64)
+        for r, (_i, g) in enumerate(entries):
+            n_live_v[r] = g["n_live"]
+        st_preds = []
+        for j in range(len(pred_sig)):
+            d0 = g0["preds"][j][0]
+            dd = sc.stack([g["preds"][j][0] for _i, g in entries], rows,
+                          live_p2, d0.dtype)
+            vv = sc.stack([g["preds"][j][1] for _i, g in entries], rows,
+                          live_p2, np.bool_, fill=False)
+            lo_v = np.zeros(rows, d0.dtype)
+            hi_v = np.zeros(rows, d0.dtype)
+            for r, (_i, g) in enumerate(entries):
+                _d, _v, lo, hi = g["preds"][j]
+                blo, bhi = _prep_pred_bounds(_d, lo, hi)
+                lo_v[r], hi_v[r] = blo, bhi
+            st_preds.append((dd, vv, lo_v, hi_v))
+        st_aggs = []
+        for j in range(len(agg_sig)):
+            d0 = g0["agg_arrays"][j][0]
+            dd = sc.stack([g["agg_arrays"][j][0] for _i, g in entries],
+                          rows, live_p2, d0.dtype)
+            vv = sc.stack([g["agg_arrays"][j][1] for _i, g in entries],
+                          rows, live_p2, np.bool_, fill=False)
+            st_aggs.append((dd, vv))
+        n_cand_a, n_found_a, n_valid_a, mask_a, per_col_a = \
+            spmd.run_chain_stack(mesh, tuple(st_tiers), tuple(st_bounds),
+                                 idx_st, n_live_v, tuple(st_preds),
+                                 tuple(st_aggs), total_p2, live_p2,
+                                 len(entries))
+        out: List[Optional[ChainResult]] = [None] * P
+        for r, (i, g) in enumerate(entries):
+            per_col = [tuple(x[r] for x in pc) for pc in per_col_a]
+            out[i] = _assemble(g["batch"], g["n_live"], mask_a[r],
+                               per_col, g["agg_meta"], int(n_cand_a[r]),
+                               int(n_found_a[r]), int(n_valid_a[r]))
+        return out
+
+    run.run_all = run_all
     return run
+
+
+def _spmd():
+    """Lazy handle on the SPMD runtime (import cycle: spmd pulls
+    :func:`_chain_math` out of this module at trace time)."""
+    from ..runtime import spmd
+    return spmd
 
 
 def _prep_pred_bounds(data: np.ndarray, lo: Any, hi: Any

@@ -1,6 +1,7 @@
 """command-r-plus-104b: dense GQA, no-bias layernorm
 [hf:CohereForAI/c4ai-command-r-v01; unverified].  (Cohere's parallel
-attention+FFN block is folded to sequential here; see DESIGN.md §6.)"""
+attention+FFN block is folded to sequential here; see docs/ARCHITECTURE.md
+§Training-stack deviations.)"""
 from .base import ModelConfig
 
 CONFIG = ModelConfig(

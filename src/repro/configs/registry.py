@@ -2,7 +2,8 @@
 
 Every entry is selectable via ``--arch <id>`` in the launchers.  Cell
 applicability (``long_500k`` needs sub-quadratic attention) is centralized in
-``shape_applicable`` and mirrored in DESIGN.md §Arch-applicability.
+``shape_applicable`` and mirrored in docs/ARCHITECTURE.md §Architecture
+applicability.
 """
 
 from __future__ import annotations
@@ -88,7 +89,7 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
         return False, ("pure full-attention arch: 524288-token KV per "
                        "sequence is out of scope per task spec; noted in "
-                       "DESIGN.md §Arch-applicability")
+                       "docs/ARCHITECTURE.md §Architecture applicability")
     return True, ""
 
 

@@ -1,6 +1,6 @@
 """starcoder2-3b: dense GQA(kv=2), RoPE, gelu MLP with bias
 [arXiv:2402.19173; hf].  kv=2 < model-axis 16: the safe sharding rule
-replicates KV heads (DESIGN.md §Arch-applicability)."""
+replicates KV heads (docs/ARCHITECTURE.md §Architecture applicability)."""
 from .base import ModelConfig
 
 CONFIG = ModelConfig(

@@ -9,11 +9,19 @@ resident copy for free.  Because kernel wrappers only account
 ``np.ndarray`` operands as transfer bytes (``obs.record_dispatch``), a
 fully-resident dispatch naturally reports ``h2d_bytes == 0``.
 
-Keying is by ``id(arr)`` guarded with a weak reference: the pow2-padded
-views are already shape- and identity-stable per LSM version
+Keying is by ``(id(arr), placement)`` guarded with a weak reference: the
+pow2-padded views are already shape- and identity-stable per LSM version
 (``Column.padded``, ``FieldPostings.padded_positions``, the partition
 scan cache), so one component column is one pool entry for the
-component's whole lifetime.  Eviction is driven from two sides:
+component's whole lifetime.  ``placement`` is None for the default
+single-device copy or a ``NamedSharding`` for mesh-sharded uploads
+(``runtime/spmd.fetch_sharded`` — stacked partition operands split over
+the partition axis, attributed per shard via ``mesh.shard<k>.h2d_bytes``).
+An array lives under at most one placement at a time: uploading it with
+a *different* placement evicts the other copies first (reshard eviction,
+``buffer_pool.reshard_evictions``), so switching between the loop and a
+mesh — or between meshes — never double-holds device memory.  Eviction
+is otherwise driven from two sides:
 
   * ``core/lsm.py`` calls :func:`release_component` at the two places a
     component's ``retired`` flag flips — immediate retirement at merge,
@@ -39,6 +47,7 @@ import threading
 import weakref
 from typing import Any, Dict, List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
@@ -52,6 +61,7 @@ __all__ = ["DevicePool", "pool", "fetch", "padded", "release_component",
 _HITS = obs.counter("buffer_pool.hits")
 _MISSES = obs.counter("buffer_pool.misses")
 _EVICTIONS = obs.counter("buffer_pool.evictions")
+_RESHARDS = obs.counter("buffer_pool.reshard_evictions")
 _RESIDENT = obs.gauge("buffer_pool.resident_bytes")
 
 
@@ -64,26 +74,37 @@ class DevicePool:
 
     def __init__(self) -> None:
         self._lock = threading.RLock()
-        # id(host) -> (weakref(host), device, nbytes, finalizer)
-        self._entries: Dict[int, Tuple[Any, Any, int, Any]] = {}
+        # (id(host), placement) -> (weakref(host), device, nbytes, finalizer)
+        self._entries: Dict[Tuple[int, Any],
+                            Tuple[Any, Any, int, Any]] = {}
+        # id(host) -> placements currently resident for that id
+        self._by_id: Dict[int, set] = {}
         # (id(host), fill) -> (weakref(host), padded host, finalizer)
         self._pads: Dict[Tuple[int, str], Tuple[Any, np.ndarray, Any]] = {}
         self._resident = 0
 
     # -- residency ----------------------------------------------------------
 
-    def get(self, arr: np.ndarray) -> Tuple[Any, bool]:
-        """Device copy of ``arr`` plus whether it was already resident.
-        Uploads happen under ``enable_x64`` so int64/float64 operands
-        keep their width (matching the jnp-oracle kernel convention)."""
-        key = id(arr)
+    def get(self, arr: np.ndarray, placement: Any = None
+            ) -> Tuple[Any, bool]:
+        """Device copy of ``arr`` under ``placement`` (None: default
+        device; a ``NamedSharding``: mesh-sharded) plus whether it was
+        already resident.  Uploads happen under ``enable_x64`` so
+        int64/float64 operands keep their width (matching the jnp-oracle
+        kernel convention).  Uploading under a new placement evicts the
+        array's copies under any other placement first (reshard
+        eviction) — an operand is resident one way at a time."""
+        key = (id(arr), placement)
         with self._lock:
             e = self._entries.get(key)
             if e is not None and e[0]() is arr:
                 _HITS.inc()
                 return e[1], True
         with enable_x64():
-            dev = jnp.asarray(arr)
+            if placement is None:
+                dev = jnp.asarray(arr)
+            else:
+                dev = jax.device_put(arr, placement)
         nb = int(arr.nbytes)
         with self._lock:
             e = self._entries.get(key)
@@ -92,15 +113,23 @@ class DevicePool:
                     _HITS.inc()
                     return e[1], True
                 self._drop(key, e)         # stale entry under a reused id
+            for other in list(self._by_id.get(id(arr), ())):
+                if other != placement:     # reshard: drop the other copies
+                    oe = self._entries.get((id(arr), other))
+                    if oe is not None:
+                        self._drop((id(arr), other), oe)
+                        _RESHARDS.inc()
             fin = weakref.finalize(arr, self._on_dead, key)
             fin.atexit = False
             self._entries[key] = (weakref.ref(arr), dev, nb, fin)
+            self._by_id.setdefault(id(arr), set()).add(placement)
             self._resident += nb
             _RESIDENT.set(self._resident)
         _MISSES.inc()
         return dev, False
 
-    def fetch(self, arrs: Sequence[Any]) -> Tuple[List[Any], List[Any]]:
+    def fetch(self, arrs: Sequence[Any], placement: Any = None
+              ) -> Tuple[List[Any], List[Any]]:
         """Map operands to device copies.  Returns ``(operands, missed)``
         where ``missed`` lists the host arrays uploaded by this call —
         exactly what the caller should report as ``h2d`` (pool hits ship
@@ -110,7 +139,7 @@ class DevicePool:
         missed: List[Any] = []
         for a in arrs:
             if _poolable(a):
-                dev, hit = self.get(a)
+                dev, hit = self.get(a, placement)
                 out.append(dev)
                 if not hit:
                     missed.append(a)
@@ -222,20 +251,28 @@ class DevicePool:
     # -- internals ----------------------------------------------------------
 
     def _release_exact(self, arr: np.ndarray) -> None:
-        e = self._entries.get(id(arr))
-        if e is not None and (e[0]() is arr or e[0]() is None):
-            self._drop(id(arr), e)
+        for placement in list(self._by_id.get(id(arr), ())):
+            key = (id(arr), placement)
+            e = self._entries.get(key)
+            if e is not None and (e[0]() is arr or e[0]() is None):
+                self._drop(key, e)
 
-    def _drop(self, key: int, e: Tuple[Any, Any, int, Any]) -> None:
+    def _drop(self, key: Tuple[int, Any],
+              e: Tuple[Any, Any, int, Any]) -> None:
         if self._entries.get(key) is not e:
             return
         del self._entries[key]
+        placements = self._by_id.get(key[0])
+        if placements is not None:
+            placements.discard(key[1])
+            if not placements:
+                del self._by_id[key[0]]
         e[3].detach()
         self._resident -= e[2]
         _RESIDENT.set(self._resident)
         _EVICTIONS.inc()
 
-    def _on_dead(self, key: int) -> None:
+    def _on_dead(self, key: Tuple[int, Any]) -> None:
         # host array was garbage-collected: drop the device copy (RLock:
         # safe even if the collection triggered under our own lock)
         with self._lock:
@@ -255,8 +292,9 @@ class DevicePool:
 pool = DevicePool()
 
 
-def fetch(arrs: Sequence[Any]) -> Tuple[List[Any], List[Any]]:
-    return pool.fetch(arrs)
+def fetch(arrs: Sequence[Any], placement: Any = None
+          ) -> Tuple[List[Any], List[Any]]:
+    return pool.fetch(arrs, placement)
 
 
 def padded(arr: np.ndarray, fill: str = "edge") -> np.ndarray:

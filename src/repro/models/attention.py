@@ -2,7 +2,8 @@
 
 The training/prefill path streams over KV blocks with a running
 (max, normalizer, accumulator) triple — the same associative merge state the
-LSM-tiered decode kernel uses per component (DESIGN.md §2).  On TPU the inner
+LSM-tiered decode kernel uses per component (docs/ARCHITECTURE.md §Mesh and
+collectives).  On TPU the inner
 loop is the Pallas flash kernel (kernels/flash_attention.py); this module is
 the XLA path that the dry-run lowers and the kernels' oracle reuses.
 

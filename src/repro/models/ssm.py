@@ -3,7 +3,8 @@
 Training/prefill: causal depthwise conv + selective scan.  The scan is
 h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t;  y_t = C_t . h_t + D * x_t
 — a first-order linear recurrence, associative in (a, b) pairs, which is the
-same algebraic shape as the LSM/logsumexp merges used elsewhere (DESIGN.md §2):
+same algebraic shape as the LSM/logsumexp merges used elsewhere
+(docs/ARCHITECTURE.md §Mesh and collectives):
 partial states combine in any grouping.  We exploit that with a *chunked*
 scan: within a chunk of ``seq_chunk`` steps an associative scan runs in
 parallel (VPU-friendly); across chunks a cheap sequential carry propagates.

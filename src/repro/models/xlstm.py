@@ -5,7 +5,8 @@ The mLSTM recurrence
     C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t,
     h_t = o_t ⊙ (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))
 is another associative first-order recurrence — the same merge algebra as the
-LSM component merge (DESIGN.md §2) — so we evaluate it chunkwise: a parallel
+LSM component merge (docs/ARCHITECTURE.md §Mesh and collectives) — so we
+evaluate it chunkwise: a parallel
 (attention-like) intra-chunk term plus a sequentially carried (C, n, m) state,
 with exp-gating stabilized by the running max ``m`` exactly as flash attention
 stabilizes softmax.

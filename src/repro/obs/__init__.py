@@ -33,151 +33,16 @@ the innermost open span (``kernel_dispatches`` / ``h2d_bytes`` /
 ``d2h_bytes`` span attrs), so an ``exec.*``/``columnar.*`` span carries
 the kernel traffic of exactly the operator that triggered it.
 
-Metric name registry (``metrics.snapshot()`` keys):
-
-  Counters — kernel wrappers (kernels/columnar_ops, kernels/fuzzy_ops):
-    kernel.dispatches           device-bound kernel calls (jitted jnp or
-                                Pallas; host-path fast floors don't count)
-    kernel.h2d_bytes            operand bytes shipped host -> device,
-                                post-padding (scalar bounds excluded)
-    kernel.d2h_bytes            result bytes fetched device -> host,
-                                pre-slicing (padded result shape)
-    kernel.jit_traces           cumulative jit traces of the kernel cores
-                                (mirrors columnar_ops.trace_count())
-    kernel.<name>.dispatches    per-kernel splits of the three above
-    kernel.<name>.h2d_bytes     (<name> is the public wrapper: range_mask,
-    kernel.<name>.d2h_bytes     fused_filter_aggregate,
-                                sorted_intersect_mask, t_occurrence_mask,
-                                edit_distances, set_intersect_counts,
-                                bitset_intersect_counts, and
-                                fused_index_chain — the whole Figure-6
-                                chain as one dispatch per partition,
-                                columnar/plancache)
-
-  Device buffer pool (kernels/device_pool): upload-once residency for
-  pow2-padded columns and postings across queries —
-    buffer_pool.hits            counter: operands found device-resident
-    buffer_pool.misses          counter: first-touch uploads (these are
-                                the only operands record_dispatch counts
-                                as h2d bytes — a warm query reports
-                                h2d_bytes == 0)
-    buffer_pool.evictions       counter: buffers dropped (LSM component
-                                retirement via release_component, or the
-                                host array's weakref finalizer)
-    buffer_pool.resident_bytes  gauge: bytes currently device-resident
-
-  Fused plan cache (columnar/plancache): compiled Figure-6 chains keyed
-  by plan shape (op sequence + pow2 operand buckets + dtypes) —
-    plan_cache.hits             counter: fused dispatches of an
-                                already-compiled plan shape
-    plan_cache.misses           counter: first sighting of a shape (the
-                                dispatch that traces _chain_core)
-    plan_cache.entries          gauge: distinct plan shapes seen
-
-  Counters — LSM storage (core/lsm):
-    lsm.flushes / lsm.merges    completed flush / merge operations
-    lsm.rows_ingested           memtable inserts+deletes accepted
-    lsm.rows_flushed            rows written by flushes
-    lsm.rows_merged             rows written by merges
-    lsm.bytes_flushed           estimated component bytes written by
-    lsm.bytes_merged            flushes / merges (column arrays + keys +
-                                tombstones + string dictionaries)
-    write amplification == (rows_flushed + rows_merged) / rows_ingested;
-    per-index, ``LSMIndex.write_amplification()`` computes it from the
-    index-local stats dict.
-
-  Histograms — LSM storage:
-    lsm.flush_seconds           wall time per flush
-    lsm.merge_seconds           wall time per merge
-    lsm.postings_build_seconds  wall time per postings (re)build
-    lsm.component_rows          rows per created component
-    lsm.component_bytes         estimated bytes per created component
-
-  Gauges — LSM storage:
-    lsm.components              valid components in the index that last
-                                flushed/merged (a freshness sample, not a
-                                cross-index aggregate)
-
-  Snapshot pinning — LSM storage (core/lsm):
-    lsm.pins                    counter: snapshot views pinned
-    lsm.deferred_retires        counter: replaced components whose
-                                physical retirement waited on a pin
-    lsm.pinned_snapshots        gauge: currently-live pinned views
-
-  Feeds (data/feeds):
-    feed.<feed>.records             counter: records stored by the feed
-    feed.<feed>.batch_records       histogram: records per pump cycle
-    feed.joint.<joint>.published    counter: records published to a joint
-    feed.joint.<joint>.dropped      counter: *unconsumed* records evicted
-                                    past the replay window (overflow
-                                    policy "drop"; fully-consumed
-                                    retirements are never counted)
-    feed.joint.<joint>.lag.<sub>    gauge: head - subscriber cursor after
-                                    each consume (records behind)
-    feed.sink.<dataset>.records     counter: records delivered via
-                                    insert_batch
-    feed.sink.<dataset>.batch_records  histogram: insert_batch sizes
-    feed.sink.<dataset>.backlog     gauge: records buffered awaiting a
-                                    full micro-batch (sink lag)
-    per-joint ingest rate: ``FeedJoint.rate()`` (records/sec over the
-    joint's publish lifetime).
-
-  Serving harness (serve/harness):
-    serve.ingest.acked          counter: records acknowledged to storage
-                                (after insert_batch returned)
-    serve.admission.rejected    counter: queries shed by the admission
-                                controller (no slot within timeout)
-    serve.admission.inflight    gauge: admitted queries currently running
-    serve.query.latency_s       histogram: admitted-query wall time,
-                                queue wait excluded (p50/p99 are the
-                                serve_bench report numbers)
-    serve.query.torn_reads      counter: snapshot scans violating the
-                                lane-prefix consistency oracle
-    serve.query.lost_acks       counter: snapshot scans missing records
-                                acked before the pin
-    serve.recoveries            counter: crash_and_recover cycles
-
-  Request tracing + SLOs (serve/harness.RequestTracker; every
-  QueryWorker submission is a request with a monotone trace id and
-  queue-wait / pin / execute / result phases):
-    serve.queue_wait_s          histogram: admission queue wait per
-                                request — *including* time-to-rejection
-                                for shed requests, so rejected load is
-                                visible in the same distribution
-    serve.phase.pin_s           histogram: snapshot-pin phase wall time
-    serve.phase.execute_s       histogram: execute phase wall time
-    serve.phase.result_s        histogram: result/validation phase wall
-                                time (phase p99s feed the ServeReport
-                                tail-latency attribution table)
-    serve.slo.attained          counter: requests completed within the
-                                per-request deadline (queue wait counts)
-    serve.slo.missed            counter: requests completed but over
-                                deadline
-    serve.slo.rejected_deadline counter: requests rejected *because*
-                                their queue wait would have blown the
-                                deadline (deadline-based admission; slot
-                                -timeout rejections stay in
-                                serve.admission.rejected)
-    serve.request.profiled      counter: requests sampled by the 1-in-N
-                                profiler (full span trees retained in
-                                the harness's bounded profile ring)
-
-  Exporter (obs/export; nothing is sampled or served until
-  ``obs.serve_http()`` is called):
-    obs.exporter.scrapes        counter: HTTP requests answered on
-                                /metrics, /snapshot, /trace
-    ``MetricsSampler`` additionally exposes windowed per-second rates of
-    the feed./serve./kernel./buffer_pool. counters via the ``/metrics``
-    ``<family>_rate`` gauges (not registry metrics themselves — they
-    live in the sampler's time-series ring).
+The metric *name* registry lives in ``docs/METRICS.md`` — one table per
+family (kernel.*, mesh.*, buffer_pool.*, plan_cache.*, lsm.*, feed.*,
+serve.*, obs.exporter.*), kept honest by ``tests/test_metrics_doc.py``,
+which fails if a workload emits a metric the doc doesn't list.
 
 Executor-level accounting stays on ``storage/query.ExecStats`` (per-query
-scope): ``kernel_dispatches`` / ``h2d_bytes`` / ``d2h_bytes`` are the
-per-query deltas of the kernel counters above, and
-``fallback_reasons`` maps "OP_KIND: reason" -> occurrences for every
-subplan the columnar engine declined.  ``explain_analyze`` (same module)
-returns the physical plan annotated per operator with wall time, rows,
-connector movement, and this kernel traffic.
+scope): ``kernel_dispatches`` / ``h2d_bytes`` / ``d2h_bytes`` and
+``spmd_dispatches`` / ``spmd_partitions`` are per-query deltas of the
+process counters, and ``fallback_reasons`` maps "OP_KIND: reason" ->
+occurrences for every subplan the columnar engine declined.
 """
 
 from __future__ import annotations

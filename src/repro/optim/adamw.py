@@ -7,7 +7,8 @@ jit they inherit the parameters' (FSDP × TP) shardings — optimizer state is
 node-local secondary indexes: state lives with the data it indexes).
 
 Parameters are stored bf16 at scale; moments are f32 and the update math runs
-in f32 (see DESIGN.md §6 for the deviation note vs f32 master weights).
+in f32 (see docs/ARCHITECTURE.md §Training-stack deviations for the
+deviation note vs f32 master weights).
 """
 
 from __future__ import annotations

@@ -13,7 +13,10 @@ Paper §4.1 lists six Connectors; each has a collective twin on a TPU mesh:
 These helpers are shard_map-level building blocks used where we take explicit
 control of the schedule (gradient reduction, distributed decode merge,
 compressed collectives).  Most model code instead relies on sharding
-constraints + GSPMD, per DESIGN.md §2.
+constraints + GSPMD (docs/ARCHITECTURE.md §Mesh and collectives).  The
+SPMD partition runtime (runtime/spmd.py) drives these for the database's
+Hyracks-style connectors — the connector -> collective mapping table is in
+docs/ARCHITECTURE.md §Connectors.
 """
 
 from __future__ import annotations

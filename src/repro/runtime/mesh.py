@@ -1,6 +1,6 @@
 """Device-mesh construction and axis conventions.
 
-Axis semantics (cf. DESIGN.md §3):
+Axis semantics (cf. docs/ARCHITECTURE.md §Mesh and collectives):
   pod    — data-parallel replica groups across pods (slowest links / DCN)
   data   — FSDP + batch partitioning within a pod
   model  — tensor/expert parallelism (fastest collectives)

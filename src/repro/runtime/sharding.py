@@ -80,7 +80,8 @@ DEFAULT_RULES = ShardingRules((
 
 # Context-parallel overlay for long_500k decode (batch=1): the KV cache is
 # sharded over BOTH batch-free axes; per-shard partial attention merges via
-# logsumexp reductions (the distributed LSM-component merge, DESIGN.md §2).
+# logsumexp reductions (the distributed LSM-component merge —
+# docs/ARCHITECTURE.md §Mesh and collectives).
 LONG_CONTEXT_RULES = DEFAULT_RULES.override(
     kv_seq=("data", "model"),
     act_kv_heads=None,

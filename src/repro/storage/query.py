@@ -29,6 +29,7 @@ rows_fallback.
 
 from __future__ import annotations
 
+import contextlib
 import heapq
 import time
 from dataclasses import dataclass, field
@@ -72,6 +73,11 @@ class ExecStats:
     #                             compiled plan shape (columnar/plancache)
     plan_cache_misses: int = 0  # fused chain plan shapes first seen (and
     #                             trace-compiled) during this query
+    spmd_dispatches: int = 0    # shard_map'ed all-partition dispatches
+    #                             this query made (runtime/spmd; 0 off-mesh)
+    spmd_partitions: int = 0    # partitions those dispatches covered (the
+    #                             python loop would have paid one dispatch
+    #                             + one device_get per partition instead)
 
     def moved(self, conn: str, n: int) -> None:
         self.rows_moved[conn] = self.rows_moved.get(conn, 0) + n
@@ -453,24 +459,30 @@ def _default_catalog(datasets: Dict[str, PartitionedDataset]) -> Catalog:
 
 def _finish_stats(ex: "Executor", traces0: int,
                   kt0: Tuple[int, int, int],
-                  pc0: Tuple[int, int]) -> None:
+                  pc0: Tuple[int, int],
+                  sp0: Tuple[int, int] = (0, 0)) -> None:
     from ..columnar import plancache as _pc
     from ..kernels import columnar_ops as K
+    from ..runtime import spmd as _sp
     kt1 = _obs.kernel_totals()
     pc1 = _pc.totals()
+    sp1 = _sp.dispatch_totals()
     ex.stats.kernel_retraces = K.trace_count() - traces0
     ex.stats.kernel_dispatches = kt1[0] - kt0[0]
     ex.stats.h2d_bytes = kt1[1] - kt0[1]
     ex.stats.d2h_bytes = kt1[2] - kt0[2]
     ex.stats.plan_cache_hits = pc1[0] - pc0[0]
     ex.stats.plan_cache_misses = pc1[1] - pc0[1]
+    ex.stats.spmd_dispatches = sp1[0] - sp0[0]
+    ex.stats.spmd_partitions = sp1[1] - sp0[1]
 
 
 def run_query(plan, datasets: Dict[str, PartitionedDataset],
               catalog: Optional[Catalog] = None,
               config: RewriteConfig = RewriteConfig(),
               vectorize: bool = False,
-              snapshot: bool = False
+              snapshot: bool = False,
+              mesh: Optional[Any] = None
               ) -> Tuple[Rows, "Executor"]:
     """Optimize a LogicalOp plan and execute it.  Returns (rows, executor)
     — the executor carries connector/operator statistics.  With
@@ -478,7 +490,11 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
     With ``snapshot=True`` every dataset that supports ``pin()`` is
     pinned for the duration of the query, so the whole plan executes
     against one consistent LSM state even while concurrent writers are
-    ingesting (snapshot isolation; pins are released on return)."""
+    ingesting (snapshot isolation; pins are released on return).  With
+    ``mesh`` (a jax Mesh with a ``"part"`` axis, or an int device count)
+    the columnar engine's per-partition loops run as single shard_map'ed
+    SPMD dispatches over the partition mesh (``runtime/spmd``); results
+    are bit-identical to the loop, per the differential harness."""
     if catalog is None:
         catalog = _default_catalog(datasets)
     phys = optimize(plan, catalog, config)
@@ -494,16 +510,22 @@ def run_query(plan, datasets: Dict[str, PartitionedDataset],
             else:
                 exec_datasets[n] = ds
     try:
-        ex = Executor(exec_datasets, vectorize=vectorize)
         from ..columnar import plancache as _pc
         from ..kernels import columnar_ops as K
-        traces0 = K.trace_count()
-        kt0 = _obs.kernel_totals()
-        pc0 = _pc.totals()
-        parts = ex.execute_op(phys)
-        _finish_stats(ex, traces0, kt0, pc0)
-        rows = [r for p in parts for r in p]
-        return rows, ex
+        from ..runtime import spmd as _sp
+        ctx = contextlib.nullcontext() if mesh is None else (
+            _sp.use_partition_mesh(mesh) if isinstance(mesh, int)
+            else _sp.use_partition_mesh(mesh=mesh))
+        with ctx:
+            ex = Executor(exec_datasets, vectorize=vectorize)
+            traces0 = K.trace_count()
+            kt0 = _obs.kernel_totals()
+            pc0 = _pc.totals()
+            sp0 = _sp.dispatch_totals()
+            parts = ex.execute_op(phys)
+            _finish_stats(ex, traces0, kt0, pc0, sp0)
+            rows = [r for p in parts for r in p]
+            return rows, ex
     finally:
         for snap in pinned:
             snap.release()
@@ -536,7 +558,8 @@ def _annotate(op: PhysicalOp, analysis: Dict[int, Dict[str, Any]]
 def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
                     catalog: Optional[Catalog] = None,
                     config: RewriteConfig = RewriteConfig(),
-                    vectorize: bool = True) -> Dict[str, Any]:
+                    vectorize: bool = True,
+                    mesh: Optional[Any] = None) -> Dict[str, Any]:
     """EXPLAIN ANALYZE: optimize, execute, and return the physical plan
     annotated per operator with wall time, rows in/out, connector rows
     moved, lowering outcome (columnar / fused / fallback+reason / row),
@@ -557,13 +580,19 @@ def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
     ex._fallback_reasons = {}
     from ..columnar import plancache as _pc
     from ..kernels import columnar_ops as K
+    from ..runtime import spmd as _sp
+    ctx = contextlib.nullcontext() if mesh is None else (
+        _sp.use_partition_mesh(mesh) if isinstance(mesh, int)
+        else _sp.use_partition_mesh(mesh=mesh))
     traces0 = K.trace_count()
     kt0 = _obs.kernel_totals()
     pc0 = _pc.totals()
+    sp0 = _sp.dispatch_totals()
     t0 = time.perf_counter()
-    parts = ex.execute_op(phys)
+    with ctx:
+        parts = ex.execute_op(phys)
     wall = time.perf_counter() - t0
-    _finish_stats(ex, traces0, kt0, pc0)
+    _finish_stats(ex, traces0, kt0, pc0, sp0)
     rows = [r for p in parts for r in p]
     return {
         "rows": rows,
@@ -577,6 +606,8 @@ def explain_analyze(plan, datasets: Dict[str, PartitionedDataset],
             "kernel_retraces": ex.stats.kernel_retraces,
             "plan_cache_hits": ex.stats.plan_cache_hits,
             "plan_cache_misses": ex.stats.plan_cache_misses,
+            "spmd_dispatches": ex.stats.spmd_dispatches,
+            "spmd_partitions": ex.stats.spmd_partitions,
         },
         "stats": ex.stats,
     }

@@ -444,3 +444,71 @@ def test_index_plans_never_silently_fall_back():
         assert ex.stats.fallback_reasons == {}, (spec,
                                                  ex.stats.fallback_reasons)
         assert ex.stats.rows_fuzzy_vectorized > 0, spec
+
+
+# ---------------------------------------------------------------------------
+# mesh axis: the SPMD partition runtime is bit-identical to the loop
+# ---------------------------------------------------------------------------
+
+import jax as _jax  # noqa: E402
+
+_N_DEV = len(_jax.devices())
+
+
+def _assert_mesh_agrees(ds, plan, devs):
+    """Columnar loop mode vs mesh mode: identical rows AND identical
+    fallback accounting (the mesh path may decline work — per-partition
+    None entries — but never change *why* an op fell back)."""
+    rows_c, ex_c = run_query(plan, {"D": ds}, vectorize=True)
+    rows_m, ex_m = run_query(plan, {"D": ds}, vectorize=True, mesh=devs)
+    assert _canon(rows_c) == _canon(rows_m), \
+        f"loop={len(rows_c)} mesh={len(rows_m)}"
+    assert ex_c.stats.fallback_reasons == ex_m.stats.fallback_reasons
+    return ex_m
+
+
+@pytest.mark.parametrize("devs", [
+    1,
+    pytest.param(2, marks=pytest.mark.skipif(
+        _N_DEV < 2, reason="needs >=2 devices (forced-multi-device CI "
+        "leg sets XLA_FLAGS=--xla_force_host_platform_device_count=4)")),
+    pytest.param(4, marks=pytest.mark.skipif(
+        _N_DEV < 4, reason="needs >=4 devices"))])
+def test_differential_mesh_lifecycle_schedules(devs):
+    """Random dataset lifecycles (flush/merge/recover interleaved by
+    _build) queried under an active partition mesh stay bit-identical
+    to the 1-device Python-loop fallback — rows and fallback reasons —
+    and warm mesh queries retrace nothing.  Runs at mesh size 1
+    everywhere (full shard_map machinery on the default single
+    CpuDevice) and at 2/4 under the forced-multi-device CI leg."""
+    rng = random.Random(20260807 * devs + 11)
+    for _case in range(12):
+        ds = _build(rng, rng.randrange(0, 90), rng.choice([2, 3, 4]),
+                    rng.choice([4, 9, 17, 33]), index_kinds=("a", "b"))
+        kind = rng.choice(["btree", "multi", "agg", "group", "topk",
+                           "project"])
+        _assert_mesh_agrees(ds, _relational_plan(rng, kind), devs)
+    # explicit lifecycle interleaving: query checkpoints under the mesh
+    ds = PartitionedDataset(
+        "D", _record_type(), "id", num_partitions=4, flush_threshold=9,
+        merge_policy=TieredMergePolicy(k=2))
+    ds.create_index("a")
+    for step in range(6):
+        for i in range(18):
+            r = {"id": rng.randrange(200), "g": rng.randrange(4)}
+            if rng.random() < 0.9:
+                r["a"] = rng.randrange(-50, 50)
+            ds.insert(r)
+        if step == 2:
+            for part in ds.partitions:
+                part.primary.flush()
+        if step == 3:
+            ds.delete(rng.randrange(200))
+        if step == 4:
+            ds.crash_and_recover()
+        _assert_mesh_agrees(ds, _relational_plan(rng, "agg"), devs)
+    # warm mesh repeat over the settled dataset: zero retraces
+    plan = _relational_plan(random.Random(3), "agg")
+    run_query(plan, {"D": ds}, vectorize=True, mesh=devs)
+    _, ex = run_query(plan, {"D": ds}, vectorize=True, mesh=devs)
+    assert ex.stats.kernel_retraces == 0

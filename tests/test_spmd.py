@@ -1,0 +1,407 @@
+"""Mesh-parallel SPMD partition runtime tests.
+
+The refactor under test (``runtime/spmd.py``): per-partition scans,
+index-chain probes, and local aggregations run as ONE ``shard_map``-ed
+SPMD program over a partition mesh instead of a Python loop over
+partitions.  A 1-device mesh is always constructible (it exercises the
+full stack/shard_map/unstack machinery in the default single-CpuDevice
+environment), so most tests run everywhere; genuinely multi-device
+variants are skipif-guarded on ``len(jax.devices())`` and re-run by the
+forced-multi-device CI leg (``XLA_FLAGS=--xla_force_host_platform_
+device_count=4``, which must be set before jax is imported).
+
+Bit-identity is the contract: mesh-mode rows, fallback reasons, and the
+``fused_filter_aggregate`` result shapes must equal the 1-device Python
+loop exactly — the stacked operands are pow2-padded into common buckets,
+and padding is exact (masked lanes contribute only identity elements;
+see the ``_chain_math`` docstring in ``columnar/plancache.py``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.columnar import operators as O
+from repro.columnar import plancache as PC
+from repro.columnar.batch import Column, ColumnBatch
+from repro.core import algebra as A
+from repro.core.lsm import TieredMergePolicy
+from repro.kernels import device_pool as DP
+from repro.runtime import spmd
+from repro.storage.dataset import PartitionedDataset
+from repro.storage.query import run_query
+
+N_DEV = len(jax.devices())
+multi2 = pytest.mark.skipif(N_DEV < 2, reason="needs >=2 devices "
+                            "(XLA_FLAGS=--xla_force_host_platform_"
+                            "device_count=4)")
+multi4 = pytest.mark.skipif(N_DEV < 4, reason="needs >=4 devices")
+
+
+@pytest.fixture(autouse=True)
+def _fused_enabled():
+    PC.set_enabled(True)
+    yield
+
+
+def _rec_type():
+    from repro.core import adm
+    return adm.RecordType("SpmdT", (
+        adm.Field("id", adm.INT64),
+        adm.Field("a", adm.INT64),
+        adm.Field("b", adm.INT64),
+        adm.Field("x", adm.DOUBLE),
+    ), open=True)
+
+
+def _dataset(n=160, parts=4, threshold=24):
+    ds = PartitionedDataset("D", _rec_type(), "id", num_partitions=parts,
+                            flush_threshold=threshold,
+                            merge_policy=TieredMergePolicy(k=99))
+    ds.create_index("a")
+    for i in range(n):
+        ds.insert({"id": i, "a": i % 50, "b": (i * 7) % 40,
+                   "x": float(i) * 0.5,
+                   "o": f"s{i}" if i % 3 else i})
+    return ds
+
+
+def _chain_plan(lo=10, hi=29):
+    return A.select(A.scan("D"), pred=lambda r: lo <= r["a"] <= hi,
+                    fields=["a"], ranges={"a": (lo, hi)},
+                    ranges_exact=True)
+
+
+def _chain_agg_plan():
+    return A.aggregate(_chain_plan(),
+                       {"c": ("count", "*"), "s": ("sum", "a"),
+                        "mn": ("min", "b"), "av": ("avg", "x")})
+
+
+def _scan_select_plan():
+    # range over the un-indexed DOUBLE column: no index chain, so the
+    # mesh path is batched_range_masks under SELECT
+    return A.select(A.scan("D"), pred=lambda r: 10.0 <= r["x"] <= 60.0,
+                    fields=["a", "x"], ranges={"x": (10.0, 60.0)},
+                    ranges_exact=True)
+
+
+def _scan_agg_plan():
+    return A.aggregate(_scan_select_plan(),
+                       {"c": ("count", "*"), "s": ("sum", "a"),
+                        "m": ("min", "x")})
+
+
+def _norm(rows):
+    return sorted(repr(sorted(r.items(), key=lambda kv: kv[0]))
+                  for r in rows)
+
+
+def _loop_vs_mesh(ds, plan, devs):
+    rows_l, ex_l = run_query(plan, {"D": ds}, vectorize=True)
+    rows_m, ex_m = run_query(plan, {"D": ds}, vectorize=True, mesh=devs)
+    assert _norm(rows_l) == _norm(rows_m)
+    assert ex_l.stats.fallback_reasons == ex_m.stats.fallback_reasons
+    return ex_l, ex_m
+
+
+# ---------------------------------------------------------------------------
+# the stacked SPMD dispatch: bit-identity + residency + dispatch counts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk_plan", [_chain_plan, _chain_agg_plan,
+                                     _scan_select_plan, _scan_agg_plan])
+def test_mesh_matches_loop_bit_for_bit(mk_plan):
+    ds = _dataset()
+    _, ex_m = _loop_vs_mesh(ds, mk_plan(), 1)
+    assert ex_m.stats.spmd_dispatches >= 1
+    assert ex_m.stats.spmd_partitions == 4
+    # warm repeat: everything device-resident, nothing retraced
+    _, ex_w = run_query(mk_plan(), {"D": ds}, vectorize=True, mesh=1)
+    assert ex_w.stats.h2d_bytes == 0
+    assert ex_w.stats.kernel_retraces == 0
+
+
+def test_one_dispatch_replaces_the_partition_loop():
+    """P per-partition chain dispatches collapse into one SPMD dispatch
+    covering all P partitions (the point of the refactor)."""
+    ds = _dataset(parts=4)
+    d0, p0 = spmd.dispatch_totals()
+    _, ex = run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=1)
+    d1, p1 = spmd.dispatch_totals()
+    assert (d1 - d0, p1 - p0) == (1, 4)
+    assert ex.stats.spmd_dispatches == 1
+    assert ex.stats.spmd_partitions == 4
+
+
+def test_loop_fallback_without_mesh():
+    """No active mesh -> the Python loop path runs, zero SPMD stats."""
+    ds = _dataset()
+    _, ex = run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    assert ex.stats.spmd_dispatches == 0
+    assert ex.stats.spmd_partitions == 0
+
+
+def test_fallback_when_too_few_stackable_partitions():
+    """A single-partition dataset can't amortize a stack: run_all
+    declines (mesh.spmd_fallbacks) and the per-partition path answers,
+    still correctly."""
+    ds = _dataset(n=60, parts=1)
+    rows_l, _ = run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    f0 = obs.counter("mesh.spmd_fallbacks").value
+    rows_m, ex = run_query(_chain_plan(), {"D": ds}, vectorize=True,
+                           mesh=1)
+    assert _norm(rows_l) == _norm(rows_m)
+    assert ex.stats.spmd_dispatches == 0
+    assert obs.counter("mesh.spmd_fallbacks").value > f0
+
+
+# ---------------------------------------------------------------------------
+# stack cache: warm mesh queries reuse the stacked operand identity
+# ---------------------------------------------------------------------------
+
+def test_stack_cache_returns_identical_object_for_same_inputs():
+    sc = spmd.StackCache()
+    a = np.arange(5, dtype=np.int64)
+    b = np.arange(3, dtype=np.int64)
+    s1 = sc.stack([a, b], rows=2, width=8, dtype=np.int64)
+    s2 = sc.stack([a, b], rows=2, width=8, dtype=np.int64)
+    assert s1 is s2                          # identity => pool hit later
+    assert s1.shape == (2, 8)
+    assert np.array_equal(s1[0, :5], a) and np.array_equal(s1[1, :3], b)
+    assert (s1[0, 5:] == 0).all() and (s1[1, 3:] == 0).all()
+    # different geometry or fill is a different entry
+    s3 = sc.stack([a, b], rows=2, width=16, dtype=np.int64)
+    assert s3 is not s1
+    s4 = sc.stack([a, b], rows=2, width=8, dtype=np.int64, fill=-1)
+    assert s4 is not s1 and (s4[0, 5:] == -1).all()
+    # None slots stack as all-fill rows
+    s5 = sc.stack([a, None], rows=2, width=8, dtype=np.int64)
+    assert (s5[1] == 0).all()
+
+
+def test_stack_cache_entry_dies_with_its_inputs():
+    sc = spmd.StackCache()
+    a = np.arange(4, dtype=np.int64)
+    sc.stack([a], rows=1, width=4, dtype=np.int64)
+    assert sc.entry_count() == 1
+    del a
+    import gc
+    gc.collect()
+    assert sc.entry_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# plan cache: mesh identity is part of the plan key
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_keys_split_on_mesh():
+    ds = _dataset()
+    PC.plan_cache.clear()
+    run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    e0 = PC.plan_cache.entry_count()
+    assert e0 > 0
+    # same plan on a 1-device mesh: new key (stacked geometry differs)
+    run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=1)
+    e1 = PC.plan_cache.entry_count()
+    assert e1 > e0
+    # repeat either mode: no new entries
+    run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=1)
+    assert PC.plan_cache.entry_count() == e1
+
+
+# ---------------------------------------------------------------------------
+# device pool: sharded placement + reshard eviction
+# ---------------------------------------------------------------------------
+
+def test_pool_reshard_evicts_other_placement():
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    arr = np.arange(16, dtype=np.int64).reshape(4, 4)
+    DP.pool.release(arr)
+    dev0, hit = DP.pool.get(arr)
+    assert not hit
+    _, hit = DP.pool.get(arr)
+    assert hit
+    mesh = spmd.partition_mesh(1)
+    sh = NamedSharding(mesh, PS(spmd.PART_AXIS))
+    r0 = obs.counter("buffer_pool.reshard_evictions").value
+    dev1, hit = DP.pool.get(arr, sh)
+    assert not hit                        # new placement uploads
+    assert obs.counter("buffer_pool.reshard_evictions").value == r0 + 1
+    # the default-placement copy is gone; sharded copy is resident
+    _, hit = DP.pool.get(arr, sh)
+    assert hit
+    assert np.array_equal(np.asarray(dev1), arr)
+    DP.pool.release(arr)
+
+
+def test_warm_mesh_query_ships_zero_bytes():
+    """Stack cache identity + per-device pool => a warm mesh query
+    uploads nothing and unstacks straight from resident shards."""
+    ds = _dataset()
+    run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=1)
+    _, ex = run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=1)
+    assert ex.stats.h2d_bytes == 0
+    assert ex.stats.kernel_retraces == 0
+    assert ex.stats.plan_cache_hits >= 1
+    assert ex.stats.plan_cache_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# collective merges vs numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,merge,red", [
+    ("sum", spmd.psum_merge, np.sum),
+    ("min", spmd.pmin_merge, np.min),
+    ("max", spmd.pmax_merge, np.max)])
+def test_collective_merge_matches_numpy(op, merge, red):
+    rng = np.random.default_rng(11)
+    parts = [rng.normal(size=(7,)) for _ in range(max(N_DEV, 1))]
+    with spmd.use_partition_mesh(max(N_DEV, 1)):
+        got = merge(parts)
+    assert np.array_equal(np.asarray(got), red(parts, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# hash-repartition exchange (all_to_all) vs the host bucketing oracle
+# ---------------------------------------------------------------------------
+
+def _host_buckets(cparts, keys, p):
+    buckets = [[] for _ in range(p)]
+    for i, b in enumerate(cparts):
+        if not len(b):
+            continue
+        ids = O.partition_ids(b, keys, p)
+        for j in range(p):
+            sel = ids == j
+            if sel.any():
+                buckets[j].append(b.filter(sel))
+    return [ColumnBatch.concat(bs) if bs else ColumnBatch({}, 0)
+            for bs in buckets]
+
+
+def _num_batch(rng, n):
+    return ColumnBatch({
+        "k": Column("i64", rng.integers(0, 100, n).astype(np.int64),
+                    np.ones(n, bool), None),
+        "v": Column("f64", rng.normal(size=n),
+                    rng.random(n) < 0.9, None),
+    }, n)
+
+
+@multi2
+def test_exchange_matches_host_bucketing():
+    rng = np.random.default_rng(7)
+    p = min(N_DEV, 4)
+    sizes = [17, 0, 33, 9][:p]
+    cparts = [_num_batch(rng, n) for n in sizes]
+    host = _host_buckets(cparts, ("k",), p)
+    with spmd.use_partition_mesh(p):
+        got = spmd.exchange_batches(cparts, ("k",), p)
+    assert got is not None
+    out, moved = got
+    assert moved == sum(
+        int((O.partition_ids(b, ("k",), p) != i).sum())
+        for i, b in enumerate(cparts) if len(b))
+    for j in range(p):
+        assert len(out[j]) == len(host[j])
+        for nm in ("k", "v"):
+            a, b = out[j].columns[nm], host[j].columns[nm]
+            n = len(out[j])
+            assert np.array_equal(a.data[:n], b.data[:n])
+            assert np.array_equal(a.valid[:n], b.valid[:n])
+
+
+@multi2
+def test_exchange_declines_string_schemas():
+    """Dictionary codes are partition-local, so string columns cannot be
+    exchanged by code plane — the host path must answer."""
+    rng = np.random.default_rng(5)
+    p = min(N_DEV, 4)
+
+    def mk(n):
+        from repro.columnar.batch import build_column
+        b = _num_batch(rng, n)
+        vals = [f"s{int(v) % 3}" for v in b.columns["k"].data[:n]]
+        b.columns["s"] = build_column(vals, "str")
+        return b
+    cparts = [mk(8) for _ in range(p)]
+    with spmd.use_partition_mesh(p):
+        assert spmd.exchange_batches(cparts, ("k",), p) is None
+
+
+# ---------------------------------------------------------------------------
+# genuinely multi-device: the full query path on 2 and 4 shards
+# ---------------------------------------------------------------------------
+
+@multi2
+@pytest.mark.parametrize("mk_plan", [_chain_plan, _chain_agg_plan,
+                                     _scan_agg_plan])
+def test_two_device_mesh_matches_loop(mk_plan):
+    ds = _dataset(parts=4)
+    _, ex_m = _loop_vs_mesh(ds, mk_plan(), 2)
+    assert ex_m.stats.spmd_dispatches >= 1
+    _, ex_w = run_query(mk_plan(), {"D": ds}, vectorize=True, mesh=2)
+    assert ex_w.stats.h2d_bytes == 0
+    assert ex_w.stats.kernel_retraces == 0
+
+
+@multi4
+def test_four_device_mesh_matches_loop_and_attributes_shards():
+    ds = _dataset(parts=4)
+    DP.pool.clear()
+    h0 = [obs.counter(f"mesh.shard{k}.h2d_bytes").value for k in range(4)]
+    _, ex_m = _loop_vs_mesh(ds, _chain_agg_plan(), 4)
+    assert ex_m.stats.spmd_dispatches >= 1
+    h1 = [obs.counter(f"mesh.shard{k}.h2d_bytes").value for k in range(4)]
+    # sharded uploads were attributed to every shard, evenly
+    deltas = [b - a for a, b in zip(h0, h1)]
+    assert all(d > 0 for d in deltas)
+    assert len(set(deltas)) == 1
+    _, ex_w = run_query(_chain_agg_plan(), {"D": ds}, vectorize=True,
+                        mesh=4)
+    assert ex_w.stats.h2d_bytes == 0
+    assert ex_w.stats.kernel_retraces == 0
+
+
+@multi2
+def test_mesh_switch_reshards_cleanly():
+    """Loop -> 2-mesh -> loop: each switch reshards (no double
+    residency) and stays bit-identical."""
+    ds = _dataset(parts=4)
+    rows0, _ = run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    rows1, _ = run_query(_chain_plan(), {"D": ds}, vectorize=True, mesh=2)
+    rows2, _ = run_query(_chain_plan(), {"D": ds}, vectorize=True)
+    assert _norm(rows0) == _norm(rows1) == _norm(rows2)
+
+
+# ---------------------------------------------------------------------------
+# mesh plumbing
+# ---------------------------------------------------------------------------
+
+def test_mesh_context_and_key():
+    assert spmd.active_mesh() is None
+    assert spmd.mesh_key() is None
+    with spmd.use_partition_mesh(1):
+        m = spmd.active_mesh()
+        assert m is not None and spmd.mesh_size() == 1
+        key = spmd.mesh_key()
+        assert key is not None and key[0] == spmd.PART_AXIS
+        with spmd.use_partition_mesh(1):
+            assert spmd.mesh_key() == key
+        assert spmd.active_mesh() is m
+    assert spmd.active_mesh() is None
+    with pytest.raises(ValueError):
+        spmd.partition_mesh(0)
+    with pytest.raises(ValueError):
+        spmd.partition_mesh(N_DEV + 1)
+
+
+def test_rows_for_rounds_up_to_mesh_multiple():
+    m = spmd.partition_mesh(1)
+    assert spmd.rows_for(1, m) == 1
+    assert spmd.rows_for(3, m) == 3
